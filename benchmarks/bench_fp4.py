@@ -1,0 +1,22 @@
+"""Paper Figure 5 / Figure 12 (scaled): FP4 (e2m1) quantized validation
+loss for PTQ / QAT / LOTION on the scaled LM."""
+
+from __future__ import annotations
+
+from .bench_lm_quant import train_one
+from .common import emit
+
+
+def main():
+    results = {}
+    for method, lam in (("ptq", 0.0), ("qat", 0.0), ("lotion", 1000.0)):
+        fp32, rtn, rr = train_one(method, "fp4", lam)
+        results[method] = min(rtn, rr)
+        emit(f"fig5_lm_fp4_{method}", 0.0,
+             f"fp32={fp32:.4f};rtn={rtn:.4f};rr={rr:.4f}")
+    emit("fig5_lotion_competitive_fp4", 0.0,
+         f"holds={results['lotion'] <= results['ptq'] + 0.02}")
+
+
+if __name__ == "__main__":
+    main()

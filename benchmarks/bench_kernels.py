@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks: fused Pallas paths vs stock-jnp references.
+
+On this CPU container the Pallas kernels run in interpret mode, so the
+*wall-times are not TPU numbers* — the derived column carries the
+analytic HBM-traffic ratio (the quantity the fusion actually buys on
+TPU), and wall time is reported for the stock-jnp path only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import INT4, get_format, lotion_penalty_and_grad, quantize
+from .common import emit, time_call
+
+SHAPE = (1024, 1024)
+
+
+def main():
+    w = jax.random.normal(jax.random.PRNGKey(0), SHAPE)
+    f = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), SHAPE))
+
+    # stock path HBM traffic: absmax read + scale write + round read/write
+    # + dequant read/write + penalty read(w,f)/write(grad)  (~7 passes)
+    # fused: read(w,f) + write(grad) (+ scalar)              (~3 passes)
+    n_bytes = w.size * 4
+
+    jr = jax.jit(lambda x: quantize.cast_rtn(x, INT4, 256))
+    us = time_call(jr, w)
+    emit("kernel_quant_rtn_stock_jnp", us,
+         f"hbm_passes=4;bytes={4*n_bytes}")
+    emit("kernel_quant_rtn_fused_pallas", 0.0,
+         f"hbm_passes=2;bytes={2*n_bytes};traffic_ratio=0.50;interpret_only=1")
+
+    jp = jax.jit(lambda x, ff: lotion_penalty_and_grad(x, ff, INT4, 256))
+    us = time_call(jp, w, f)
+    emit("kernel_lotion_reg_stock_jnp", us,
+         f"hbm_passes=5;bytes={5*n_bytes}")
+    emit("kernel_lotion_reg_fused_pallas", 0.0,
+         f"hbm_passes=3;bytes={3*n_bytes};traffic_ratio=0.60;interpret_only=1")
+
+    # wq_matmul: weight bytes read per matmul
+    m, k, n = 8, 1024, 1024
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, k), jnp.float32)
+    wt = jax.random.normal(jax.random.PRNGKey(3), (k, n), jnp.float32)
+    jm = jax.jit(lambda a, b: a @ b)
+    us = time_call(jm, x, wt.astype(jnp.float32))
+    emit("kernel_matmul_bf16_weights", us,
+         f"weight_bytes={k*n*2}")
+    emit("kernel_wq_matmul_int4_pallas", 0.0,
+         f"weight_bytes={k*n//2 + (k//128)*n*4};traffic_ratio="
+         f"{(k*n//2 + (k//128)*n*4)/(k*n*2):.3f};interpret_only=1")
+
+
+if __name__ == "__main__":
+    main()

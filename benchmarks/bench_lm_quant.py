@@ -1,0 +1,76 @@
+"""Paper Tables 1/2 + Figures 9/11 (scaled): LM pretraining under PTQ /
+QAT / RAT / LOTION, quantized validation CE at INT4 and INT8.
+
+The paper's 150M/300M runs are scaled to a CPU-size model (the full-size
+configs are exercised by the dry-run); the comparison structure — same
+token budget, same LR, per-method quantized eval with RTN and RR —
+mirrors the paper exactly.  Expected (paper): LOTION <= QAT < PTQ at
+INT4; all methods close at INT8.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig, QuantPolicy
+from repro.data import DataPipeline, lm_batch, markov_ce_floor, permutation_table
+from repro.models.lm import LMConfig, lm_init
+from repro.optim import adamw, cosine_with_warmup
+from repro.train import (TrainConfig, init_state, make_eval_fn,
+                         make_train_step, run_loop)
+from .common import emit, time_call
+
+CFG = LMConfig(name="bench-lm", n_layers=4, d_model=128, n_heads=4,
+               n_kv_heads=2, d_ff=256, vocab=256, head_dim=32,
+               dtype=jnp.float32, remat=False)
+STEPS = 250
+BATCH, SEQ = 16, 64
+# tiny-model policy: the default min_size would exclude everything
+POLICY = QuantPolicy(min_size=256)
+
+
+def train_one(method: str, fmt: str, lam: float = 0.0, seed: int = 0):
+    qcfg = QuantConfig(method=method, fmt_name=fmt, lam=lam, policy=POLICY)
+    tcfg = TrainConfig(quant=qcfg, seed=seed)
+    opt = adamw(cosine_with_warmup(3e-3, 20, STEPS), weight_decay=0.0)
+    params = lm_init(jax.random.PRNGKey(seed), CFG)
+    state = init_state(params, opt)
+    step = make_train_step(CFG, tcfg, opt)
+    perm = permutation_table(0, CFG.vocab)
+    pipe = DataPipeline(lambda s: lm_batch(0, s, BATCH, SEQ, CFG.vocab, perm),
+                        prefetch=0)
+    out = run_loop(step, state, pipe, STEPS, log_every=0)
+    state = out["state"]
+
+    ev = make_eval_fn(CFG, qcfg)
+    val = lm_batch(99, 10_000, 64, SEQ, CFG.vocab, perm)
+    fp32 = float(ev(state["params"], val, "fp32"))
+    rtn = float(ev(state["params"], val, "rtn"))
+    rr = float(ev(state["params"], val, "rr", jax.random.PRNGKey(5)))
+    return fp32, rtn, rr
+
+
+def main(fast: bool = False):
+    floor = markov_ce_floor(CFG.vocab, 0.2)
+    methods = {
+        "int4": [("ptq", 0.0), ("qat", 0.0), ("rat", 0.0), ("lotion", 10000.0)],
+        "int8": [("ptq", 0.0), ("qat", 0.0), ("lotion", 10000.0)],
+    }
+    if fast:
+        methods = {"int4": [("ptq", 0.0), ("lotion", 10000.0)]}
+    results = {}
+    for fmt, ms in methods.items():
+        for method, lam in ms:
+            fp32, rtn, rr = train_one(method, fmt, lam)
+            results[(fmt, method)] = (rtn, rr)
+            emit(f"table1_lm_{fmt}_{method}", 0.0,
+                 f"fp32={fp32:.4f};rtn={rtn:.4f};rr={rr:.4f};floor={floor:.4f}")
+    if ("int4", "lotion") in results and ("int4", "ptq") in results:
+        lot = min(results[("int4", "lotion")])
+        ptq = min(results[("int4", "ptq")])
+        emit("table1_lotion_beats_ptq_int4", 0.0, f"holds={lot < ptq}")
+
+
+if __name__ == "__main__":
+    main()

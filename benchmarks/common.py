@@ -1,0 +1,23 @@
+"""Shared harness utilities for the paper-reproduction benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, n_warmup: int = 1, n_iter: int = 5):
+    """us per call after warmup (jit-compatible)."""
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n_iter * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

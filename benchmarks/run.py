@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure + kernel microbenches.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline terms come from the
+dry-run artifacts (launch/dryrun.py --out) — see benchmarks/roofline_table.py
+for the aggregation used in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from . import (bench_fp4, bench_kernels, bench_lm_quant, bench_quadratic,
+                   bench_twolayer)
+
+    benches = {
+        "kernels": bench_kernels.main,
+        "quadratic": bench_quadratic.main,
+        "twolayer": bench_twolayer.main,
+        "lm_quant": (lambda: bench_lm_quant.main(fast=args.fast)),
+        "fp4": bench_fp4.main,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness going
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}", file=sys.stderr)
+            print(f"{name}_failed,0,error={type(e).__name__}")
+        print(f"bench_{name}_total,{(time.time()-t0)*1e6:.0f},wall")
+
+
+if __name__ == "__main__":
+    main()

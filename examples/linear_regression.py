@@ -1,0 +1,29 @@
+"""The paper's §4.1 synthetic experiment as a runnable script: SGD on the
+power-law quadratic, all four methods, INT4 quantized loss (Figure 2).
+
+    PYTHONPATH=src python examples/linear_regression.py [--d 2000]
+"""
+
+import argparse
+
+from benchmarks import bench_quadratic
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d", type=int, default=None,
+                    help="problem dim (default: benchmark setting)")
+    args = ap.parse_args()
+    if args.d:
+        bench_quadratic.D = args.d
+    res = bench_quadratic.run()
+    print(f"{'method':8s} {'RTN':>10s} {'E[RR]':>10s} {'fp32':>10s}")
+    for m, (rtn, err, fp32, lr) in res.items():
+        print(f"{m:8s} {rtn:10.5f} {err:10.5f} {fp32:10.5f}  (lr={lr})")
+    best = min(res, key=lambda m: min(res[m][0], res[m][1]))
+    print(f"# best quantized: {best} "
+          f"(paper Fig.2: LOTION < PTQ < RAT < QAT)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: train a small LM with LOTION vs QAT and compare the INT4
+quantized validation loss (the paper's headline metric, Figure 1).
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 300]
+"""
+
+import argparse
+
+import jax
+
+from repro.core import QuantConfig, QuantPolicy
+from repro.data import DataPipeline, lm_batch, markov_ce_floor, permutation_table
+from repro.models.lm import LMConfig, lm_init
+from repro.optim import adamw, cosine_with_warmup
+from repro.train import TrainConfig, init_state, make_eval_fn, make_train_step, run_loop
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--fmt", default="int4")
+    ap.add_argument("--lam", type=float, default=30.0)
+    args = ap.parse_args()
+
+    cfg = LMConfig(name="quickstart", n_layers=4, d_model=128, n_heads=4,
+                   n_kv_heads=2, d_ff=256, vocab=256, head_dim=32,
+                   dtype=jnp.float32, remat=False)
+    policy = QuantPolicy(min_size=256)
+    perm = permutation_table(0, cfg.vocab)
+    batch_fn = lambda s: lm_batch(0, s, 16, 64, cfg.vocab, perm)
+    val = lm_batch(99, 10_000, 64, 64, cfg.vocab, perm)
+    floor = markov_ce_floor(cfg.vocab, 0.2)
+
+    print(f"# data entropy floor: {floor:.4f} nats/token")
+    for method, lam in [("lotion", args.lam), ("qat", 0.0), ("ptq", 0.0)]:
+        qcfg = QuantConfig(method=method, fmt_name=args.fmt, lam=lam,
+                           policy=policy)
+        opt = adamw(cosine_with_warmup(3e-3, 20, args.steps))
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        state = init_state(params, opt)
+        step = make_train_step(cfg, TrainConfig(quant=qcfg), opt)
+        pipe = DataPipeline(batch_fn, prefetch=0)
+        out = run_loop(step, state, pipe, args.steps, log_every=100)
+        state = out["state"]
+        ev = make_eval_fn(cfg, qcfg)
+        print(f"{method:7s} fp32={float(ev(state['params'], val, 'fp32')):.4f} "
+              f"{args.fmt}-rtn={float(ev(state['params'], val, 'rtn')):.4f} "
+              f"{args.fmt}-rr={float(ev(state['params'], val, 'rr', jax.random.PRNGKey(1))):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end training driver: LOTION (or any baseline) on any assigned
+architecture, with checkpoint/restart, quantized eval, telemetry.
+
+Demo (CPU container, reduced smoke config):
+    PYTHONPATH=src python examples/train_lm.py --arch gemma2-2b --smoke \
+        --steps 200 --method lotion --lam 1000
+
+Production shape (full config; run on a real TPU slice via launch/dryrun
+mesh settings):
+    PYTHONPATH=src python examples/train_lm.py --arch gemma2-2b \
+        --steps 10000 --batch 256 --seq 4096
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config, get_smoke_config
+from repro.core import QuantConfig, QuantPolicy
+from repro.data import DataPipeline, lm_batch, permutation_table
+from repro.models.lm import lm_init, param_count
+from repro.optim import adamw, cosine_with_warmup
+from repro.train import TrainConfig, init_state, make_eval_fn, make_train_step, run_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU demo)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--method", default="lotion",
+                    choices=["fp32", "ptq", "qat", "rat", "lotion"])
+    ap.add_argument("--fmt", default="int4")
+    ap.add_argument("--lam", type=float, default=1000.0)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    qcfg = QuantConfig(method=args.method, fmt_name=args.fmt, lam=args.lam,
+                       policy=QuantPolicy(min_size=256 if args.smoke else 1024))
+    tcfg = TrainConfig(quant=qcfg)
+    opt = adamw(cosine_with_warmup(args.lr, max(args.steps // 20, 5), args.steps),
+                weight_decay=0.0)
+
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    print(f"# {cfg.name}: {param_count(params):,} params, method={args.method}")
+    state = init_state(params, opt)
+
+    start = 0
+    if args.resume and args.ckpt_dir and ckpt.latest_step(args.ckpt_dir):
+        state, start = ckpt.load(args.ckpt_dir, state)
+        print(f"# resumed from step {start}")
+
+    perm = permutation_table(0, cfg.vocab)
+    pipe = DataPipeline(
+        lambda s: lm_batch(0, s, args.batch, args.seq, cfg.vocab, perm,
+                           n_codebooks=cfg.n_codebooks),
+        start_step=start)
+
+    step = make_train_step(cfg, tcfg, opt)
+    ev = make_eval_fn(cfg, qcfg)
+    val = lm_batch(99, 10**6, args.batch, args.seq, cfg.vocab, perm,
+                   n_codebooks=cfg.n_codebooks)
+
+    def eval_hook(st):
+        rtn = float(ev(st["params"], val, "rtn"))
+        print(f"  [eval] step {int(st['step'])} {args.fmt}-rtn CE = {rtn:.4f}")
+        return rtn
+
+    hooks = {}
+    if args.ckpt_dir and args.ckpt_every:
+        hooks = dict(ckpt_every=args.ckpt_every,
+                     ckpt_hook=lambda st: ckpt.save(
+                         args.ckpt_dir, int(st["step"]), st))
+
+    out = run_loop(step, state, pipe, args.steps,
+                   eval_every=max(args.steps // 4, 1), eval_hook=eval_hook,
+                   log_every=50, **hooks)
+    state = out["state"]
+    print(f"# final: fp32={float(ev(state['params'], val, 'fp32')):.4f} "
+          f"rtn={float(ev(state['params'], val, 'rtn')):.4f} "
+          f"rr={float(ev(state['params'], val, 'rr', jax.random.PRNGKey(1))):.4f}")
+
+
+if __name__ == "__main__":
+    main()

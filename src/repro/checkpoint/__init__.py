@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing with elastic resharding."""
+
+from .io import latest_step, load, save
+
+__all__ = ["save", "load", "latest_step"]

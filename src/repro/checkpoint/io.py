@@ -1,0 +1,121 @@
+"""Dependency-free fault-tolerant checkpointing.
+
+Design (scaled-down from a multi-host production layout, same invariants):
+
+* one ``.npz`` payload per checkpoint step holding every leaf, keyed by its
+  pytree path (in production: one payload per host shard — the manifest
+  format already records global shapes so the layout generalizes);
+* a JSON *manifest* with step, leaf paths/shapes/dtypes and a crc32 per
+  leaf — written LAST and atomically (tmp + rename), so a half-written
+  checkpoint is never visible: restore only trusts directories whose
+  manifest exists and verifies;
+* rotation keeps the newest K checkpoints (never deleting the one being
+  written);
+* **elastic resharding on load**: leaves are restored as host arrays and
+  re-placed with any target sharding (different mesh shape / device count
+  than at save time) via ``load(..., shardings=...)``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import zlib
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+PAYLOAD = "arrays.npz"
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _paths_and_leaves(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    """Atomically write checkpoint for ``step``; returns its directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    items, _ = _paths_and_leaves(tree)
+    arrays = {k: np.asarray(v) for k, v in items}
+    np.savez(os.path.join(tmp, PAYLOAD), **arrays)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype),
+                       "crc32": zlib.crc32(np.ascontiguousarray(a).tobytes())}
+                   for k, a in arrays.items()},
+    }
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, final)      # atomic publish
+    _rotate(ckpt_dir, keep)
+    return final
+
+
+def _rotate(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if _STEP_RE.match(d))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, MANIFEST)):
+            best = max(best or 0, int(m.group(1)))
+    return best
+
+
+def load(ckpt_dir: str, like, step: Optional[int] = None,
+         shardings=None, verify: bool = True):
+    """Restore the pytree structured like ``like``.
+
+    ``shardings`` (a pytree of jax.sharding.Sharding matching ``like``, or
+    a single sharding) re-places every leaf — this is the elastic-restart
+    path: the saved topology does not constrain the restore topology.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, MANIFEST)) as f:
+        manifest = json.load(f)
+    payload = np.load(os.path.join(d, PAYLOAD))
+
+    items, treedef = _paths_and_leaves(like)
+    leaves = []
+    for key, ref in items:
+        if key not in manifest["leaves"]:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        a = payload[key]
+        meta = manifest["leaves"][key]
+        if verify and zlib.crc32(np.ascontiguousarray(a).tobytes()) != meta["crc32"]:
+            raise IOError(f"crc mismatch for {key!r} — corrupt checkpoint")
+        if tuple(a.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch for {key!r}: "
+                             f"{a.shape} vs {np.shape(ref)}")
+        leaves.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, step

@@ -1,0 +1,65 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the FULL published config (used only by
+the dry-run via ShapeDtypeStructs — never allocated on CPU).
+``get_smoke_config(arch_id)`` returns the reduced same-family config used
+by the CPU smoke tests.  ``SHAPES`` defines the assigned input-shape grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.models.lm import LMConfig
+
+ARCHS = [
+    "zamba2_2p7b",
+    "dbrx_132b",
+    "moonshot_v1_16b_a3b",
+    "musicgen_medium",
+    "rwkv6_1p6b",
+    "gemma2_2b",
+    "codeqwen1p5_7b",
+    "granite_3_2b",
+    "gemma3_12b",
+    "llama3p2_vision_11b",
+]
+
+# assigned (shape_id -> (seq_len, global_batch, kind))
+SHAPES = {
+    "train_4k":    dict(seq_len=4_096,   global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32_768,  global_batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq_len=32_768,  global_batch=128, kind="decode"),
+    "long_500k":   dict(seq_len=524_288, global_batch=1,   kind="decode"),
+}
+
+
+def _norm(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "p")
+
+
+def get_config(arch_id: str) -> LMConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(arch_id)}")
+    return mod.config()
+
+
+def get_smoke_config(arch_id: str) -> LMConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(arch_id)}")
+    return mod.smoke_config()
+
+
+def cells(include_skipped: bool = False) -> List[tuple]:
+    """All assigned (arch, shape) cells, excluding long_500k for pure
+    full-attention archs (see DESIGN.md §Arch-applicability)."""
+    out = []
+    for a in ARCHS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            if s == "long_500k" and not cfg.sub_quadratic:
+                if include_skipped:
+                    out.append((a, s, "SKIP"))
+                continue
+            out.append((a, s))
+    return out

@@ -1,0 +1,32 @@
+"""LOTION core: quantization formats, randomized rounding, STE baselines,
+and the smoothed-loss regularizer (the paper's primary contribution)."""
+
+from .formats import FP4_E2M1, INT2, INT4, INT8, CodebookFormat, IntFormat, get_format
+from .lotion import (
+    fisher_from_grads,
+    lotion_penalty,
+    lotion_penalty_and_grad,
+    quadratic_smoothed,
+    smoothed_loss_mc,
+)
+from .modes import QuantConfig, cast_params, forward_params, penalty
+from .policy import QuantPolicy
+from .quantize import (
+    block_scales,
+    cast_rr,
+    cast_rtn,
+    rr_neighbors,
+    rr_variance,
+    scales_like,
+)
+from .ste import fake_quant_rr, fake_quant_rtn
+
+__all__ = [
+    "CodebookFormat", "IntFormat", "INT2", "INT4", "INT8", "FP4_E2M1",
+    "get_format", "QuantConfig", "QuantPolicy",
+    "cast_rtn", "cast_rr", "rr_variance", "rr_neighbors", "block_scales",
+    "scales_like", "fake_quant_rtn", "fake_quant_rr",
+    "lotion_penalty", "lotion_penalty_and_grad", "smoothed_loss_mc",
+    "quadratic_smoothed", "fisher_from_grads",
+    "forward_params", "penalty", "cast_params",
+]

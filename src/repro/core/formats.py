@@ -1,0 +1,171 @@
+"""Quantization format definitions.
+
+Two families, unified behind one interface:
+
+* ``IntFormat``   — symmetric signed integer grids (INT8, INT4, ...) with the
+  fine-grained shared-scale absmax scheme of LLM.int8() / DeepSeek-V3
+  (paper §2.1).  Codes are the uniform lattice ``{-(2^{n-1}-1), ..., 2^{n-1}-1}``.
+* ``CodebookFormat`` — non-uniform codebooks (FP4 e2m1, NF4-style) scaled so
+  that absmax(w) maps onto the largest code (paper §4.3.3).
+
+Both expose the primitives the rest of the library needs:
+
+* ``scale(absmax)``            — per-block scale from the block absmax.
+* ``neighbors(w, s)``          — the two adjacent representable values
+  ``(lo, hi)`` bracketing ``w`` (``lo == hi`` when ``w`` is representable).
+  All rounding schemes (RTN / RR) and the LOTION variance term
+  ``Var[eps] = (hi - w)(w - lo)`` derive from this single primitive, which
+  is what lets INT-n and FP4 share one code path.
+* ``rtn(w, s)``                — round-to-nearest cast.
+
+Scales are kept in high precision (paper keeps FP16 scales; we use fp32 on
+CPU/TPU master weights and note the dtype in the config).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class IntFormat:
+    """Symmetric signed INT-n with shared absmax scale per block."""
+
+    bits: int
+    name: str = ""
+
+    def __post_init__(self):
+        if not self.name:
+            object.__setattr__(self, "name", f"int{self.bits}")
+
+    @property
+    def qmax(self) -> int:
+        """Largest integer code: 2^{n-1} - 1 (symmetric; no -2^{n-1})."""
+        return 2 ** (self.bits - 1) - 1
+
+    def scale(self, absmax: Array) -> Array:
+        """s_B = max|w| / (2^{n-1}-1).  Guarded against all-zero blocks."""
+        return jnp.where(absmax > 0, absmax / self.qmax, jnp.ones_like(absmax))
+
+    def neighbors(self, w: Array, s: Array) -> Tuple[Array, Array]:
+        """Adjacent representable values (lo, hi) around w.
+
+        By construction |w| <= qmax * s inside the block that defined s, so
+        floor/ceil never leave the representable range — the paper's
+        "no explicit clipping step is required".  We clip z into
+        [-qmax, qmax] BEFORE floor/ceil: (a) robustness when w comes from
+        outside the defining block (stale scales in EF compression), and
+        (b) the block-absmax element lands at z = ±qmax exactly instead of
+        ±(qmax ± 1ulp) — keeping the knife-edge subgradient at grid points
+        deterministic (see tests/test_kernels.py note on Clarke
+        subgradients).
+        """
+        z = jnp.clip(w / s, -self.qmax, self.qmax)
+        return jnp.floor(z) * s, jnp.ceil(z) * s
+
+    def rtn(self, w: Array, s: Array) -> Array:
+        """Round-to-nearest cast: s * round(w / s) (banker's rounding,
+        matching jnp.rint / the paper's ⌊·⌉)."""
+        z = jnp.clip(jnp.rint(w / s), -self.qmax, self.qmax)
+        return z * s
+
+    def quantize_codes(self, w: Array, s: Array) -> Array:
+        """Integer codes (for storage / packed serving)."""
+        return jnp.clip(jnp.rint(w / s), -self.qmax, self.qmax).astype(jnp.int8)
+
+    def dequantize(self, codes: Array, s: Array) -> Array:
+        return codes.astype(s.dtype) * s
+
+
+# --- FP4 (e2m1) ---------------------------------------------------------
+#
+# The positive e2m1 magnitudes.  With absmax scaling we map max|w| -> 6*s,
+# i.e. scale(absmax) = absmax / 6.  The full signed codebook is the union
+# of +codes and -codes (0 shared), sorted ascending.
+_E2M1_POS = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float64)
+_E2M1_FULL = np.unique(np.concatenate([-_E2M1_POS, _E2M1_POS]))  # 15 values
+
+
+@dataclasses.dataclass(frozen=True)
+class CodebookFormat:
+    """Non-uniform codebook format with shared absmax scale per block.
+
+    ``codes`` must be sorted ascending and contain 0; the scale maps
+    absmax(w) onto ``codes[-1]``.
+    """
+
+    name: str
+    codes: tuple  # sorted ascending, python floats
+
+    @property
+    def code_array(self) -> np.ndarray:
+        return np.asarray(self.codes, dtype=np.float64)
+
+    @property
+    def qmax(self) -> float:
+        return float(self.codes[-1])
+
+    def scale(self, absmax: Array) -> Array:
+        return jnp.where(absmax > 0, absmax / self.qmax, jnp.ones_like(absmax))
+
+    def neighbors(self, w: Array, s: Array) -> Tuple[Array, Array]:
+        """Bracketing codebook values via searchsorted on the scaled value."""
+        codes = jnp.asarray(self.code_array, dtype=w.dtype)
+        z = jnp.clip(w / s, codes[0], codes[-1])
+        # idx of first code >= z  (z in [codes[0], codes[-1]] after clip)
+        hi_idx = jnp.searchsorted(codes, z, side="left")
+        hi_idx = jnp.clip(hi_idx, 0, codes.shape[0] - 1)
+        hi = codes[hi_idx]
+        lo_idx = jnp.where(hi > z, jnp.maximum(hi_idx - 1, 0), hi_idx)
+        lo = codes[lo_idx]
+        return lo * s, hi * s
+
+    def rtn(self, w: Array, s: Array) -> Array:
+        lo, hi = self.neighbors(w, s)
+        d_lo = jnp.abs(w - lo)
+        d_hi = jnp.abs(hi - w)
+        return jnp.where(d_lo <= d_hi, lo, hi)
+
+    def quantize_codes(self, w: Array, s: Array) -> Array:
+        """Codebook indices (uint8) of the RTN cast."""
+        codes = jnp.asarray(self.code_array, dtype=w.dtype)
+        q = self.rtn(w, s) / s
+        return jnp.argmin(jnp.abs(q[..., None] - codes), axis=-1).astype(jnp.uint8)
+
+    def dequantize(self, idx: Array, s: Array) -> Array:
+        codes = jnp.asarray(self.code_array, dtype=s.dtype)
+        return codes[idx] * s
+
+
+INT8 = IntFormat(bits=8)
+INT4 = IntFormat(bits=4)
+INT2 = IntFormat(bits=2)
+FP4_E2M1 = CodebookFormat(name="fp4_e2m1", codes=tuple(_E2M1_FULL.tolist()))
+
+FORMATS = {
+    "int8": INT8,
+    "int4": INT4,
+    "int2": INT2,
+    "fp4": FP4_E2M1,
+    "fp4_e2m1": FP4_E2M1,
+}
+
+
+def get_format(name: str):
+    try:
+        return FORMATS[name.lower()]
+    except KeyError:
+        raise ValueError(f"unknown quantization format {name!r}; have {sorted(FORMATS)}")
+
+
+def bits_of(fmt) -> float:
+    """Storage bits per element (for serving-memory accounting)."""
+    if isinstance(fmt, IntFormat):
+        return float(fmt.bits)
+    return float(np.ceil(np.log2(len(fmt.codes))))

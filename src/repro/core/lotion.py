@@ -1,0 +1,150 @@
+"""LOTION: the smoothed quantized-training objective (paper §3).
+
+Exact objects
+-------------
+* :func:`smoothed_loss_mc`       — Monte-Carlo estimate of
+  ``E_{q~RR(w)}[L(q)]`` (the definitional smoothed loss; used in tests and
+  tiny synthetic experiments).
+* :func:`quadratic_smoothed`     — closed form for quadratic losses
+  (Eq. 1): ``L(w) + 1/2 tr(H Sigma_eps)``.
+
+Working objective (Eq. 3)
+-------------------------
+* :func:`lotion_penalty`         — the Gauss-Newton / empirical-Fisher
+  ridge ``1/2 * sum_i f_i * (hi_i - w_i)(w_i - lo_i)``, differentiable
+  a.e. with the closed-form gradient ``1/2 * f_i * (lo_i + hi_i - 2 w_i)``
+  inside each quantization cell.  ``f`` (the Fisher diagonal) is always
+  stop-gradded, matching the paper; gradient flow through the shared scale
+  is configurable (default off — see DESIGN.md).
+
+The per-tensor penalty used in the train loop is ``lambda * penalty``
+(paper §4.3 weights the regularizer by a scalar hyperparameter).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize
+from .formats import IntFormat
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# Working objective: Eq. 3 penalty
+# --------------------------------------------------------------------------
+
+def lotion_penalty(
+    w: Array,
+    fisher: Array,
+    fmt,
+    block_size: int = -1,
+    differentiate_scale: bool = False,
+) -> Array:
+    """``1/2 sum_i fisher_i * Var[eps_i]`` with ``Var[eps] = (hi-w)(w-lo)``.
+
+    The bracketing codes (lo/s, hi/s) are piecewise-constant in ``w`` and
+    are stop-gradded; within a cell the penalty is a smooth quadratic whose
+    gradient is ``1/2 fisher (lo + hi - 2w)`` — the a.e. derivative the
+    paper optimizes.  With ``differentiate_scale=True`` the shared scale
+    ``s(w) = absmax(w)/qmax`` additionally carries its (subgradient)
+    dependence on the block max.
+    """
+    fisher = jax.lax.stop_gradient(fisher)
+    if block_size == -1:
+        # per-matrix scale, reshape-free: sharded weights stay sharded
+        # (flattening forces a full all-gather at scale — §Perf log).
+        blocked, f_blocked = w, fisher
+        absmax = quantize._absmax_pertensor(w)
+        unblock = lambda x: x
+    else:
+        blocked, shape, n_pad = quantize._block_view(w, block_size)
+        f_blocked, _, _ = quantize._block_view(fisher, block_size)
+        absmax = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True)
+
+    s = fmt.scale(absmax)
+    if not differentiate_scale:
+        s = jax.lax.stop_gradient(s)
+
+    w_const = jax.lax.stop_gradient(blocked)
+    s_const = jax.lax.stop_gradient(s)
+    lo_f, hi_f = fmt.neighbors(w_const, s_const)
+    # piecewise-constant codes; re-attach (possibly differentiable) scale
+    lo = jax.lax.stop_gradient(lo_f / s_const) * s
+    hi = jax.lax.stop_gradient(hi_f / s_const) * s
+
+    var = (hi - blocked) * (blocked - lo)
+    return 0.5 * jnp.sum(f_blocked * var)
+
+
+def lotion_penalty_and_grad(
+    w: Array,
+    fisher: Array,
+    fmt,
+    block_size: int = -1,
+) -> Tuple[Array, Array]:
+    """Closed-form (value, grad) of :func:`lotion_penalty` with
+    stop-gradded scale — the math the fused Pallas kernel implements.
+
+    grad_i = 1/2 * fisher_i * (lo_i + hi_i - 2 w_i)
+    """
+    fisher = jax.lax.stop_gradient(fisher)
+    lo, hi = quantize.rr_neighbors(w, fmt, block_size)
+    var = (hi - w) * (w - lo)
+    value = 0.5 * jnp.sum(fisher * var)
+    grad = 0.5 * fisher * (lo + hi - 2.0 * w)
+    return value, grad
+
+
+# --------------------------------------------------------------------------
+# Definitional smoothed loss + quadratic closed form (tests / synthetic)
+# --------------------------------------------------------------------------
+
+def smoothed_loss_mc(
+    loss_fn: Callable[[Array], Array],
+    w: Array,
+    fmt,
+    key: jax.Array,
+    n_samples: int = 64,
+    block_size: int = -1,
+) -> Array:
+    """Monte-Carlo ``E_{q~RR(w)}[L(q)]`` (vmapped over rounding draws)."""
+    keys = jax.random.split(key, n_samples)
+
+    def one(k):
+        return loss_fn(quantize.cast_rr(w, fmt, k, block_size))
+
+    return jnp.mean(jax.vmap(one)(keys))
+
+
+def quadratic_smoothed(w: Array, w_star: Array, H: Array, fmt, block_size: int = -1) -> Array:
+    """Closed form Eq. 1 for L(w) = 1/2 (w-w*)^T H (w-w*):
+
+    ``L_smooth(w) = L(w) + 1/2 tr(H Sigma_eps)`` with the diagonal RR
+    covariance ``Sigma_eps = diag((hi-w)(w-lo))``.
+    """
+    d = w - w_star
+    base = 0.5 * d @ (H @ d)
+    var = quantize.rr_variance(w, fmt, block_size)
+    return base + 0.5 * jnp.sum(jnp.diag(H) * var)
+
+
+# --------------------------------------------------------------------------
+# Fisher diagonal (empirical Fisher = Adam second moment)
+# --------------------------------------------------------------------------
+
+def fisher_from_grads(grads, decay: float, state=None):
+    """One EMA step of the empirical-Fisher diagonal: F <- decay*F + (1-decay)*g^2.
+
+    In the train loop we reuse AdamW's nu directly (paper §4.3: "use the
+    empirical Fisher approximation as we would with Adam"); this helper
+    exists for optimizers without a second moment (e.g. SGD in the
+    synthetic experiments).
+    """
+    if state is None:
+        state = jax.tree.map(jnp.zeros_like, grads)
+    return jax.tree.map(lambda f, g: decay * f + (1.0 - decay) * g * g, state, grads)

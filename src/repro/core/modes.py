@@ -1,0 +1,117 @@
+"""Training-mode strategies: FP32/PTQ, QAT, RAT, LOTION.
+
+One ``QuantConfig`` drives the whole stack:
+
+* ``forward_params``  — the parameter transform applied before the model
+  forward (identity for fp32/ptq/lotion; STE fake-quant for qat/rat).
+* ``penalty``         — the loss-side term (zero except LOTION's
+  ``lambda * 1/2 sum f (hi-w)(w-lo)``).
+* ``cast_params``     — eval-time quantization of a checkpoint (RTN or RR),
+  used for the paper's "quantized validation loss" metric and the serving
+  packer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import lotion, quantize, ste
+from .formats import get_format
+from .policy import QuantPolicy
+
+METHODS = ("fp32", "ptq", "qat", "rat", "lotion")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    method: str = "fp32"
+    fmt_name: str = "int4"
+    block_size: int = -1          # -1 = per-tensor (paper's LLM setting)
+    lam: float = 0.0              # LOTION lambda (paper sweeps 3e3..1e5)
+    differentiate_scale: bool = False
+    use_kernel: bool = False      # fused Pallas penalty kernel
+    policy: QuantPolicy = dataclasses.field(default_factory=QuantPolicy)
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"method {self.method!r} not in {METHODS}")
+
+    @property
+    def fmt(self):
+        return get_format(self.fmt_name)
+
+    @property
+    def is_noop(self) -> bool:
+        return self.method in ("fp32", "ptq")
+
+
+def forward_params(cfg: QuantConfig, params, key: Optional[jax.Array] = None):
+    """Parameter transform applied inside the loss (differentiable)."""
+    if cfg.is_noop or cfg.method == "lotion":
+        return params
+    fmt, bs = cfg.fmt, cfg.block_size
+    if cfg.method == "qat":
+        return cfg.policy.map_eligible(
+            lambda p, x: ste.fake_quant_rtn(x, fmt, bs), params
+        )
+    if cfg.method == "rat":
+        if key is None:
+            raise ValueError("RAT needs a PRNG key per step")
+        counter = [0]
+
+        def _fq(path, x):
+            counter[0] += 1
+            return ste.fake_quant_rr(x, fmt, jax.random.fold_in(key, counter[0]), bs)
+
+        return cfg.policy.map_eligible(_fq, params)
+    raise AssertionError(cfg.method)
+
+
+def penalty(cfg: QuantConfig, params, fisher) -> jnp.ndarray:
+    """LOTION regularizer summed over eligible params, scaled by lambda."""
+    if cfg.method != "lotion" or cfg.lam == 0.0:
+        return jnp.zeros((), dtype=jnp.float32)
+    fmt, bs = cfg.fmt, cfg.block_size
+
+    if cfg.use_kernel:
+        from repro.kernels.lotion_reg import ops as reg_ops
+
+        def _pen(path, x, f):
+            return reg_ops.lotion_penalty_fused(x, f, cfg.fmt_name, bs)
+    else:
+        def _pen(path, x, f):
+            return lotion.lotion_penalty(
+                x, f, fmt, bs, differentiate_scale=cfg.differentiate_scale
+            )
+
+    total = jnp.zeros((), dtype=jnp.float32)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    flat_f = jax.tree_util.tree_flatten(fisher)[0]
+    for i, (path, x) in enumerate(flat):
+        if cfg.policy.eligible(path, x):
+            total = total + _pen(path, x, flat_f[i]).astype(jnp.float32)
+    return cfg.lam * total
+
+
+def cast_params(params, fmt, policy: QuantPolicy, block_size: int = -1,
+                mode: str = "rtn", key: Optional[jax.Array] = None):
+    """Eval/serve-time cast of eligible params (RTN or RR)."""
+    if mode == "rtn":
+        return policy.map_eligible(
+            lambda p, x: quantize.cast_rtn(x, fmt, block_size), params
+        )
+    if mode == "rr":
+        if key is None:
+            raise ValueError("RR cast needs a key")
+        counter = [0]
+
+        def _rr(path, x):
+            counter[0] += 1
+            return quantize.cast_rr(x, fmt, jax.random.fold_in(key, counter[0]), block_size)
+
+        return policy.map_eligible(_rr, params)
+    raise ValueError(f"mode {mode!r} not in ('rtn', 'rr')")

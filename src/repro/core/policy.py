@@ -1,0 +1,90 @@
+"""Quantization policy: which parameters are quantization-eligible.
+
+The paper quantizes weight matrices (weight-only quantization).  We encode
+that as a rule over (path, array): quantize real matmul weights (ndim >= 2),
+skip norms / biases / scalar gates / SSM dynamics parameters, and make
+embedding-table quantization opt-in.  The same policy object drives QAT/RAT
+fake-quant, the LOTION penalty, quantized eval, and the serving packer — so
+every consumer agrees on the eligible set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Optional
+
+import jax
+
+# path substrings that are never quantized (norms, gates, SSM dynamics,
+# positional tables): tiny parameter counts, high sensitivity.
+_DEFAULT_EXCLUDE = (
+    "norm", "scale", "bias", "softcap",
+    "a_log", "dt_bias", "decay", "bonus", "mu",  # mamba2 / rwkv6 / zamba dynamics
+    "rope", "inv_freq",
+)
+
+_EMBED_HINTS = ("embed", "wte", "tok_", "lm_head", "codebook_emb", "head_")
+
+
+def path_str(path) -> str:
+    """KeyPath -> 'a/b/c' string."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts).lower()
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Predicate over (param path, array)."""
+
+    include_embeddings: bool = False
+    min_ndim: int = 2
+    min_size: int = 1024           # don't bother with tiny tensors
+    exclude_patterns: tuple = _DEFAULT_EXCLUDE
+    include_regex: Optional[str] = None   # overrides everything when set
+
+    def eligible(self, path, x) -> bool:
+        name = path_str(path)
+        if self.include_regex is not None:
+            return re.search(self.include_regex, name) is not None
+        if x.ndim < self.min_ndim or x.size < self.min_size:
+            return False
+        if any(pat in name for pat in self.exclude_patterns):
+            return False
+        if not self.include_embeddings and any(h in name for h in _EMBED_HINTS):
+            return False
+        return True
+
+    def map_eligible(self, fn: Callable, params, *rest):
+        """tree-map ``fn(path, x, *rest_leaves)`` over eligible leaves,
+        identity elsewhere."""
+        flat_rest = [jax.tree_util.tree_flatten(r)[0] for r in rest]
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        out = []
+        for i, (path, x) in enumerate(flat):
+            if self.eligible(path, x):
+                extra = [fr[i] for fr in flat_rest]
+                out.append(fn(path, x, *extra))
+            else:
+                out.append(x)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def eligible_mask(self, params):
+        """Pytree of bools mirroring params."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        return jax.tree_util.tree_unflatten(
+            treedef, [self.eligible(p, x) for p, x in flat]
+        )
+
+    def count(self, params):
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        n_el = sum(x.size for p, x in flat if self.eligible(p, x))
+        n_tot = sum(x.size for _, x in flat)
+        return n_el, n_tot

@@ -1,0 +1,184 @@
+"""Blockwise shared-scale quantization (paper §2.1) and casts.
+
+A *quant block* is a contiguous run of ``block_size`` elements along the
+flattened last axis of a tensor (``block_size = -1`` → one block per tensor,
+the per-tensor scheme used in the paper's LLM experiments).  Each block
+stores one high-precision scale ``s_B = absmax(w_B)/qmax``.
+
+All functions are pure jnp and shape-polymorphic; the Pallas kernels in
+``repro.kernels`` implement the same math fused (see kernels/quant/ref.py,
+which simply calls into this module as the oracle).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import IntFormat, get_format
+
+Array = jnp.ndarray
+
+
+def matrix_axes(w: Array) -> Tuple[int, ...]:
+    """The axes that constitute one 'tensor' for per-tensor scaling: the
+    trailing 2 axes for ndim >= 2 (so a stacked (L, a, b) layer tree or an
+    (E, d, f) MoE expert tree gets one scale per matrix — the paper's
+    per-tensor semantics), the whole vector for 1-D."""
+    return tuple(range(max(w.ndim - 2, 0), w.ndim))
+
+
+def _absmax_pertensor(w: Array) -> Array:
+    """Per-matrix absmax with keepdims — NO reshape, so sharded tensors
+    stay sharded (the reduction lowers to a per-shard max + a small
+    all-reduce under GSPMD; flattening instead forces a full all-gather
+    of the weights, which at 512 devices is a multi-GB regression — see
+    EXPERIMENTS.md §Perf iteration log)."""
+    return jnp.max(jnp.abs(w), axis=matrix_axes(w), keepdims=True)
+
+
+def _block_view(w: Array, block_size: int) -> Tuple[Array, Tuple[int, ...], int]:
+    """Reshape ``w`` into (n_blocks, block) padding the tail with zeros.
+
+    Returns (blocked, original_shape, n_pad). Padding with zeros never
+    changes a block's absmax unless the block is all-padding (scale guard
+    handles that).  Used by the blockwise (block_size > 0) path and the
+    storage packers; the per-tensor path is reshape-free (see
+    :func:`_absmax_pertensor`).
+    """
+    shape = w.shape
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    if block_size == -1 or block_size >= n:
+        return flat.reshape(1, -1), shape, 0
+    n_pad = (-n) % block_size
+    if n_pad:
+        flat = jnp.pad(flat, (0, n_pad))
+    return flat.reshape(-1, block_size), shape, n_pad
+
+
+def _unblock(blocked: Array, shape: Tuple[int, ...], n_pad: int) -> Array:
+    flat = blocked.reshape(-1)
+    if n_pad:
+        flat = flat[: flat.shape[0] - n_pad]
+    return flat.reshape(shape)
+
+
+def block_scales(w: Array, fmt, block_size: int = -1) -> Array:
+    """Per-block scales, shape (n_blocks,) (blockwise) or per-matrix with
+    keepdims (per-tensor)."""
+    if block_size == -1:
+        return fmt.scale(_absmax_pertensor(w))
+    blocked, _, _ = _block_view(w, block_size)
+    absmax = jnp.max(jnp.abs(blocked), axis=-1)
+    return fmt.scale(absmax)
+
+
+def scales_like(w: Array, fmt, block_size: int = -1) -> Array:
+    """Per-element scale tensor (broadcast of block scales back to w.shape)."""
+    if block_size == -1:
+        return jnp.broadcast_to(fmt.scale(_absmax_pertensor(w)), w.shape)
+    blocked, shape, n_pad = _block_view(w, block_size)
+    absmax = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True)
+    s = fmt.scale(absmax)
+    return _unblock(jnp.broadcast_to(s, blocked.shape), shape, n_pad)
+
+
+def cast_rtn(w: Array, fmt, block_size: int = -1) -> Array:
+    """Round-to-nearest cast with shared absmax scales (the paper's
+    ``cast``)."""
+    if block_size == -1:
+        return fmt.rtn(w, fmt.scale(_absmax_pertensor(w)))
+    blocked, shape, n_pad = _block_view(w, block_size)
+    absmax = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True)
+    s = fmt.scale(absmax)
+    return _unblock(fmt.rtn(blocked, s), shape, n_pad)
+
+
+def _rr(w: Array, s: Array, fmt, key: jax.Array) -> Array:
+    lo, hi = fmt.neighbors(w, s)
+    gap = hi - lo
+    # P(hi); representable points have gap == 0 -> stay at lo == hi == w.
+    p_hi = jnp.where(gap > 0, (w - lo) / jnp.where(gap > 0, gap, 1.0), 0.0)
+    u = jax.random.uniform(key, w.shape, dtype=w.dtype)
+    return jnp.where(u < p_hi, hi, lo)
+
+
+def cast_rr(w: Array, fmt, key: jax.Array, block_size: int = -1) -> Array:
+    """Unbiased randomized-rounding cast (paper §3.1 / App. A.2.4).
+
+    Rounds each element independently to ``hi`` w.p. (w-lo)/(hi-lo) and to
+    ``lo`` otherwise, so E[cast_rr(w)] = w elementwise, and fixed points of
+    ``cast`` are preserved with probability 1 (RR axiom 3).
+    """
+    if block_size == -1:
+        return _rr(w, fmt.scale(_absmax_pertensor(w)), fmt, key)
+    blocked, shape, n_pad = _block_view(w, block_size)
+    absmax = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True)
+    s = fmt.scale(absmax)
+    return _unblock(_rr(blocked, s, fmt, key), shape, n_pad)
+
+
+def rr_variance(w: Array, fmt, block_size: int = -1) -> Array:
+    """Elementwise Var[eps] of unbiased RR: (hi - w)(w - lo).
+
+    For uniform INT grids this equals s^2 * Delta * (1 - Delta) (paper
+    §3.2); the general form also covers non-uniform codebooks (FP4).
+    """
+    lo, hi = rr_neighbors(w, fmt, block_size)
+    return (hi - w) * (w - lo)
+
+
+def rr_neighbors(w: Array, fmt, block_size: int = -1) -> Tuple[Array, Array]:
+    """Elementwise (lo, hi) representable brackets, in w's shape."""
+    if block_size == -1:
+        return fmt.neighbors(w, fmt.scale(_absmax_pertensor(w)))
+    blocked, shape, n_pad = _block_view(w, block_size)
+    absmax = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True)
+    s = fmt.scale(absmax)
+    lo, hi = fmt.neighbors(blocked, s)
+    return _unblock(lo, shape, n_pad), _unblock(hi, shape, n_pad)
+
+
+def pack_int4(codes: Array) -> Array:
+    """Pack int8 codes in [-7, 7] into uint8 nibbles (2 per byte).
+
+    Used by the weight-only-quantized serving path; the Pallas wq_matmul
+    kernel unpacks in VMEM.
+    """
+    flat = codes.reshape(-1)
+    n_pad = (-flat.shape[0]) % 2
+    if n_pad:
+        flat = jnp.pad(flat, (0, n_pad))
+    u = (flat.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo = u[0::2]
+    hi = u[1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: Array, n: int) -> Array:
+    """Inverse of :func:`pack_int4` -> int8 codes of length n."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    # sign-extend 4-bit two's complement
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1).reshape(-1)
+    return out[:n]
+
+
+def quantize_store(w: Array, fmt, block_size: int = -1):
+    """Quantize to storage form: (codes, scales, meta) for checkpoints /
+    serving.  Codes are int8 (int formats) or uint8 codebook indices."""
+    blocked, shape, n_pad = _block_view(w, block_size)
+    absmax = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True)
+    s = fmt.scale(absmax)
+    codes = fmt.quantize_codes(blocked, s)
+    return codes, s[..., 0], dict(shape=shape, n_pad=n_pad, block_size=block_size)
+
+
+def dequantize_store(codes: Array, scales: Array, meta, fmt) -> Array:
+    w = fmt.dequantize(codes, scales[..., None])
+    return _unblock(w, tuple(meta["shape"]), meta["n_pad"])

@@ -1,0 +1,48 @@
+"""Straight-through estimators for the QAT / RAT baselines.
+
+QAT (paper §4): forward pass uses the RTN-cast weights, backward treats the
+quantizer as identity.  RAT: same, with randomized rounding in the forward.
+Both are implemented as ``jax.custom_vjp`` so the quantizer contributes an
+exact identity Jacobian (the STE), matching the paper's baselines.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize
+
+Array = jnp.ndarray
+
+
+@jax.custom_vjp
+def _ste(q: Array, w: Array) -> Array:
+    """Returns q in the forward pass, routes the cotangent to w."""
+    del w
+    return q
+
+
+def _ste_fwd(q, w):
+    del w
+    return q, None
+
+
+def _ste_bwd(_, g):
+    # d/dq = 0 (quantized value is a dead end), d/dw = identity (STE).
+    return jnp.zeros_like(g), g
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant_rtn(w: Array, fmt, block_size: int = -1) -> Array:
+    """QAT fake-quant: RTN forward, identity backward."""
+    q = quantize.cast_rtn(jax.lax.stop_gradient(w), fmt, block_size)
+    return _ste(q, w)
+
+
+def fake_quant_rr(w: Array, fmt, key: jax.Array, block_size: int = -1) -> Array:
+    """RAT fake-quant: randomized-rounding forward, identity backward."""
+    q = quantize.cast_rr(jax.lax.stop_gradient(w), fmt, key, block_size)
+    return _ste(q, w)

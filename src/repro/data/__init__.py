@@ -1,0 +1,8 @@
+"""Deterministic, seekable synthetic data substrate."""
+
+from .pipeline import DataPipeline
+from .synthetic import (linreg_batch, lm_batch, markov_ce_floor,
+                        markov_tokens, permutation_table)
+
+__all__ = ["DataPipeline", "lm_batch", "markov_tokens", "permutation_table",
+           "markov_ce_floor", "linreg_batch"]

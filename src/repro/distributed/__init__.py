@@ -1,0 +1,9 @@
+"""Distribution: sharding rules + collective accounting."""
+
+from .sharding import (activation_spec, cache_shardings, cache_spec,
+                       data_batch_spec, param_spec, params_shardings,
+                       state_shardings, train_batch_shardings)
+
+__all__ = ["param_spec", "params_shardings", "state_shardings",
+           "train_batch_shardings", "cache_spec", "cache_shardings",
+           "data_batch_spec", "activation_spec"]

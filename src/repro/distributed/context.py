@@ -1,0 +1,59 @@
+"""Activation-sharding constraint context.
+
+The model code is mesh-agnostic; the launcher installs NamedShardings for
+well-known activation roles before tracing and the model applies them via
+``constrain``.  Empty context (tests, single device) = no-op.
+
+Roles: ``residual`` (b, l, d) carried through the layer scan;
+``logits`` (b, l, [c,] v).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+_CONSTRAINTS: Dict[str, object] = {}
+_COST_MODE: list = [False]
+
+
+def set_cost_mode(on: bool) -> None:
+    """Cost-accounting mode: model scans fully unroll so compiled-HLO
+    cost_analysis / collective counts reflect true trip counts (XLA counts
+    a while-loop body ONCE regardless of trips).  Used only by the
+    dry-run's cost lowering — never for execution."""
+    _COST_MODE[0] = bool(on)
+
+
+def scan_unroll(length: int) -> int:
+    """unroll= parameter for model-level lax.scans under cost mode."""
+    return length if _COST_MODE[0] else 1
+
+
+def set_constraints(**kwargs) -> None:
+    _CONSTRAINTS.clear()
+    _CONSTRAINTS.update({k: v for k, v in kwargs.items() if v is not None})
+
+
+def clear_constraints() -> None:
+    _CONSTRAINTS.clear()
+
+
+def constrain(x, role: str):
+    s = _CONSTRAINTS.get(role)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def constrain_tree(tree, role: str):
+    """Constrain a whole pytree (e.g. the per-iteration slice of the stacked
+    stage params inside the layer scan).  with_sharding_constraint is
+    differentiable and its transpose constrains the cotangent — this is
+    what keeps the scan-backward gradient accumulators sharded instead of
+    replicated (a multi-GB difference at 512 devices; see EXPERIMENTS.md)."""
+    specs = _CONSTRAINTS.get(role)
+    if specs is None:
+        return tree
+    return jax.tree.map(jax.lax.with_sharding_constraint, tree, specs)

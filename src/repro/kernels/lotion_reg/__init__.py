@@ -1,0 +1,3 @@
+from .ops import lotion_penalty_fused
+
+__all__ = ["lotion_penalty_fused"]

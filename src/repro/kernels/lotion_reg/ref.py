@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused LOTION regularizer: the core library's
+closed form."""
+
+from __future__ import annotations
+
+from repro.core.formats import get_format
+from repro.core.lotion import lotion_penalty_and_grad
+
+
+def reg_ref(w, fisher, fmt_name: str, block_size: int):
+    fmt = get_format(fmt_name)
+    return lotion_penalty_and_grad(w, fisher, fmt, block_size)

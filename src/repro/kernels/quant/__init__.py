@@ -1,0 +1,3 @@
+from .ops import quant_rr, quant_rtn
+
+__all__ = ["quant_rtn", "quant_rr"]

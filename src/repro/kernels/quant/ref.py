@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the quant kernels: the core library itself."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import quantize
+from repro.core.formats import get_format
+
+
+def rtn_ref(w2d, fmt_name: str, block_size: int):
+    """Oracle: blockwise RTN over a 2-D array whose blocks run along the
+    minor axis (matches the kernel's layout contract)."""
+    fmt = get_format(fmt_name)
+    R, C = w2d.shape
+    if block_size == -1:
+        return quantize.cast_rtn(w2d, fmt, -1)
+    out = quantize.cast_rtn(w2d.reshape(-1, block_size), fmt, block_size)
+    return out.reshape(R, C)
+
+
+def rr_ref(w2d, noise, fmt_name: str, block_size: int):
+    """Oracle RR with explicit uniforms (same decision rule as the kernel:
+    round up iff noise < P(hi))."""
+    fmt = get_format(fmt_name)
+    R, C = w2d.shape
+    if block_size == -1:
+        s = fmt.scale(quantize._absmax_pertensor(w2d))
+        lo, hi = fmt.neighbors(w2d, s)
+        gap = hi - lo
+        p_hi = jnp.where(gap > 0, (w2d - lo) / jnp.where(gap > 0, gap, 1.0), 0.0)
+        return jnp.where(noise < p_hi, hi, lo)
+    wb = w2d.reshape(-1, block_size)
+    nb = noise.reshape(-1, block_size)
+    absmax = jnp.max(jnp.abs(wb), axis=-1, keepdims=True)
+    s = fmt.scale(absmax)
+    lo, hi = fmt.neighbors(wb, s)
+    gap = hi - lo
+    p_hi = jnp.where(gap > 0, (wb - lo) / jnp.where(gap > 0, gap, 1.0), 0.0)
+    return jnp.where(nb < p_hi, hi, lo).reshape(R, C)

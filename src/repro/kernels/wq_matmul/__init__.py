@@ -1,0 +1,3 @@
+from .ops import pack_weight, wq_matmul
+
+__all__ = ["wq_matmul", "pack_weight"]

@@ -1,0 +1,36 @@
+"""Public wrapper for the weight-quantized matmul serving path."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import quantize_weights_ref
+from .wq_matmul import wq_matmul_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pack_weight(w, block_k: int = 128, bits: int = 4):
+    """(K, N) fp -> (codes, scales) in the kernel layout."""
+    return quantize_weights_ref(w, block_k, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "bits",
+                                             "tile_m", "tile_n"))
+def wq_matmul(x, codes, scales, block_k: int = 128, bits: int = 4,
+              tile_m: int = 128, tile_n: int = 128):
+    """x (M, K) @ dequant(codes, scales).  M is padded to the tile."""
+    M = x.shape[0]
+    tm = min(tile_m, max(8, M))
+    pad = (-M) % tm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = wq_matmul_pallas(x, codes, scales, block_k=block_k,
+                           int4=(bits == 4), tile_m=tm, tile_n=tile_n,
+                           interpret=_interpret())
+    return out[:M]

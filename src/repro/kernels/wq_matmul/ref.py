@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the weight-quantized matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_ref(codes, scales, block_k: int, int4: bool):
+    """codes (K,N) int8 or (K//2,N) packed uint4; scales (K//bs, N)."""
+    if int4:
+        lo = (codes & 0xF).astype(jnp.int8)
+        hi = ((codes >> 4) & 0xF).astype(jnp.int8)
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        k2, n = codes.shape
+        w = jnp.stack([lo, hi], axis=1).reshape(k2 * 2, n)
+    else:
+        w = codes
+    K, N = w.shape
+    s = jnp.repeat(scales, block_k, axis=0)
+    return w.astype(jnp.float32) * s
+
+
+def wq_matmul_ref(x, codes, scales, block_k: int, int4: bool):
+    w = dequant_ref(codes, scales, block_k, int4)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def quantize_weights_ref(w, block_k: int, bits: int):
+    """Blockwise (along K) symmetric quantization of a (K, N) weight for
+    the serving path.  Returns (codes, scales); codes packed for int4."""
+    K, N = w.shape
+    qmax = 2 ** (bits - 1) - 1
+    wb = w.reshape(K // block_k, block_k, N)
+    absmax = jnp.max(jnp.abs(wb), axis=1)
+    scales = jnp.where(absmax > 0, absmax / qmax, 1.0)   # (K/bs, N)
+    codes = jnp.clip(jnp.rint(wb / scales[:, None, :]), -qmax, qmax)
+    codes = codes.reshape(K, N).astype(jnp.int8)
+    if bits == 4:
+        lo = codes[0::2]
+        hi = codes[1::2]
+        packed = ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.uint8)
+        return packed, scales.astype(jnp.float32)
+    return codes, scales.astype(jnp.float32)

@@ -1,0 +1,1 @@
+"""Launch: production meshes, dry-run, roofline, train/serve drivers."""

@@ -1,0 +1,411 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+the production meshes, record memory/cost/collective analysis.
+
+Run:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+        --out benchmarks/dryrun_results.jsonl
+"""
+
+# The dry-run (and ONLY the dry-run) needs placeholder devices so
+# jax.make_mesh can build the production mesh.  These two lines MUST run
+# before any other import (jax locks the device count on first init).
+import os
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count="
+    f"{os.environ.get('REPRO_DRYRUN_DEVICES', '512')} "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp   # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cells, get_config  # noqa: E402
+from repro.core import QuantConfig  # noqa: E402
+from repro.distributed import (cache_shardings, data_batch_spec,  # noqa: E402
+                               params_shardings, state_shardings,
+                               train_batch_shardings)
+from repro.distributed.context import (clear_constraints,  # noqa: E402
+                                       set_constraints, set_cost_mode)
+from repro.launch import specs as sp  # noqa: E402
+from repro.launch.hlo_analysis import analyze_collectives, roofline_terms  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.lm import lm_decode, lm_prefill  # noqa: E402
+from repro.optim import adamw, cosine_with_warmup  # noqa: E402
+from repro.train import TrainConfig, make_train_step  # noqa: E402
+
+HBM_PER_CHIP = 16e9   # v5e
+
+# per-arch microbatch counts for train_4k (activation-memory driven;
+# see EXPERIMENTS.md §Perf).  Default 4.
+TRAIN_MICROBATCHES = {"dbrx-132b": 16, "moonshot-v1-16b-a3b": 8,
+                      "gemma3-12b": 8, "llama-3.2-vision-11b": 8}
+# per-arch train attention chunk (smaller tile = smaller fp32 score buffers)
+ATTN_CHUNK_TRAIN = {"dbrx-132b": 512}
+
+
+def active_param_count(cfg) -> tuple:
+    """(total, active) parameter counts from the abstract tree."""
+    shapes = sp.params_specs(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    total = active = 0
+    for path, x in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        n = int(np.prod(x.shape))
+        total += n
+        if cfg.ffn == "moe" and ("/moe/w_" in name):
+            active += n * cfg.top_k // cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    total, active = active_param_count(cfg)
+    tokens = batch * (seq if kind in ("train", "prefill") else 1)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active * tokens
+
+
+def _constraints(mesh, cfg, batch: int, fsdp: bool = True,
+                 residual: str = "dmodel"):
+    bspec = data_batch_spec(mesh, batch)
+    b_axes = bspec[0]
+    resid = {"dmodel": P(b_axes, None, "model"),   # d over model (default)
+             "batch": P(b_axes, None, None),        # Megatron-style replicated
+             "seq": P(b_axes, "model", None),       # sequence-parallel
+             }[residual]
+    if cfg.n_codebooks > 1:
+        logits = P(b_axes, None, None, "model")
+    else:
+        logits = P(b_axes, None, "model")
+
+    # per-iteration slice of the stacked stage params (no leading repeats
+    # dim): constrained inside the scan body so backward keeps the grad
+    # accumulators sharded.
+    from repro.distributed.sharding import fix_divisibility, param_spec, widen_dp
+    params_abs = sp.params_specs(cfg)
+    unit_abs = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+        params_abs["stage"])
+    flat, treedef = jax.tree_util.tree_flatten_with_path(unit_abs)
+    unit_sh = jax.tree_util.tree_unflatten(
+        treedef,
+        [NamedSharding(mesh, fix_divisibility(mesh, widen_dp(
+            mesh, param_spec(("stage",) + tuple(p), x, fsdp=fsdp,
+                             stacked_prefixes=())), x.shape))
+         for p, x in flat])
+    set_constraints(
+        residual=NamedSharding(mesh, resid),
+        logits=NamedSharding(mesh, logits),
+        head_in=NamedSharding(mesh, P(b_axes, None, None)),
+        stage_params=unit_sh,
+    )
+
+
+def lower_cell(arch: str, shape_id: str, *, multi_pod: bool,
+               kv_quant: bool = False, fsdp: bool = True,
+               attn_chunk_prefill: int = 2048, lam: float = 1e4,
+               block_size: int = -1, donate: bool = True,
+               attn_chunk_train: int = 2048, logit_chunk: int = 512,
+               n_microbatches: int = 1, cost_mode: bool = False,
+               cost_repeats: int = 0, residual: str = "dmodel"):
+    """Lower + compile one cell; returns the result record.
+
+    ``cost_mode``: unroll all model scans so cost_analysis / collective
+    counts carry true trip counts (memory numbers from this variant are
+    meaningless — pair it with a rolled run).  ``cost_repeats`` (with
+    cost_mode) additionally truncates the model to that many scan repeats:
+    two cheap lowerings at R'=1 and R'=2 identify the per-repeat cost B
+    and the fixed cost F (flops = F + R'*B), from which the full-depth
+    total F + R*B is exact — avoiding the full-depth unrolled compile.
+    """
+    set_cost_mode(cost_mode)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg, kind, specs = sp.input_specs(arch, shape_id, kv_quant=kv_quant)
+    if cost_mode:
+        # remat + full unroll explodes compile time; cost runs count the
+        # no-remat flops and EXPERIMENTS.md applies the analytic 4/3
+        # recompute multiplier to the compute term for train cells.
+        cfg = dataclasses.replace(cfg, remat=False)
+        if cost_repeats:
+            cfg = dataclasses.replace(
+                cfg, n_layers=len(cfg.pattern) * cost_repeats)
+            # rebuild shape specs against the truncated config
+            if kind == "train":
+                specs = sp.train_batch_specs(
+                    cfg, SHAPES[shape_id]["global_batch"],
+                    SHAPES[shape_id]["seq_len"])
+            elif kind == "decode":
+                specs = sp.decode_specs(
+                    cfg, SHAPES[shape_id]["global_batch"],
+                    SHAPES[shape_id]["seq_len"], kv_quant=kv_quant)
+    shp = SHAPES[shape_id]
+    batch, seq = shp["global_batch"], shp["seq_len"]
+    _constraints(mesh, cfg, batch, fsdp=fsdp, residual=residual)
+
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            opt = adamw(cosine_with_warmup(3e-4, 100, 10000),
+                        weight_decay=0.0)
+            tcfg = TrainConfig(
+                quant=QuantConfig(method="lotion", fmt_name="int4",
+                                  lam=lam, block_size=block_size),
+                attn_chunk=attn_chunk_train, logit_chunk=logit_chunk,
+                n_microbatches=n_microbatches)
+            state_abs = sp.state_specs(cfg)
+            state_sh = state_shardings(mesh, state_abs, fsdp=fsdp)
+            step = make_train_step(cfg, tcfg, opt,
+                                   grad_shardings=state_sh["params"])
+            batch_sh = train_batch_shardings(mesh, specs, batch)
+            metrics_sh = None  # inferred
+            fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, metrics_sh),
+                         donate_argnums=(0,) if donate else ())
+            lowered = fn.lower(state_abs, specs)
+        elif kind == "prefill":
+            params_abs = sp.params_specs(cfg)
+            params_sh = params_shardings(mesh, params_abs, fsdp=fsdp)
+            img = "image_embeds" in specs
+
+            def prefill(p, tokens, image_embeds=None):
+                return lm_prefill(p, cfg, tokens, image_embeds=image_embeds,
+                                  attn_chunk=attn_chunk_prefill,
+                                  kv_quant=kv_quant)
+
+            tok_sh = train_batch_shardings(
+                mesh, {"t": specs["tokens"]}, batch)["t"]
+            in_sh = (params_sh, tok_sh)
+            args = (params_abs, specs["tokens"])
+            if img:
+                img_sh = train_batch_shardings(
+                    mesh, {"i": specs["image_embeds"]}, batch)["i"]
+                in_sh = in_sh + (img_sh,)
+                args = args + (specs["image_embeds"],)
+            fn = jax.jit(prefill, in_shardings=in_sh)
+            lowered = fn.lower(*args)
+        else:  # decode
+            params_abs = sp.params_specs(cfg)
+            params_sh = params_shardings(mesh, params_abs, fsdp=fsdp)
+            cache_sh = cache_shardings(mesh, specs["cache"], batch)
+            tok_sh = train_batch_shardings(
+                mesh, {"t": specs["tokens"]}, batch)["t"]
+            pos_sh = NamedSharding(mesh, data_batch_spec(mesh, batch))
+
+            def serve_step(p, cache, tokens, pos):
+                return lm_decode(p, cfg, cache, tokens, pos)
+
+            fn = jax.jit(serve_step,
+                         in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+                         donate_argnums=(1,) if donate else ())
+            lowered = fn.lower(params_abs, specs["cache"], specs["tokens"],
+                               specs["pos"])
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    clear_constraints()
+    set_cost_mode(False)
+
+    hlo = compiled.as_text()
+    coll = analyze_collectives(hlo, mesh.size)
+    flops = float(cost.get("flops", 0.0))
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    terms = roofline_terms(flops, hbm_bytes, coll.total_wire_bytes, mesh.size)
+
+    mf = model_flops(cfg, kind, batch, seq)
+    n_dev = mesh.size
+    useful = mf / max(flops * n_dev, 1.0)
+
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    alias_b = getattr(mem, "alias_size_in_bytes", 0)
+    peak = arg_b + tmp_b + out_b - alias_b
+
+    rec = {
+        "arch": arch, "shape": shape_id, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev, "kv_quant": kv_quant, "fsdp": fsdp,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_dev": flops, "hbm_bytes_per_dev": hbm_bytes,
+        "collectives": coll.to_json(),
+        "roofline": terms,
+        "model_flops": mf, "useful_flops_ratio": useful,
+        "mem": {"argument": arg_b, "temp": tmp_b, "output": out_b,
+                "alias": alias_b, "peak": peak,
+                "fits_hbm": bool(peak <= HBM_PER_CHIP)},
+    }
+    return rec, compiled
+
+
+class CellTimeout(Exception):
+    pass
+
+
+def run_cell(arch, shape_id, multi_pod, args, out_fh=None):
+    label = f"{arch} x {shape_id} x {'2x16x16' if multi_pod else '16x16'}"
+    import signal
+
+    def _alarm(signum, frame):
+        raise CellTimeout(f"cell exceeded {args.cell_timeout}s")
+
+    signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(int(args.cell_timeout))
+    try:
+        # 1) rolled lowering: memory truth + the compile-success proof
+        cfg0 = get_config(arch)
+        n_mb = (args.microbatches if args.microbatches > 0
+                else TRAIN_MICROBATCHES.get(cfg0.name, 4))
+        act = ATTN_CHUNK_TRAIN.get(cfg0.name, args.attn_chunk_train)
+        rec, compiled = lower_cell(
+            arch, shape_id, multi_pod=multi_pod, kv_quant=args.kv_quant,
+            fsdp=not args.no_fsdp, donate=not args.no_donate,
+            attn_chunk_train=act,
+            logit_chunk=args.logit_chunk,
+            n_microbatches=n_mb, residual=args.residual)
+        mem = compiled.memory_analysis()
+        print(f"== {label}")
+        print(mem)                          # proves it fits
+        print({k: v for k, v in compiled.cost_analysis().items()
+               if k in ("flops", "bytes accessed")})
+        # 2) cost accounting: two cheap fully-unrolled lowerings at R'=1
+        # and R'=2 repeats give per-repeat (B) and fixed (F) costs;
+        # full-depth totals are F + R*B (exact for the homogeneous layer
+        # scan; inner chunk scans are fully unrolled in both probes).
+        # Roofline terms are single-pod only (§Roofline).
+        if not args.skip_cost and not multi_pod:
+            try:
+                probes = []
+                for rr_ in (1, 2):
+                    crec, cc = lower_cell(
+                        arch, shape_id, multi_pod=multi_pod,
+                        kv_quant=args.kv_quant, fsdp=not args.no_fsdp,
+                        donate=False, attn_chunk_train=act,
+                        logit_chunk=args.logit_chunk, n_microbatches=1,
+                        cost_mode=True, cost_repeats=rr_,
+                        residual=args.residual)
+                    coll = analyze_collectives(cc.as_text(), crec["n_devices"])
+                    probes.append((crec, coll))
+                cfg_full = get_config(arch)
+                R = cfg_full.n_repeats
+                (c1, k1), (c2, k2) = probes
+
+                def extrap(v1, v2):
+                    b = max(v2 - v1, 0.0)
+                    f = max(v1 - b, 0.0)
+                    return f + R * b
+
+                flops = extrap(c1["flops_per_dev"], c2["flops_per_dev"])
+                hbm = extrap(c1["hbm_bytes_per_dev"], c2["hbm_bytes_per_dev"])
+                wire = extrap(k1.total_wire_bytes, k2.total_wire_bytes)
+                per_op_bytes = {
+                    op: extrap(k1.per_op_bytes.get(op, 0.0),
+                               k2.per_op_bytes.get(op, 0.0))
+                    for op in set(k1.per_op_bytes) | set(k2.per_op_bytes)}
+                # remat recompute multiplier for train (cost probes are
+                # remat-free; execution remats one forward per backward)
+                remat_mult = 4.0 / 3.0 if rec["kind"] == "train" else 1.0
+                flops *= remat_mult
+                rec["flops_per_dev"] = flops
+                rec["hbm_bytes_per_dev"] = hbm
+                rec["collectives"] = {
+                    "per_op": {op: int(extrap(k1.per_op.get(op, 0),
+                                              k2.per_op.get(op, 0)))
+                               for op in set(k1.per_op) | set(k2.per_op)},
+                    "per_op_bytes": per_op_bytes,
+                    "total_wire_bytes": wire,
+                    "raw_operand_bytes": extrap(k1.raw_operand_bytes,
+                                                k2.raw_operand_bytes),
+                }
+                rec["roofline"] = roofline_terms(flops, hbm, wire,
+                                                 rec["n_devices"])
+                rec["useful_flops_ratio"] = rec["model_flops"] / max(
+                    flops * rec["n_devices"], 1.0)
+                rec["cost_compile_s"] = (c1["compile_s"] + c2["compile_s"])
+                rec["cost_method"] = "R1R2-extrapolation(+4/3 remat)" \
+                    if remat_mult > 1 else "R1R2-extrapolation"
+            except Exception as ce:  # cost run is best-effort
+                rec["cost_error"] = f"{type(ce).__name__}: {ce}"
+                print(f"   (cost-mode lowering failed: {ce})")
+        r = rec["roofline"]
+        print(f"   lower {rec['lower_s']}s compile {rec['compile_s']}s | "
+              f"peak/dev {rec['mem']['peak']/1e9:.2f} GB fits={rec['mem']['fits_hbm']} | "
+              f"compute {r['t_compute_s']*1e3:.2f}ms memory {r['t_memory_s']*1e3:.2f}ms "
+              f"collective {r['t_collective_s']*1e3:.2f}ms -> {r['bottleneck']}")
+        if out_fh:
+            out_fh.write(json.dumps(rec) + "\n")
+            out_fh.flush()
+        return True
+    except Exception as e:
+        print(f"!! {label} FAILED: {type(e).__name__}: {e}")
+        traceback.print_exc()
+        if out_fh:
+            out_fh.write(json.dumps(
+                {"arch": arch, "shape": shape_id,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "error": f"{type(e).__name__}: {e}"}) + "\n")
+            out_fh.flush()
+        return False
+    finally:
+        import signal as _s
+        _s.alarm(0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["on", "off", "both"], default="off")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--attn-chunk-train", type=int, default=2048)
+    ap.add_argument("--logit-chunk", type=int, default=512)
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = per-arch default (TRAIN_MICROBATCHES)")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="skip the unrolled cost lowering")
+    ap.add_argument("--cell-timeout", type=float, default=1200.0)
+    ap.add_argument("--residual", default="dmodel",
+                    choices=["dmodel", "batch", "seq"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+    todo = []
+    if args.all:
+        for (a, s) in cells():
+            for mp in pods:
+                todo.append((a, s, mp))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        for mp in pods:
+            todo.append((args.arch, args.shape, mp))
+
+    out_fh = open(args.out, "a") if args.out else None
+    ok = 0
+    for a, s, mp in todo:
+        ok += run_cell(a, s, mp, args, out_fh)
+    print(f"\n{ok}/{len(todo)} cells passed")
+    if out_fh:
+        out_fh.close()
+    raise SystemExit(0 if ok == len(todo) else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Compiled-HLO analysis: collective-bytes extraction + roofline terms.
+
+``cost_analysis`` gives HLO FLOPs and HBM bytes; collectives are parsed
+out of the post-SPMD compiled module text (they do not exist in the
+pre-partitioning StableHLO).  Wire bytes per op follow the standard ring
+models:
+
+    all-reduce        2 * size * (g-1)/g
+    all-gather        out_size * (g-1)/g
+    reduce-scatter    in_size * (g-1)/g
+    all-to-all        size * (g-1)/g
+    collective-permute  size
+
+with g = replica-group size parsed from the op's ``replica_groups``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.1 = bf16[8,4096,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, int]          # op kind -> count
+    per_op_bytes: Dict[str, float]  # op kind -> wire bytes (per device)
+    total_wire_bytes: float
+    raw_operand_bytes: float        # spec-literal: sum of operand sizes
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def analyze_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    wire: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    raw = 0.0
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        # result may be a tuple for -start ops; take all shapes on the line's
+        # result side up to the op name
+        result_part = line.split(kind)[0]
+        shapes = _SHAPE_RE.findall(result_part)
+        size = sum(_nbytes(dt, dm) for dt, dm in shapes) or _nbytes(dtype, dims)
+        g = _group_size(line, n_devices)
+        frac = (g - 1) / g if g > 1 else 0.0
+        counts[kind] += 1
+        raw += size
+        if kind == "all-reduce":
+            wire[kind] += 2 * size * frac
+        elif kind == "all-gather":
+            wire[kind] += size * frac
+        elif kind == "reduce-scatter":
+            wire[kind] += size * frac
+        elif kind == "all-to-all":
+            wire[kind] += size * frac
+        else:  # collective-permute
+            wire[kind] += size
+    return CollectiveStats(
+        per_op={k: v for k, v in counts.items() if v},
+        per_op_bytes={k: v for k, v in wire.items() if v},
+        total_wire_bytes=sum(wire.values()),
+        raw_operand_bytes=raw,
+    )
+
+
+def roofline_terms(flops_total: float, hbm_bytes_per_dev: float,
+                   wire_bytes_per_dev: float, n_devices: int,
+                   n_links: int = 4) -> Dict[str, float]:
+    """The three roofline times (seconds) for one step on the mesh.
+
+    ``flops_total`` is whole-module FLOPs (cost_analysis is per-partition
+    already under SPMD on CPU backend? — we treat it as per-device; see
+    dryrun.py where we record both conventions).  ``n_links``: ICI links
+    per chip participating (v5e: 4 links, 2D torus).
+    """
+    t_compute = flops_total / PEAK_FLOPS_BF16
+    t_memory = hbm_bytes_per_dev / HBM_BW
+    t_collective = wire_bytes_per_dev / (ICI_BW * n_links)
+    dom = max((("compute", t_compute), ("memory", t_memory),
+               ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "bottleneck": dom,
+    }

@@ -1,0 +1,95 @@
+"""Distributed serving launcher: sharded params + KV cache on a mesh,
+batched prefill+decode (the execution twin of the decode dry-run cells).
+
+    REPRO_FORCE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
+        --arch granite-3-2b --smoke --mesh 2x4 --batch 8 --prompt-len 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+if os.environ.get("REPRO_FORCE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count="
+        f"{os.environ['REPRO_FORCE_DEVICES']} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config, get_smoke_config  # noqa: E402
+from repro.core import QuantConfig, QuantPolicy, cast_params  # noqa: E402
+from repro.distributed import cache_shardings, params_shardings  # noqa: E402
+from repro.models.lm import init_cache, lm_decode, lm_init, lm_prefill  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--weights", default="fp32")
+    ap.add_argument("--kv-quant", action="store_true")
+    args = ap.parse_args()
+
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
+        mesh = jax.make_mesh(shape, axes)
+    else:
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    if args.weights != "fp32":
+        mode, fmt = args.weights.split(":")
+        qc = QuantConfig(method="ptq", fmt_name=fmt,
+                         policy=QuantPolicy(min_size=256 if args.smoke else 1024))
+        params = cast_params(params, qc.fmt, qc.policy, qc.block_size,
+                             mode=mode, key=jax.random.PRNGKey(1))
+
+    cache_len = args.prompt_len + args.new_tokens
+    with mesh:
+        p_sh = params_shardings(mesh, jax.eval_shape(lambda: params))
+        params = jax.device_put(params, p_sh)
+        toks = jax.random.randint(jax.random.PRNGKey(2),
+                                  (args.batch, args.prompt_len), 0, cfg.vocab)
+
+        prefill = jax.jit(lambda p, t: lm_prefill(
+            p, cfg, t, cache_len=cache_len, kv_quant=args.kv_quant))
+        decode = jax.jit(lambda p, c, t, pos: lm_decode(p, cfg, c, t, pos),
+                         donate_argnums=(1,))
+
+        t0 = time.perf_counter()
+        logits, cache = prefill(params, toks)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+
+        tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        pos = jnp.full((args.batch,), args.prompt_len - 1, jnp.int32)
+        t0 = time.perf_counter()
+        for _ in range(args.new_tokens):
+            pos = pos + 1
+            logits, cache = decode(params, cache, tok[:, None], pos)
+            tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t0
+
+    n_tok = args.batch * args.new_tokens
+    print(f"mesh={dict(mesh.shape)} weights={args.weights} "
+          f"kv_quant={args.kv_quant}")
+    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.3f}s | "
+          f"decode: {n_tok} tokens in {t_decode:.3f}s "
+          f"({n_tok/t_decode:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Nothing here allocates: model params, optimizer state and caches come from
+``jax.eval_shape`` over the init functions; batches are explicit
+ShapeDtypeStructs.  This is the single source of truth the dry-run,
+roofline, and launch scripts all consume.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models.lm import LMConfig, init_cache, lm_init
+from repro.optim import adamw, cosine_with_warmup
+from repro.train import init_state
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: LMConfig, batch: int, seq: int) -> Dict[str, Any]:
+    tok_shape = ((batch, seq, cfg.n_codebooks) if cfg.n_codebooks > 1
+                 else (batch, seq))
+    specs = {"tokens": sds(tok_shape, jnp.int32),
+             "labels": sds(tok_shape, jnp.int32)}
+    if cfg.n_image_tokens:
+        specs["image_embeds"] = sds(
+            (batch, cfg.n_image_tokens, cfg.d_vision), jnp.bfloat16)
+    return specs
+
+
+def state_specs(cfg: LMConfig):
+    """Abstract train state (params + AdamW moments + step)."""
+    opt = adamw(cosine_with_warmup(1e-3, 100, 10000))
+    return jax.eval_shape(
+        lambda k: init_state(lm_init(k, cfg), opt), jax.random.PRNGKey(0))
+
+
+def params_specs(cfg: LMConfig):
+    return jax.eval_shape(lambda k: lm_init(k, cfg), jax.random.PRNGKey(0))
+
+
+def decode_specs(cfg: LMConfig, batch: int, seq: int,
+                 kv_quant: bool = False) -> Dict[str, Any]:
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, batch, seq, kv_quant=kv_quant))
+    tok_shape = ((batch, 1, cfg.n_codebooks) if cfg.n_codebooks > 1
+                 else (batch, 1))
+    return {
+        "cache": cache,
+        "tokens": sds(tok_shape, jnp.int32),
+        "pos": sds((batch,), jnp.int32),
+    }
+
+
+def input_specs(arch: str, shape_id: str, kv_quant: bool = False):
+    """Returns (cfg, kind, specs-dict) for one dry-run cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_id]
+    b, l, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    if kind == "train":
+        return cfg, kind, train_batch_specs(cfg, b, l)
+    if kind == "prefill":
+        specs = {"tokens": sds(
+            (b, l, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b, l),
+            jnp.int32)}
+        if cfg.n_image_tokens:
+            specs["image_embeds"] = sds(
+                (b, cfg.n_image_tokens, cfg.d_vision), jnp.bfloat16)
+        return cfg, kind, specs
+    if kind == "decode":
+        return cfg, kind, decode_specs(cfg, b, l, kv_quant=kv_quant)
+    raise ValueError(kind)

@@ -1,0 +1,104 @@
+"""Distributed training launcher (the production entry point).
+
+On a real TPU slice this process runs per host under
+``jax.distributed.initialize()``; on the CPU container it drives the same
+code on however many (forced) host devices exist.  The mesh, shardings,
+step function and checkpoint path are identical to the dry-run's — the
+dry-run IS this launcher minus execution.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b \
+        --mesh 2x4 --steps 10 --batch 8 --seq 64 --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+# allow forcing host devices for local multi-device runs (must precede jax)
+if os.environ.get("REPRO_FORCE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count="
+        f"{os.environ['REPRO_FORCE_DEVICES']} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import checkpoint as ckpt  # noqa: E402
+from repro.configs import get_config, get_smoke_config  # noqa: E402
+from repro.core import QuantConfig, QuantPolicy  # noqa: E402
+from repro.data import DataPipeline, lm_batch, permutation_table  # noqa: E402
+from repro.distributed import state_shardings, train_batch_shardings  # noqa: E402
+from repro.distributed.context import set_constraints  # noqa: E402
+from repro.launch import specs as sp  # noqa: E402
+from repro.models.lm import lm_init  # noqa: E402
+from repro.optim import adamw, cosine_with_warmup  # noqa: E402
+from repro.train import (TrainConfig, init_state, make_train_step,  # noqa: E402
+                         run_loop)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default=None, help="e.g. 2x4 (data x model)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--method", default="lotion")
+    ap.add_argument("--lam", type=float, default=1000.0)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
+        mesh = jax.make_mesh(shape, axes)
+    else:
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    qcfg = QuantConfig(method=args.method, fmt_name="int4", lam=args.lam,
+                       policy=QuantPolicy(min_size=256 if args.smoke else 1024))
+    tcfg = TrainConfig(quant=qcfg, n_microbatches=args.microbatches)
+    opt = adamw(cosine_with_warmup(args.lr, 5, args.steps))
+
+    state_abs = jax.eval_shape(
+        lambda k: init_state(lm_init(k, cfg), opt), jax.random.PRNGKey(0))
+    state_sh = state_shardings(mesh, state_abs)
+    set_constraints(residual=NamedSharding(mesh, P(("data",), None, "model")),
+                    logits=NamedSharding(
+                        mesh, P(("data",), None, None, "model")
+                        if cfg.n_codebooks > 1 else P(("data",), None, "model")),
+                    head_in=NamedSharding(mesh, P(("data",), None, None)))
+
+    with mesh:
+        params = jax.jit(lambda k: init_state(lm_init(k, cfg), opt),
+                         out_shardings=state_sh)(jax.random.PRNGKey(0))
+        step = make_train_step(cfg, tcfg, opt,
+                               grad_shardings=state_sh["params"])
+        perm = permutation_table(0, cfg.vocab)
+        batch_abs = sp.train_batch_specs(cfg, args.batch, args.seq)
+        batch_sh = train_batch_shardings(mesh, batch_abs, args.batch)
+        pipe = DataPipeline(
+            lambda s: lm_batch(0, s, args.batch, args.seq, cfg.vocab, perm,
+                               n_codebooks=cfg.n_codebooks),
+            sharding=batch_sh, prefetch=1)
+        hooks = {}
+        if args.ckpt_dir:
+            hooks = dict(ckpt_every=max(args.steps // 2, 1),
+                         ckpt_hook=lambda st: ckpt.save(
+                             args.ckpt_dir, int(st["step"]), st))
+        out = run_loop(step, params, pipe, args.steps, log_every=5, **hooks)
+        print(f"done: {int(out['state']['step'])} steps on mesh "
+              f"{dict(mesh.shape)} devices={mesh.size}")
+        pipe.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Model zoo: stage-based LM covering all assigned architecture families,
+plus the paper's synthetic models."""
+
+from .layers import AttnSpec, MLPSpec, MoESpec
+from .lm import (LMConfig, init_cache, lm_decode, lm_forward, lm_init,
+                 lm_prefill, param_count)
+from .ssm import Mamba2Spec, RWKV6Spec
+
+__all__ = [
+    "AttnSpec", "MLPSpec", "MoESpec", "Mamba2Spec", "RWKV6Spec",
+    "LMConfig", "lm_init", "lm_forward", "lm_prefill", "lm_decode",
+    "init_cache", "param_count",
+]

@@ -1,0 +1,474 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (full / chunked /
+decode, sliding-window, logit-softcap, QK-norm), MLPs, MoE.
+
+All layers are *functional*: ``init_*`` returns a params pytree,
+``apply`` functions take (params, inputs).  Compute dtype is the dtype of
+the incoming activations; params are stored fp32 (master) and cast by the
+caller (mixed-precision policy lives in the train loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+NEG_INF = -1e30
+
+
+def _norm_init(d):
+    return {"norm_scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA) — init
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: Optional[int] = None        # sliding-window size (local layers)
+    softcap: Optional[float] = None     # gemma2-style logit soft-capping
+    qk_norm: bool = False               # gemma3-style per-head RMS on q/k
+    is_cross: bool = False              # KV from encoder context (VLM)
+
+    @property
+    def q_dim(self):
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self):
+        return self.n_kv_heads * self.head_dim
+
+
+def attn_init(key, spec: AttnSpec) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], spec.d_model, spec.q_dim),
+        "wk": dense_init(ks[1], spec.d_model, spec.kv_dim),
+        "wv": dense_init(ks[2], spec.d_model, spec.kv_dim),
+        "wo": dense_init(ks[3], spec.q_dim, spec.d_model),
+    }
+    if spec.qk_norm:
+        p["q_norm_scale"] = jnp.ones((spec.head_dim,), jnp.float32)
+        p["k_norm_scale"] = jnp.ones((spec.head_dim,), jnp.float32)
+    return p
+
+
+def _qkv(params, spec: AttnSpec, x: Array, ctx: Optional[Array] = None):
+    """Project q from x, k/v from ctx (cross) or x (self)."""
+    b = x.shape[0]
+    src = ctx if spec.is_cross else x
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, x.shape[1], spec.n_heads, spec.head_dim)
+    k = (src @ params["wk"].astype(x.dtype)).reshape(b, src.shape[1], spec.n_kv_heads, spec.head_dim)
+    v = (src @ params["wv"].astype(x.dtype)).reshape(b, src.shape[1], spec.n_kv_heads, spec.head_dim)
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm_scale"])
+        k = rms_norm(k, params["k_norm_scale"])
+    return q, k, v
+
+
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """(b, l, kvh, d) -> (b, l, h, d) by repeating groups."""
+    b, l, kvh, d = k.shape
+    rep = n_heads // kvh
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _mask_bias(q_pos: Array, k_pos: Array, causal: bool, window: Optional[int]) -> Array:
+    """(q_len, k_len) additive mask bias from absolute positions."""
+    d = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias, softcap):
+    """Scores in fp32; q,k,v: (b, l/h-layout below)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = logits + bias
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attn_apply(
+    params,
+    spec: AttnSpec,
+    x: Array,
+    positions: Array,
+    ctx: Optional[Array] = None,
+    causal: bool = True,
+    chunk: Optional[int] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train / prefill).
+
+    ``chunk`` enables online-softmax streaming over KV blocks (memory-safe
+    for 32k prefill without a quadratic score buffer of the full length).
+    ``return_kv`` additionally returns the rotated (k, v) so prefill fills
+    the decode cache without re-projecting.
+    """
+    b, l, _ = x.shape
+    q, k, v = _qkv(params, spec, x, ctx)
+    if not spec.is_cross:
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    kv = (k, v)
+    k_pos = positions if not spec.is_cross else jnp.arange(k.shape[1])
+
+    if chunk is None or k.shape[1] <= chunk:
+        ke = _expand_kv(k, spec.n_heads)
+        ve = _expand_kv(v, spec.n_heads)
+        bias = _mask_bias(positions, k_pos, causal and not spec.is_cross, spec.window)
+        o = _sdpa(q, ke, ve, bias, spec.softcap)
+    else:
+        o = _streaming_sdpa(q, k, v, positions, k_pos,
+                            causal and not spec.is_cross, spec.window,
+                            spec.softcap, chunk)
+    o = o.reshape(b, l, spec.q_dim)
+    out = o @ params["wo"].astype(x.dtype)
+    return (out, kv) if return_kv else out
+
+
+def _streaming_sdpa(q, k, v, q_pos, k_pos, causal, window, softcap, chunk):
+    """Online-softmax over KV chunks (flash-attention dataflow in pure jnp).
+
+    GQA-native: k/v keep their ``g`` KV heads (never expanded to n_heads —
+    the expansion is a (rep)x memory multiplier at 32k).  The scan runs
+    over the chunk INDEX with in-body dynamic slicing of the loop-invariant
+    k/v, so no transposed stacked copy of the KV is materialized.  State:
+    (running max m, running denom s, running out o); peak extra memory is
+    one (b, g, rep, q_len, chunk) score tile.
+    """
+    b, ql, h, d = q.shape
+    g = k.shape[2]
+    rep = h // g
+    kl = k.shape[1]
+    n_chunks = (kl + chunk - 1) // chunk
+    pad = n_chunks * chunk - kl
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad as FUTURE positions so the causal mask excludes them even
+        # when window is None
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=10 ** 9)
+    q4 = q.reshape(b, ql, g, rep, d)
+    scale = 1.0 / np.sqrt(d)
+
+    def step(carry, i):
+        m, s, o = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, axis=1)
+        kpc = jax.lax.dynamic_slice_in_dim(k_pos, i * chunk, chunk, axis=0)
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", q4, kc).astype(jnp.float32)
+        logits = logits * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        bias = _mask_bias(q_pos, kpc, causal, window)
+        # padded slots carry sentinel positions: mask even when non-causal
+        bias = jnp.where(kpc[None, :] >= 10 ** 9, NEG_INF, bias)
+        logits = logits + bias[None, None, None]
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        s_new = s * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p.astype(q.dtype), vc).astype(jnp.float32)
+        return (m_new, s_new, o_new), None
+
+    m0 = jnp.full((b, g, rep, ql), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((b, g, rep, ql), jnp.float32)
+    o0 = jnp.zeros((b, g, rep, ql, d), jnp.float32)
+    from repro.distributed.context import scan_unroll
+    (m, s, o), _ = jax.lax.scan(step, (m0, s0, o0), jnp.arange(n_chunks),
+                                unroll=scan_unroll(n_chunks))
+    o = o / jnp.maximum(s, 1e-30)[..., None]
+    # (b, g, rep, q, d) -> (b, q, h, d)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, ql, h, d).astype(q.dtype)
+
+
+# ---- quantized KV cache (int8 per-vector absmax; beyond-paper serving
+# feature using the paper's own quantizer — halves the decode memory term).
+
+def kv_quantize(k: Array) -> Dict[str, Array]:
+    """k: (b, l, kvh, hd) -> int8 codes + fp32 scale per (b, l, kvh)."""
+    absmax = jnp.max(jnp.abs(k), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, jnp.ones_like(absmax))
+    codes = jnp.clip(jnp.rint(k / scale), -127, 127).astype(jnp.int8)
+    return {"codes": codes, "scale": scale.astype(jnp.float32)}
+
+
+def _is_quantized_cache(c) -> bool:
+    return isinstance(c, dict) and "codes" in c
+
+
+def _cache_write(cache, new, slot, bidx):
+    """Write the (b, kvh, hd) vector `new` at ring slots."""
+    if _is_quantized_cache(cache):
+        q = kv_quantize(new[:, None])  # (b,1,kvh,*)
+        return {
+            "codes": cache["codes"].at[bidx, slot].set(q["codes"][:, 0]),
+            "scale": cache["scale"].at[bidx, slot].set(q["scale"][:, 0]),
+        }
+    return cache.at[bidx, slot].set(new.astype(cache.dtype))
+
+
+def attn_decode(
+    params,
+    spec: AttnSpec,
+    x: Array,                      # (b, 1, d_model) — one new token
+    pos: Array,                    # (b,) int32 current position
+    cache_k,                       # (b, cache_len, kvh, hd) or quantized dict
+    cache_v,
+    cross_kv: Optional[Tuple[Array, Array]] = None,
+):
+    """Single-token decode against a KV cache.
+
+    Grouped-query einsums throughout: the KV cache is NEVER expanded to
+    n_heads (at 32k x 128-batch that expansion would dominate HBM).  For
+    int8-quantized caches the dequant scale is folded into the small
+    per-head score/prob tensors, so the big code tensor is read once as
+    int8 and converted inside the contraction.
+
+    Self-attn K/V is written at ``pos % cache_len`` (ring buffer for
+    sliding-window layers; cache_len == max_seq for global layers).
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    g = spec.n_kv_heads
+    rep = spec.n_heads // g
+    hd = spec.head_dim
+
+    def scores_from(q4, ck):
+        """q4: (b, g, rep, hd); ck raw (b,l,g,hd) or quantized."""
+        if _is_quantized_cache(ck):
+            s = jnp.einsum("bgrd,blgd->bgrl", q4,
+                           ck["codes"].astype(q4.dtype))
+            return s.astype(jnp.float32) * ck["scale"][..., 0].transpose(
+                0, 2, 1)[:, :, None, :]
+        return jnp.einsum("bgrd,blgd->bgrl", q4,
+                          ck.astype(q4.dtype)).astype(jnp.float32)
+
+    def out_from(probs, cv):
+        """probs: (b, g, rep, l) fp32; cv raw or quantized -> (b,g,rep,hd)."""
+        if _is_quantized_cache(cv):
+            p = probs * cv["scale"][..., 0].transpose(0, 2, 1)[:, :, None, :]
+            return jnp.einsum("bgrl,blgd->bgrd", p.astype(x.dtype),
+                              cv["codes"].astype(x.dtype))
+        return jnp.einsum("bgrl,blgd->bgrd", probs.astype(x.dtype),
+                          cv.astype(x.dtype))
+
+    if spec.is_cross:
+        q = (x @ params["wq"].astype(x.dtype)).reshape(b, spec.n_heads, hd)
+        if spec.qk_norm:
+            q = rms_norm(q, params["q_norm_scale"])
+        q4 = q.reshape(b, g, rep, hd)
+        k, v = cross_kv
+        logits = scores_from(q4, k) / np.sqrt(hd)
+        if spec.softcap is not None:
+            logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o = out_from(probs, v).reshape(b, 1, spec.q_dim)
+        return o @ params["wo"].astype(x.dtype), cache_k, cache_v
+
+    q, k, v = _qkv(params, spec, x)
+    q = apply_rope(q, pos[:, None], spec.rope_theta)
+    k = apply_rope(k, pos[:, None], spec.rope_theta)
+    cache_len = (cache_k["codes"] if _is_quantized_cache(cache_k)
+                 else cache_k).shape[1]
+    slot = (pos % cache_len).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    cache_k = _cache_write(cache_k, k[:, 0], slot, bidx)
+    cache_v = _cache_write(cache_v, v[:, 0], slot, bidx)
+
+    q4 = q.reshape(b, g, rep, hd)
+    logits = scores_from(q4, cache_k) / np.sqrt(hd)
+    if spec.softcap is not None:
+        logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+    # ring-slot validity: slot j holds absolute position p_j = the largest
+    # p <= pos with p % cache_len == j; valid iff p_j >= 0 (and within the
+    # sliding window for local layers).
+    j = jnp.arange(cache_len)
+    p_j = pos[:, None] - ((pos[:, None] - j[None, :]) % cache_len)
+    valid = p_j >= 0
+    if spec.window is not None:
+        valid &= (pos[:, None] - p_j) < spec.window
+    bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]  # (b,1,1,l)
+    probs = jax.nn.softmax(logits + bias, axis=-1)
+    o = out_from(probs, cache_v).reshape(b, 1, spec.q_dim)
+    return o @ params["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLPSpec:
+    d_model: int
+    d_ff: int
+    kind: str = "swiglu"   # swiglu | geglu | gelu
+
+
+def mlp_init(key, spec: MLPSpec):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], spec.d_model, spec.d_ff),
+         "w_down": dense_init(ks[1], spec.d_ff, spec.d_model)}
+    if spec.kind in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], spec.d_model, spec.d_ff)
+    return p
+
+
+def mlp_apply(params, spec: MLPSpec, x: Array) -> Array:
+    up = x @ params["w_up"].astype(x.dtype)
+    if spec.kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype)) * up
+    elif spec.kind == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MoE (GShard-style dense dispatch; EP-shardable over the expert axis)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int              # per-expert hidden
+    n_experts: int
+    top_k: int
+    kind: str = "swiglu"
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    group_size: int = 2048  # dispatch group: keeps the one-hot O(G*E*C)
+
+
+def moe_init(key, spec: MoESpec):
+    ks = jax.random.split(key, 4)
+    e, d, f = spec.n_experts, spec.d_model, spec.d_ff
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, scale=0.02),
+        "w_up": jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale,
+        "w_down": jax.random.normal(ks[2], (e, f, d), jnp.float32) / np.sqrt(f),
+    }
+    if spec.kind in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(ks[3], (e, d, f), jnp.float32) * scale
+    return p
+
+
+def moe_apply(params, spec: MoESpec, x: Array) -> Tuple[Array, Dict[str, Array]]:
+    """Capacity-based top-k dispatch (GShard).  x: (b, l, d) -> (b, l, d).
+
+    Tokens are processed in GROUPS of ``group_size`` (capacity is enforced
+    per group): the dense one-hot dispatch is O(G * E * C) per group —
+    without grouping it is O(T^2 * k / E), which at 1M-token steps
+    materializes multi-TB tensors (§Perf log).  Group dim shards over
+    data, expert dim over model (EP); the dispatch/combine einsums lower
+    to all-to-alls under GSPMD.  Returns (out, aux) with load-balance
+    terms.
+    """
+    b, l, d = x.shape
+    t = b * l
+    e = spec.n_experts
+    g_sz = min(spec.group_size, t)
+    # group count must divide t; fall back to one group per sequence
+    if t % g_sz != 0:
+        g_sz = l if t % l == 0 else t
+    n_g = t // g_sz
+
+    xt = x.reshape(n_g, g_sz, d)
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                        # (g, t, e)
+
+    topv, topi = jax.lax.top_k(probs, spec.top_k)                  # (g, t, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(g_sz * spec.top_k / e * spec.capacity_factor))
+    cap = max(cap, spec.top_k)
+
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)              # (g, t, k, e)
+    # position of each (token, choice) within its expert queue (per group);
+    # int32 cumsum (bf16 cumsum loses exactness past 256)
+    pos_in_e = jnp.cumsum(
+        onehot.reshape(n_g, g_sz * spec.top_k, e), axis=1
+    ).reshape(n_g, g_sz, spec.top_k, e) - onehot
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                      # (g, t, k)
+    keep = pos < cap
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+
+    # 0/1 one-hots are exact in bf16: dispatch einsums run in compute dtype
+    kept = (onehot * keep[..., None]).astype(x.dtype)              # (g, t, k, e)
+    cap_onehot = jax.nn.one_hot(pos, cap, dtype=x.dtype)           # (g, t, k, c)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", kept, cap_onehot)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", kept, cap_onehot,
+                         topv.astype(x.dtype))
+
+    xin = jnp.einsum("gtec,gtd->gecd", dispatch, xt)
+    up = jnp.einsum("gecd,edf->gecf", xin, params["w_up"].astype(x.dtype))
+    if spec.kind in ("swiglu", "geglu"):
+        gate = jnp.einsum("gecd,edf->gecf", xin, params["w_gate"].astype(x.dtype))
+        act = jax.nn.silu(gate) if spec.kind == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up)
+    eout = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(x.dtype))
+    out = jnp.einsum("gtec,gecd->gtd", combine, eout)
+
+    # GShard aux loss: mean fraction of tokens per expert * mean router prob
+    me = jnp.mean(jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    ce_ = jnp.mean(probs, axis=(0, 1))
+    aux = {"load_balance_loss": e * jnp.sum(me * ce_),
+           "router_entropy": -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), -1))}
+    return out.reshape(b, l, d), aux

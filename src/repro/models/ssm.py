@@ -1,0 +1,474 @@
+"""State-space / linear-recurrence blocks: Mamba2 (SSD) and RWKV6 (Finch).
+
+Each block has three faces:
+
+* ``*_apply``   — full-sequence training/prefill forward using the *chunked*
+  parallel algorithm (SSD for Mamba2, GLA-style chunking for RWKV6) — this
+  is the TPU-friendly matmul-dominant form.
+* ``*_scan``    — the exact sequential recurrence (oracle for tests, and
+  the decode-step math).
+* ``*_decode``  — single-token step against a recurrent state (serving).
+
+Numerical notes: all recurrences run in fp32 internally.  RWKV6 decays are
+clamped to ``log w >= -5`` so the chunked factorization
+``exp(-cumsum log w)`` stays inside fp32 with chunk length 16 (a decay
+below e^-5 per step annihilates within a subchunk anyway — see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rms_norm
+
+Array = jnp.ndarray
+
+
+# ==========================================================================
+# Mamba2 (SSD)
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Spec:
+    d_model: int
+    d_state: int = 64          # n
+    head_dim: int = 64         # p
+    expand: int = 2
+    d_conv: int = 4
+    n_groups: int = 1          # B/C groups (g)
+    chunk: int = 64
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self):
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self):
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba2_init(key, spec: Mamba2Spec) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * spec.d_inner + 2 * spec.n_groups * spec.d_state + spec.n_heads
+    dt = jnp.exp(jax.random.uniform(ks[2], (spec.n_heads,)) *
+                 (np.log(0.1) - np.log(0.001)) + np.log(0.001))
+    return {
+        "in_proj": dense_init(ks[0], spec.d_model, d_in_proj),
+        "conv_w": jax.random.normal(ks[1], (spec.d_conv, spec.conv_dim), jnp.float32)
+        / np.sqrt(spec.d_conv),
+        "conv_b": jnp.zeros((spec.conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, spec.n_heads + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(dt)),     # softplus^-1(dt)
+        "d_skip": jnp.ones((spec.n_heads,), jnp.float32),
+        "out_norm_scale": jnp.ones((spec.d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[3], spec.d_inner, spec.d_model),
+    }
+
+
+def _split_in_proj(spec: Mamba2Spec, zxbcdt: Array):
+    d_in, g, n, h = spec.d_inner, spec.n_groups, spec.d_state, spec.n_heads
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + spec.conv_dim], axis=-1)
+    return z, xbc, dt  # dt: (..., h)
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d over (b, l, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):  # k = 4: tiny unrolled loop
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i]
+    return out + b
+
+
+def _ssd_chunked(x, dt, a_neg, B, C, chunk):
+    """SSD chunked scan.
+
+    x: (b, l, h, p); dt: (b, l, h); a_neg: (h,) negative; B, C: (b, l, g, n).
+    Returns y: (b, l, h, p), final_state: (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, l)
+    nc = (l + q - 1) // q
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)   # (b, L, h, n)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    L = nc * q
+    xc = xf.reshape(b, nc, q, h, p)
+    dtc = dtf.reshape(b, nc, q, h)
+    Bc = Bh.reshape(b, nc, q, h, n)
+    Cc = Ch.reshape(b, nc, q, h, n)
+
+    dA = dtc * a_neg.astype(jnp.float32)                  # (b, nc, q, h)  <= 0
+    A_cum = jnp.cumsum(dA, axis=2)                        # inclusive cumsum
+    # intra-chunk: L_ij = exp(A_cum_i - A_cum_j) for j <= i (exponent <= 0)
+    seg = A_cum[:, :, :, None, :] - A_cum[:, :, None, :, :]  # (b,nc,qi,qj,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    xdt = xc * dtc[..., None]                             # (b,nc,q,h,p)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)
+    y_diag = jnp.einsum("bcijh,bcijh,bcjhp->bcihp", scores, Lmat, xdt)
+
+    # chunk states: sum_j exp(A_cum_last - A_cum_j) * B_j (x_j dt_j)
+    decay_states = jnp.exp(A_cum[:, :, -1:, :] - A_cum)   # (b,nc,q,h) <= 1
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", Bc, decay_states, xdt)
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(A_cum[:, :, -1, :])              # (b,nc,h)
+
+    def step(S, inp):
+        st, dec = inp                                      # (b,h,p,n), (b,h)
+        S_new = S * dec[..., None, None] + st
+        return S_new, S                                    # emit state *before* chunk
+
+    S0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, S_prev = jax.lax.scan(
+        step,
+        S0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    S_final = S_prev[-1] * chunk_decay[:, -1][..., None, None] + states[:, -1]
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)               # (b,nc,h,p,n)
+
+    # contribution of carried-in state: C_i exp(A_cum_i) S_prev
+    state_decay = jnp.exp(A_cum)                           # (b,nc,q,h)
+    y_off = jnp.einsum("bcihn,bcih,bchpn->bcihp", Cc, state_decay, S_prev)
+
+    y = (y_diag + y_off).reshape(b, L, h, p)[:, :l]
+    return y, S_final
+
+
+def _ssd_scan(x, dt, a_neg, B, C):
+    """Exact sequential SSD recurrence (oracle)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = (x * dt[..., None]).astype(jnp.float32)
+    dA = (dt * a_neg).astype(jnp.float32)
+
+    def step(S, inp):
+        xt, bt, ct, dat = inp
+        S = S * jnp.exp(dat)[..., None, None] + xt[..., :, None] * bt[..., None, :]
+        y = jnp.einsum("bhn,bhpn->bhp", ct, S)
+        return S, y
+
+    S0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), Bh.transpose(1, 0, 2, 3),
+          Ch.transpose(1, 0, 2, 3), dA.transpose(1, 0, 2))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3), S
+
+
+def mamba2_apply(params, spec: Mamba2Spec, x: Array, exact: bool = False,
+                 return_state: bool = False):
+    """Full-sequence Mamba2 block. x: (b, l, d_model).
+
+    With ``return_state`` also returns the decode state (conv tail + final
+    SSM state) so prefill fills the cache in the same pass.
+    """
+    b, l, _ = x.shape
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xbc_raw, dt_raw = _split_in_proj(spec, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, params["conv_w"].astype(x.dtype),
+                                   params["conv_b"].astype(x.dtype)))
+    xs, B, C = jnp.split(
+        xbc, [spec.d_inner, spec.d_inner + spec.n_groups * spec.d_state], axis=-1)
+    xh = xs.reshape(b, l, spec.n_heads, spec.head_dim)
+    B = B.reshape(b, l, spec.n_groups, spec.d_state)
+    C = C.reshape(b, l, spec.n_groups, spec.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["a_log"])
+
+    if exact:
+        y, S = _ssd_scan(xh, dt, a_neg, B, C)
+    else:
+        y, S = _ssd_chunked(xh, dt, a_neg, B, C, spec.chunk)
+    y = y + xh.astype(jnp.float32) * params["d_skip"][:, None]
+    y = y.reshape(b, l, spec.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm_scale"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    if not return_state:
+        return out
+    pad = max(spec.d_conv - 1 - l, 0)
+    tail = jnp.pad(xbc_raw, ((0, 0), (pad, 0), (0, 0)))[:, -(spec.d_conv - 1):]
+    return out, {"conv": tail, "ssm": S}
+
+
+def mamba2_init_state(spec: Mamba2Spec, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, spec.d_conv - 1, spec.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.d_state), jnp.float32),
+    }
+
+
+def mamba2_decode(params, spec: Mamba2Spec, x: Array, state):
+    """One-token step. x: (b, 1, d_model)."""
+    b = x.shape[0]
+    zxbcdt = x[:, 0] @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_in_proj(spec, zxbcdt)
+    conv_in = jnp.concatenate([state["conv"], xbc[:, None, :].astype(state["conv"].dtype)], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, w) + params["conv_b"].astype(x.dtype))
+    new_conv = conv_in[:, 1:]
+
+    xs, B, C = jnp.split(
+        xbc, [spec.d_inner, spec.d_inner + spec.n_groups * spec.d_state], axis=-1)
+    xh = xs.reshape(b, spec.n_heads, spec.head_dim).astype(jnp.float32)
+    B = B.reshape(b, spec.n_groups, spec.d_state).astype(jnp.float32)
+    C = C.reshape(b, spec.n_groups, spec.d_state).astype(jnp.float32)
+    rep = spec.n_heads // spec.n_groups
+    Bh = jnp.repeat(B, rep, axis=1)
+    Ch = jnp.repeat(C, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["a_log"])
+
+    S = state["ssm"] * jnp.exp(dt * a_neg)[..., None, None] + (
+        (xh * dt[..., None])[..., :, None] * Bh[..., None, :])
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, S) + xh * params["d_skip"][:, None]
+    y = y.reshape(b, spec.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm_scale"])
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None, :]
+    return out, {"conv": new_conv, "ssm": S}
+
+
+# ==========================================================================
+# RWKV6 (Finch)
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Spec:
+    d_model: int
+    head_dim: int = 64
+    lora_rank: int = 32
+    decay_lora_rank: int = 64
+    chunk: int = 16
+    logw_min: float = -5.0     # decay clamp; see module docstring
+
+    @property
+    def n_heads(self):
+        return self.d_model // self.head_dim
+
+
+def rwkv6_time_mix_init(key, spec: RWKV6Spec) -> Dict[str, Any]:
+    d, r = spec.d_model, spec.lora_rank
+    ks = jax.random.split(key, 16)
+    p = {
+        # data-dependent token-shift (ddlerp) base coefficients + LoRA
+        "mu_base": jax.random.uniform(ks[0], (5, d), jnp.float32),
+        "mu_lora_a": jax.random.normal(ks[1], (d, 5 * r), jnp.float32) * 0.01,
+        "mu_lora_b": jax.random.normal(ks[2], (5, r, d), jnp.float32) * 0.01,
+        "w_r": dense_init(ks[3], d, d),
+        "w_k": dense_init(ks[4], d, d),
+        "w_v": dense_init(ks[5], d, d),
+        "w_g": dense_init(ks[6], d, d),
+        "w_o": dense_init(ks[7], d, d),
+        # data-dependent decay
+        "decay_base": jax.random.normal(ks[8], (d,), jnp.float32) - 4.0,
+        "decay_lora_a": jax.random.normal(ks[9], (d, spec.decay_lora_rank), jnp.float32) * 0.01,
+        "decay_lora_b": jax.random.normal(ks[10], (spec.decay_lora_rank, d), jnp.float32) * 0.01,
+        "bonus": jax.random.normal(ks[11], (spec.n_heads, spec.head_dim), jnp.float32) * 0.1,
+        "ln_scale": jnp.ones((d,), jnp.float32),  # per-head group norm scale
+    }
+    return p
+
+
+def _ddlerp(params, x: Array, xx: Array):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    d = x.shape[-1]
+    r5 = params["mu_lora_a"].shape[1] // 5
+    delta = xx - x
+    base = params["mu_base"].astype(x.dtype)                     # (5, d)
+    lora_in = jnp.tanh((x + delta * base[4]) @ params["mu_lora_a"].astype(x.dtype))
+    lora_in = lora_in.reshape(x.shape[:-1] + (5, r5))
+    adj = jnp.einsum("...fr,frd->...fd", lora_in, params["mu_lora_b"].astype(x.dtype))
+    mu = base + adj                                               # (..., 5, d)
+    return x[..., None, :] + delta[..., None, :] * mu             # (..., 5, d)
+
+
+def _rwkv_projections(params, spec: RWKV6Spec, x: Array, xx: Array):
+    mixed = _ddlerp(params, x, xx)
+    xr, xk, xv, xw, xg = [mixed[..., i, :] for i in range(5)]
+    r = xr @ params["w_r"].astype(x.dtype)
+    k = xk @ params["w_k"].astype(x.dtype)
+    v = xv @ params["w_v"].astype(x.dtype)
+    g = jax.nn.silu(xg @ params["w_g"].astype(x.dtype))
+    logw_raw = params["decay_base"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ params["decay_lora_a"])
+        @ params["decay_lora_b"])
+    logw = -jnp.exp(logw_raw)                                     # <= 0
+    logw = jnp.clip(logw, spec.logw_min, -1e-4)
+    return r, k, v, g, logw
+
+
+def _heads(x: Array, h: int):
+    return x.reshape(x.shape[:-1] + (h, x.shape[-1] // h))
+
+
+def _wkv_scan(r, k, v, logw, bonus):
+    """Exact recurrence: S_t = diag(w_t) S_{t-1} + k_t v_t^T;
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T).   Shapes (b, l, h, n)."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]                  # (b,h,n,m)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S + bonus[..., None] * kv)
+        S = jnp.exp(wt)[..., None] * S + kv
+        return S, y
+
+    b, l, h, n = r.shape
+    S0 = jnp.zeros((b, h, n, r.shape[-1]), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, logw))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3), S
+
+
+def _wkv_chunked(r, k, v, logw, bonus, chunk):
+    """Chunked GLA-style parallel form.  All inputs (b, l, h, n) fp32."""
+    b, l, h, n = r.shape
+    q = min(chunk, l)
+    nc = (l + q - 1) // q
+    pad = nc * q - l
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        logw = jnp.pad(logw, z)  # pad with 0 decay-log (w=1) is harmless
+    L = nc * q
+    rc = r.reshape(b, nc, q, h, n)
+    kc = k.reshape(b, nc, q, h, n)
+    vc = v.reshape(b, nc, q, h, n)
+    wc = logw.reshape(b, nc, q, h, n)
+
+    Lc = jnp.cumsum(wc, axis=2)                       # inclusive; <= 0
+    Lc_prev = Lc - wc                                  # exclusive cumsum
+    q_star = rc * jnp.exp(Lc_prev)                     # exponent <= 0
+    k_star = kc * jnp.exp(-Lc)                         # bounded by clamp
+    scores = jnp.einsum("bcihn,bcjhn->bchij", q_star, k_star)
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)      # strictly causal
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bchij,bcjhm->bcihm", scores, vc)
+    # bonus (j == i) term
+    y_bonus = jnp.einsum("bcihn,bcihn,bcihm->bcihm",
+                         rc * bonus[None, None, None], kc, vc)
+
+    # chunk states
+    decay_to_end = jnp.exp(Lc[:, :, -1:, :, :] - Lc)   # <= 1
+    states = jnp.einsum("bcjhn,bcjhn,bcjhm->bchnm", kc, decay_to_end, vc)
+    chunk_decay = jnp.exp(Lc[:, :, -1])                # (b,nc,h,n)
+
+    def step(S, inp):
+        st, dec = inp
+        return dec[..., None] * S + st, S
+
+    S0 = jnp.zeros((b, h, n, vc.shape[-1]), jnp.float32)
+    S_last, S_prev = jax.lax.scan(
+        step, S0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2, 3)))
+    S_final = (chunk_decay[:, -1][..., None] * S_prev[-1]) + states[:, -1]
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)           # (b,nc,h,n,m)
+
+    y_inter = jnp.einsum("bcihn,bchnm->bcihm", q_star, S_prev)
+    y = (y_intra + y_bonus + y_inter).reshape(b, L, h, vc.shape[-1])[:, :l]
+    return y, S_final
+
+
+def rwkv6_time_mix(params, spec: RWKV6Spec, x: Array,
+                   exact: bool = False, return_state: bool = False):
+    """Full-sequence RWKV6 time-mix.  x: (b, l, d_model)."""
+    b, l, d = x.shape
+    xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]  # token shift
+    r, k, v, g, logw = _rwkv_projections(params, spec, x, xx)
+    h = spec.n_heads
+    rh = _heads(r.astype(jnp.float32), h)
+    kh = _heads(k.astype(jnp.float32), h)
+    vh = _heads(v.astype(jnp.float32), h)
+    wh = _heads(logw, h)
+    if exact:
+        y, S = _wkv_scan(rh, kh, vh, wh, params["bonus"])
+    else:
+        y, S = _wkv_chunked(rh, kh, vh, wh, params["bonus"], spec.chunk)
+    y = y.reshape(b, l, d)
+    # per-head group norm
+    yh = y.reshape(b, l, h, spec.head_dim)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(b, l, d) * params["ln_scale"]
+    y = (y.astype(x.dtype) * g)
+    out = y @ params["w_o"].astype(x.dtype)
+    if not return_state:
+        return out
+    return out, {"shift_tm": x[:, -1].astype(jnp.float32), "wkv": S}
+
+
+def rwkv6_channel_mix_init(key, d_model: int, d_ff: int) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jax.random.uniform(ks[0], (d_model,), jnp.float32),
+        "mu_r": jax.random.uniform(ks[1], (d_model,), jnp.float32),
+        "w_k_cm": dense_init(ks[0], d_model, d_ff),
+        "w_v_cm": dense_init(ks[1], d_ff, d_model),
+        "w_r_cm": dense_init(ks[2], d_model, d_model),
+    }
+
+
+def rwkv6_channel_mix(params, x: Array, xx: Optional[Array] = None) -> Array:
+    if xx is None:
+        xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xk = x + (xx - x) * params["mu_k"].astype(x.dtype)
+    xr = x + (xx - x) * params["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ params["w_k_cm"].astype(x.dtype)))
+    kv = k @ params["w_v_cm"].astype(x.dtype)
+    return jax.nn.sigmoid(xr @ params["w_r_cm"].astype(x.dtype)) * kv
+
+
+def rwkv6_init_state(spec: RWKV6Spec, batch: int):
+    return {
+        "shift_tm": jnp.zeros((batch, spec.d_model), jnp.float32),
+        "shift_cm": jnp.zeros((batch, spec.d_model), jnp.float32),
+        "wkv": jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.head_dim),
+                         jnp.float32),
+    }
+
+
+def rwkv6_time_mix_decode(params, spec: RWKV6Spec, x: Array, state):
+    """x: (b, 1, d).  Returns (out, new_state_partial)."""
+    b, _, d = x.shape
+    xx = state["shift_tm"].astype(x.dtype)[:, None, :]
+    r, k, v, g, logw = _rwkv_projections(params, spec, x, xx)
+    h = spec.n_heads
+    rt = _heads(r[:, 0].astype(jnp.float32), h)
+    kt = _heads(k[:, 0].astype(jnp.float32), h)
+    vt = _heads(v[:, 0].astype(jnp.float32), h)
+    wt = _heads(logw[:, 0], h)
+    S = state["wkv"]
+    kv = kt[..., :, None] * vt[..., None, :]
+    y = jnp.einsum("bhn,bhnm->bhm", rt, S + params["bonus"][..., None] * kv)
+    S = jnp.exp(wt)[..., None] * S + kv
+    yh = y.reshape(b, h, spec.head_dim)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    yd = (yh.reshape(b, d) * params["ln_scale"]).astype(x.dtype) * g[:, 0]
+    out = (yd @ params["w_o"].astype(x.dtype))[:, None, :]
+    return out, {"shift_tm": x[:, 0].astype(jnp.float32), "wkv": S}

@@ -1,0 +1,13 @@
+"""Optimizers (no external deps): AdamW, SGD+momentum, schedules, clipping.
+
+AdamW's second moment ``nu`` doubles as the empirical-Fisher diagonal for
+the LOTION regularizer (paper §4.3), which is why the optimizer state is a
+plain dict the train loop can reach into.
+"""
+
+from .adamw import adamw, sgd
+from .schedule import constant, cosine_with_warmup, linear_warmup
+from .clip import clip_by_global_norm, global_norm
+
+__all__ = ["adamw", "sgd", "cosine_with_warmup", "constant", "linear_warmup",
+           "clip_by_global_norm", "global_norm"]

@@ -1,0 +1,89 @@
+"""AdamW and SGD(+momentum), optax-style (init/update pair) but dict-state
+so the LOTION train loop can read the second moment as the empirical
+Fisher diagonal."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params) -> (new_params, new_state)
+    fisher: Callable   # state -> Fisher-diagonal pytree (or None)
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    """AdamW with decoupled weight decay.  ``nu`` is the bias-uncorrected
+    EMA of squared gradients = the empirical-Fisher diagonal LOTION uses."""
+
+    def init(params):
+        return {
+            "mu": jax.tree.map(jnp.zeros_like, params),
+            "nu": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+        lr = lr_fn(count)
+
+        def step(p, m, v):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return p - lr * (upd + weight_decay * p)
+
+        new_params = jax.tree.map(step, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "count": count}
+
+    def fisher(state):
+        return state["nu"]
+
+    return Optimizer(init=init, update=update, fisher=fisher)
+
+
+def sgd(lr_fn, momentum: float = 0.0, fisher_decay: Optional[float] = None
+        ) -> Optimizer:
+    """SGD with optional momentum.  When ``fisher_decay`` is set, the state
+    additionally tracks a g^2 EMA so LOTION works with SGD (the paper's
+    synthetic experiments train with SGD/GD)."""
+
+    def init(params):
+        st = {"count": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mu"] = jax.tree.map(jnp.zeros_like, params)
+        if fisher_decay is not None:
+            st["nu"] = jax.tree.map(jnp.zeros_like, params)
+        return st
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr = lr_fn(count)
+        new_state = {"count": count}
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            new_state["mu"] = mu
+            step_dir = mu
+        else:
+            step_dir = grads
+        if fisher_decay is not None:
+            nu = jax.tree.map(lambda v, g: fisher_decay * v + (1 - fisher_decay) * g * g,
+                              state["nu"], grads)
+            new_state["nu"] = nu
+        new_params = jax.tree.map(lambda p, g: p - lr * g, params, step_dir)
+        return new_params, new_state
+
+    def fisher(state):
+        return state.get("nu")
+
+    return Optimizer(init=init, update=update, fisher=fisher)

@@ -1,0 +1,33 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+    return f
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        frac = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return jnp.asarray(lr, jnp.float32) * frac
+    return f
+
+
+def cosine_with_warmup(lr: float, warmup_steps: int, total_steps: int,
+                       final_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``final_frac * lr`` (the paper's
+    cosine scheduler)."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(np.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * jnp.where(step < warmup_steps, warm, cos)
+    return f

@@ -1,0 +1,5 @@
+"""Batched serving of (quantized) checkpoints."""
+
+from .engine import Engine, ServeConfig
+
+__all__ = ["Engine", "ServeConfig"]

@@ -1,0 +1,94 @@
+"""Batched serving engine: the deployment target of weight-only quantized
+models (the artifact LOTION training is *for*).
+
+Request flow: prompts are padded into a batch bucket -> one ``prefill``
+fills the KV cache -> a jitted ``decode`` step runs autoregressively with
+greedy or temperature sampling.  Weights can be served as:
+
+* ``fp32``      — reference;
+* ``rtn:<fmt>`` — RTN-cast (e.g. ``rtn:int4``), the paper's deployment cast;
+* ``rr:<fmt>``  — randomized-rounding cast (the paper evaluates both).
+
+The quantized cast uses the same policy/format machinery as training, so a
+LOTION checkpoint serves through the identical code path it was optimized
+for.  (The packed-int4 Pallas matmul lives in repro.kernels.wq_matmul and
+is benchmarked separately; the engine itself keeps dequantized weights,
+which is exact for correctness purposes.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantConfig, cast_params
+from repro.models.lm import LMConfig, init_cache, lm_decode, lm_prefill
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    weights: str = "fp32"          # fp32 | rtn:<fmt> | rr:<fmt>
+    block_size: int = -1
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 => greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: LMConfig, params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = self._prepare(params)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm_decode(p, cfg, c, t, pos))
+        self._prefill = jax.jit(
+            lambda p, t, cl: lm_prefill(p, cfg, t, cache_len=cl),
+            static_argnums=(2,))
+
+    def _prepare(self, params):
+        w = self.scfg.weights
+        if w == "fp32":
+            return params
+        mode, fmt_name = w.split(":")
+        qcfg = QuantConfig(method="ptq", fmt_name=fmt_name,
+                           block_size=self.scfg.block_size)
+        key = jax.random.PRNGKey(self.scfg.seed)
+        return cast_params(params, qcfg.fmt, qcfg.policy,
+                           qcfg.block_size, mode=mode, key=key)
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 max_new_tokens: Optional[int] = None) -> List[List[int]]:
+        """Greedy/temperature generation for a batch of token prompts."""
+        mnt = max_new_tokens or self.scfg.max_new_tokens
+        b = len(prompts)
+        lens = [len(p) for p in prompts]
+        max_len = max(lens)
+        cache_len = max_len + mnt
+        # left-pad with token 0 so every prompt ends at position max_len-1
+        toks = np.zeros((b, max_len), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, max_len - len(p):] = p
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache_len)
+
+        key = jax.random.PRNGKey(self.scfg.seed + 1)
+        out = [[] for _ in range(b)]
+        pos = jnp.full((b,), max_len - 1, jnp.int32)
+        tok = self._sample(logits[:, 0], key)
+        for t in range(mnt):
+            for i in range(b):
+                out[i].append(int(tok[i]))
+            pos = pos + 1
+            logits, cache = self._decode(self.params, cache, tok[:, None], pos)
+            key = jax.random.fold_in(key, t)
+            tok = self._sample(logits[:, 0], key)
+        return out
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,10 @@
+"""Training substrate: step construction, quantized eval, driver loop."""
+
+from .compress import ef_compress, wire_bytes
+from .loop import (TrainConfig, cross_entropy, make_eval_fn, make_loss_fn,
+                   make_train_step, run_loop)
+from .state import init_state
+
+__all__ = ["TrainConfig", "make_train_step", "make_loss_fn", "make_eval_fn",
+           "cross_entropy", "run_loop", "init_state", "ef_compress",
+           "wire_bytes"]

@@ -1,0 +1,175 @@
+"""Training loop: step construction (quant modes + LOTION penalty +
+microbatching + clipping + EF compression), quantized evaluation, and the
+fault-tolerant driver loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantConfig, cast_params, forward_params, penalty
+from repro.models.lm import LMConfig, lm_forward
+from repro.optim import clip_by_global_norm
+from repro.train.compress import ef_compress
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    clip_norm: float = 1.0
+    n_microbatches: int = 1
+    ef_compress: bool = False
+    ef_block: int = 256
+    seed: int = 0
+    attn_chunk: int = 0      # 0 = full-score attention; >0 = streaming chunks
+    logit_chunk: int = 0     # 0 = full logits; >0 = chunked head+CE (remat)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE in nats.  logits: (b, l, [c,] v) fp32; labels: (b, l[, c]).
+
+    The gold logit is extracted with an iota==label mask (not
+    take_along_axis): elementwise on the logits layout, so a vocab-sharded
+    logits tensor stays sharded and the reduction lowers to one small
+    all-reduce under GSPMD instead of an all-gather of the logits.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(cfg: LMConfig, tcfg: TrainConfig):
+    from repro.models.lm import lm_loss
+
+    def loss_fn(params, batch, fisher, rng):
+        fwd = forward_params(tcfg.quant, params, rng)
+        ce = lm_loss(fwd, cfg, batch["tokens"], batch["labels"],
+                     image_embeds=batch.get("image_embeds"),
+                     attn_chunk=tcfg.attn_chunk or None,
+                     logit_chunk=tcfg.logit_chunk or None)
+        pen = penalty(tcfg.quant, params, fisher)
+        return ce + pen, {"ce": ce, "penalty": pen}
+    return loss_fn
+
+
+def make_train_step(cfg: LMConfig, tcfg: TrainConfig, optimizer,
+                    loss_fn: Optional[Callable] = None,
+                    grad_shardings=None):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (jit-able,
+    pjit-compatible: all collectives emerge from GSPMD sharding).
+
+    ``grad_shardings``: optional pytree of NamedSharding matching params;
+    constrains the gradient tree (and hence the scan-backward gradient
+    accumulators, via backward propagation into the loop carry) — without
+    it GSPMD can leave stacked-layer gradients replicated, blowing HBM.
+    """
+    loss_fn = loss_fn or make_loss_fn(cfg, tcfg)
+
+    def train_step(state, batch):
+        params = state["params"]
+        rng = jax.random.fold_in(jax.random.PRNGKey(tcfg.seed), state["step"])
+        fisher = optimizer.fisher(state["opt"])
+        if fisher is None:
+            fisher = jax.tree.map(jnp.zeros_like, params)
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if tcfg.n_microbatches > 1:
+            def micro(c, mb):
+                (l, aux), g = grad_fn(params, mb, fisher, rng)
+                acc_l, acc_g = c
+                return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), aux
+
+            n = tcfg.n_microbatches
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+            zero_g = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), auxs = jax.lax.scan(micro, (0.0, zero_g), mbs)
+            loss = loss / n
+            grads = jax.tree.map(lambda g: g / n, grads)
+            aux = jax.tree.map(lambda a: a.mean(), auxs)
+        else:
+            (loss, aux), grads = grad_fn(params, batch, fisher, rng)
+
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+
+        new_state = dict(state)
+        if tcfg.ef_compress:
+            grads, new_err = ef_compress(grads, state["ef_err"], tcfg.ef_block)
+            new_state["ef_err"] = new_err
+
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        new_state.update(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+        return new_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# Quantized evaluation (the paper's headline metric)
+# --------------------------------------------------------------------------
+
+def make_eval_fn(cfg: LMConfig, qcfg: QuantConfig):
+    """Returns eval_fn(params, batch, mode, key) -> CE, where mode selects
+    fp32 / RTN-quantized / RR-rounded parameters."""
+
+    def eval_fn(params, batch, mode: str = "fp32", key=None):
+        if mode == "fp32":
+            p = params
+        else:
+            p = cast_params(params, qcfg.fmt, qcfg.policy, qcfg.block_size,
+                            mode=mode, key=key)
+        logits = lm_forward(p, cfg, batch["tokens"],
+                            image_embeds=batch.get("image_embeds"))
+        return cross_entropy(logits, batch["labels"])
+
+    return eval_fn
+
+
+# --------------------------------------------------------------------------
+# Driver loop with telemetry + checkpoint/restart hooks
+# --------------------------------------------------------------------------
+
+def run_loop(train_step, state, pipeline, n_steps: int,
+             eval_every: int = 0, eval_hook: Optional[Callable] = None,
+             ckpt_every: int = 0, ckpt_hook: Optional[Callable] = None,
+             log_every: int = 50, log: Callable = print,
+             straggler_pct: float = 95.0) -> Dict[str, Any]:
+    """Generic driver: telemetry (step-time percentiles for straggler
+    detection), periodic eval + checkpoint.  Resumes from state['step']."""
+    history = []
+    times = []
+    start = int(state["step"])
+    step_jit = jax.jit(train_step, donate_argnums=(0,))
+    for _ in range(start, n_steps):
+        batch = next(pipeline)
+        t0 = time.perf_counter()
+        state, metrics = step_jit(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        step = int(state["step"])
+        if log_every and step % log_every == 0:
+            p50, p95 = (np.percentile(times[-200:], 50),
+                        np.percentile(times[-200:], straggler_pct))
+            log(f"step {step:6d} loss {float(metrics['loss']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"dt_p50 {p50*1e3:.1f}ms p95 {p95*1e3:.1f}ms")
+        if eval_every and eval_hook and step % eval_every == 0:
+            history.append((step, eval_hook(state)))
+        if ckpt_every and ckpt_hook and step % ckpt_every == 0:
+            ckpt_hook(state)
+    return {"state": state, "history": history, "step_times": times}

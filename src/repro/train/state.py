@@ -1,0 +1,19 @@
+"""Train state (a plain dict pytree — trivially checkpointable)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(params, optimizer, ef_compress: bool = False) -> Dict[str, Any]:
+    state = {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if ef_compress:
+        state["ef_err"] = jax.tree.map(jnp.zeros_like, params)
+    return state
