@@ -18,7 +18,7 @@ from repro.data import DataPipeline, lm_batch, markov_ce_floor, permutation_tabl
 from repro.models.lm import LMConfig, lm_init
 from repro.optim import adamw, cosine_with_warmup
 from repro.train import (TrainConfig, init_state, make_eval_fn,
-                         make_train_step, run_loop)
+                         make_optimizer, make_train_step, run_loop)
 from .common import emit, time_call
 
 CFG = LMConfig(name="bench-lm", n_layers=4, d_model=128, n_heads=4,
@@ -33,7 +33,8 @@ POLICY = QuantPolicy(min_size=256)
 def train_one(method: str, fmt: str, lam: float = 0.0, seed: int = 0):
     qcfg = QuantConfig(method=method, fmt_name=fmt, lam=lam, policy=POLICY)
     tcfg = TrainConfig(quant=qcfg, seed=seed)
-    opt = adamw(cosine_with_warmup(3e-3, 20, STEPS), weight_decay=0.0)
+    opt = make_optimizer(tcfg, adamw(cosine_with_warmup(3e-3, 20, STEPS),
+                                     weight_decay=0.0))
     params = lm_init(jax.random.PRNGKey(seed), CFG)
     state = init_state(params, opt)
     step = make_train_step(CFG, tcfg, opt)

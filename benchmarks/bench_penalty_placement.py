@@ -1,0 +1,86 @@
+"""Step-time: loss-side vs decoupled LOTION penalty at 1/4/8 microbatches.
+
+The loss-side placement re-traverses the penalty (forward + backward)
+once per microbatch inside the ``lax.scan``; the decoupled placement
+applies the closed-form gradient exactly once per step, after the scan.
+Each cell emits the measured step time plus ``penalty_evals_per_step``,
+derived structurally from the jaxpr: the penalty math (the ``floor`` of
+``fmt.neighbors``) appears in the microbatch scan body for loss placement
+only — the bench asserts the decoupled body is penalty-free.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantConfig, QuantPolicy
+from repro.data import lm_batch, permutation_table
+from repro.models.lm import LMConfig, lm_init
+from repro.optim import adamw, cosine_with_warmup
+from repro.train import TrainConfig, init_state, make_optimizer, make_train_step
+from .common import emit, time_call
+
+CFG = LMConfig(name="bench-placement", n_layers=4, d_model=128, n_heads=4,
+               n_kv_heads=2, d_ff=256, vocab=256, head_dim=32,
+               dtype=jnp.float32, remat=False)
+BATCH, SEQ = 16, 64
+LAM = 1e4
+POLICY = QuantPolicy(min_size=256)
+
+
+def _penalty_in_scan(step, state, batch) -> bool:
+    """True iff the penalty math runs inside the microbatch scan body.
+
+    Marker: ``floor`` only enters the step through ``fmt.neighbors`` (the
+    quantization-cell bracket) — the LM forward/backward and CE have none.
+    """
+    jaxpr = jax.make_jaxpr(step)(state, batch)
+    scans = [eq for eq in jaxpr.eqns if eq.primitive.name == "scan"]
+    return any("floor" in str(eq.params["jaxpr"]) for eq in scans)
+
+
+def bench_one(placement: str, n_micro: int):
+    qcfg = QuantConfig(method="lotion", fmt_name="int4", lam=LAM,
+                       policy=POLICY, penalty_placement=placement)
+    tcfg = TrainConfig(quant=qcfg, n_microbatches=n_micro)
+    opt = make_optimizer(tcfg, adamw(cosine_with_warmup(3e-3, 20, 1000),
+                                     weight_decay=0.0))
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    state = init_state(params, opt)
+    step = make_train_step(CFG, tcfg, opt)
+    perm = permutation_table(0, CFG.vocab)
+    batch = lm_batch(0, 0, BATCH, SEQ, CFG.vocab, perm)
+
+    if n_micro > 1:
+        in_scan = _penalty_in_scan(step, state, batch)
+        evals = n_micro if in_scan else 1
+    else:
+        in_scan = False
+        evals = 1
+    if placement == "decoupled":
+        assert not in_scan, "decoupled penalty leaked into the scan body"
+        assert evals == 1
+
+    fn = jax.jit(step)
+    us = time_call(fn, state, batch, n_warmup=2, n_iter=10)
+    return us, evals
+
+
+def main(fast: bool = False):
+    micro = (1, 4) if fast else (1, 4, 8)
+    times = {}
+    for placement in ("loss", "decoupled"):
+        for n in micro:
+            us, evals = bench_one(placement, n)
+            times[(placement, n)] = us
+            emit(f"penalty_placement_{placement}_mb{n}", us,
+                 f"penalty_evals_per_step={evals}")
+    for n in micro:
+        lo, de = times[("loss", n)], times[("decoupled", n)]
+        emit(f"penalty_placement_speedup_mb{n}", de,
+             f"decoupled_vs_loss={lo / de:.3f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,8 +19,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
 
-    from . import (bench_fp4, bench_kernels, bench_lm_quant, bench_quadratic,
-                   bench_twolayer)
+    from . import (bench_fp4, bench_kernels, bench_lm_quant,
+                   bench_penalty_placement, bench_quadratic, bench_twolayer)
 
     benches = {
         "kernels": bench_kernels.main,
@@ -28,6 +28,8 @@ def main() -> None:
         "twolayer": bench_twolayer.main,
         "lm_quant": (lambda: bench_lm_quant.main(fast=args.fast)),
         "fp4": bench_fp4.main,
+        "penalty_placement": (
+            lambda: bench_penalty_placement.main(fast=args.fast)),
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -12,7 +12,8 @@ from repro.core import QuantConfig, QuantPolicy
 from repro.data import DataPipeline, lm_batch, markov_ce_floor, permutation_table
 from repro.models.lm import LMConfig, lm_init
 from repro.optim import adamw, cosine_with_warmup
-from repro.train import TrainConfig, init_state, make_eval_fn, make_train_step, run_loop
+from repro.train import (TrainConfig, init_state, make_eval_fn,
+                         make_optimizer, make_train_step, run_loop)
 import jax.numpy as jnp
 
 
@@ -36,10 +37,12 @@ def main():
     for method, lam in [("lotion", args.lam), ("qat", 0.0), ("ptq", 0.0)]:
         qcfg = QuantConfig(method=method, fmt_name=args.fmt, lam=lam,
                            policy=policy)
-        opt = adamw(cosine_with_warmup(3e-3, 20, args.steps))
+        tcfg = TrainConfig(quant=qcfg)
+        # the chain owns clip/penalty state: build once, share with the step
+        opt = make_optimizer(tcfg, adamw(cosine_with_warmup(3e-3, 20, args.steps)))
         params = lm_init(jax.random.PRNGKey(0), cfg)
         state = init_state(params, opt)
-        step = make_train_step(cfg, TrainConfig(quant=qcfg), opt)
+        step = make_train_step(cfg, tcfg, opt)
         pipe = DataPipeline(batch_fn, prefetch=0)
         out = run_loop(step, state, pipe, args.steps, log_every=100)
         state = out["state"]

@@ -23,7 +23,8 @@ from repro.core import QuantConfig, QuantPolicy
 from repro.data import DataPipeline, lm_batch, permutation_table
 from repro.models.lm import lm_init, param_count
 from repro.optim import adamw, cosine_with_warmup
-from repro.train import TrainConfig, init_state, make_eval_fn, make_train_step, run_loop
+from repro.train import (TrainConfig, init_state, make_eval_fn,
+                         make_optimizer, make_train_step, run_loop)
 
 
 def main():
@@ -38,6 +39,11 @@ def main():
                     choices=["fp32", "ptq", "qat", "rat", "lotion"])
     ap.add_argument("--fmt", default="int4")
     ap.add_argument("--lam", type=float, default=1000.0)
+    ap.add_argument("--placement", default=None,
+                    choices=["loss", "decoupled"],
+                    help="LOTION penalty placement (default: decoupled — "
+                         "closed-form gradient applied once per step, "
+                         "outside clipping and the microbatch scan)")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -47,12 +53,14 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     qcfg = QuantConfig(method=args.method, fmt_name=args.fmt, lam=args.lam,
                        policy=QuantPolicy(min_size=256 if args.smoke else 1024))
-    tcfg = TrainConfig(quant=qcfg)
-    opt = adamw(cosine_with_warmup(args.lr, max(args.steps // 20, 5), args.steps),
-                weight_decay=0.0)
+    tcfg = TrainConfig(quant=qcfg, penalty_placement=args.placement)
+    opt = make_optimizer(tcfg, adamw(
+        cosine_with_warmup(args.lr, max(args.steps // 20, 5), args.steps),
+        weight_decay=0.0))
 
     params = lm_init(jax.random.PRNGKey(0), cfg)
-    print(f"# {cfg.name}: {param_count(params):,} params, method={args.method}")
+    print(f"# {cfg.name}: {param_count(params):,} params, method={args.method} "
+          f"placement={tcfg.placement}")
     state = init_state(params, opt)
 
     start = 0

@@ -73,9 +73,15 @@ def lotion_penalty(
     w_const = jax.lax.stop_gradient(blocked)
     s_const = jax.lax.stop_gradient(s)
     lo_f, hi_f = fmt.neighbors(w_const, s_const)
-    # piecewise-constant codes; re-attach (possibly differentiable) scale
-    lo = jax.lax.stop_gradient(lo_f / s_const) * s
-    hi = jax.lax.stop_gradient(hi_f / s_const) * s
+    if differentiate_scale:
+        # piecewise-constant codes; re-attach the differentiable scale
+        lo = jax.lax.stop_gradient(lo_f / s_const) * s
+        hi = jax.lax.stop_gradient(hi_f / s_const) * s
+    else:
+        # constant scale: take the bracket values directly — the /s*s
+        # round-trip is a lossy no-op that would put the loss-side value an
+        # ulp off the closed-form path in lotion_penalty_and_grad
+        lo, hi = lo_f, hi_f
 
     var = (hi - blocked) * (blocked - lo)
     return 0.5 * jnp.sum(f_blocked * var)
@@ -86,17 +92,25 @@ def lotion_penalty_and_grad(
     fisher: Array,
     fmt,
     block_size: int = -1,
+    lam: float = 1.0,
 ) -> Tuple[Array, Array]:
     """Closed-form (value, grad) of :func:`lotion_penalty` with
     stop-gradded scale — the math the fused Pallas kernel implements.
 
-    grad_i = 1/2 * fisher_i * (lo_i + hi_i - 2 w_i)
+    grad_i = 1/2 * lam * fisher_i * (lo_i + hi_i - 2 w_i)
+
+    ``lam`` is folded into the cotangent *before* the products so the
+    returned grad is the bit-exact float expression reverse-mode autodiff
+    produces for ``lam * lotion_penalty(w, ...)`` — that is what lets the
+    decoupled optimizer-side placement reproduce loss-side parameter
+    updates bitwise.  The returned value is unscaled (multiply by ``lam``
+    for the loss-side-comparable number).
     """
     fisher = jax.lax.stop_gradient(fisher)
     lo, hi = quantize.rr_neighbors(w, fmt, block_size)
-    var = (hi - w) * (w - lo)
-    value = 0.5 * jnp.sum(fisher * var)
-    grad = 0.5 * fisher * (lo + hi - 2.0 * w)
+    value = 0.5 * jnp.sum(fisher * ((hi - w) * (w - lo)))
+    ct = (0.5 * lam) * fisher
+    grad = ct * (hi - w) - ct * (w - lo)
     return value, grad
 
 

@@ -24,6 +24,7 @@ from .formats import get_format
 from .policy import QuantPolicy
 
 METHODS = ("fp32", "ptq", "qat", "rat", "lotion")
+PENALTY_PLACEMENTS = ("loss", "decoupled")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,11 +35,19 @@ class QuantConfig:
     lam: float = 0.0              # LOTION lambda (paper sweeps 3e3..1e5)
     differentiate_scale: bool = False
     use_kernel: bool = False      # fused Pallas penalty kernel
+    # "decoupled": closed-form penalty gradient applied once per step as an
+    # optimizer-side update transform (outside clipping + microbatch scan);
+    # "loss": seed-era behavior, penalty added to the loss and autodiffed
+    # per microbatch.  See DESIGN.md §2.
+    penalty_placement: str = "decoupled"
     policy: QuantPolicy = dataclasses.field(default_factory=QuantPolicy)
 
     def __post_init__(self):
         if self.method not in METHODS:
             raise ValueError(f"method {self.method!r} not in {METHODS}")
+        if self.penalty_placement not in PENALTY_PLACEMENTS:
+            raise ValueError(f"penalty_placement {self.penalty_placement!r} "
+                             f"not in {PENALTY_PLACEMENTS}")
 
     @property
     def fmt(self):
@@ -88,13 +97,17 @@ def penalty(cfg: QuantConfig, params, fisher) -> jnp.ndarray:
                 x, f, fmt, bs, differentiate_scale=cfg.differentiate_scale
             )
 
-    total = jnp.zeros((), dtype=jnp.float32)
-    flat, _ = jax.tree_util.tree_flatten_with_path(params)
-    flat_f = jax.tree_util.tree_flatten(fisher)[0]
-    for i, (path, x) in enumerate(flat):
-        if cfg.policy.eligible(path, x):
-            total = total + _pen(path, x, flat_f[i]).astype(jnp.float32)
-    return cfg.lam * total
+    # tree-mapped: per-leaf scalars reduced in one stacked sum instead of
+    # a graph of n_leaves sequential scalar adds
+    zero = jnp.zeros((), dtype=jnp.float32)
+    pens = jax.tree_util.tree_map_with_path(
+        lambda path, x, f: (_pen(path, x, f).astype(jnp.float32)
+                            if cfg.policy.eligible(path, x) else zero),
+        params, fisher)
+    leaves = jax.tree_util.tree_leaves(pens)
+    if not leaves:
+        return zero
+    return cfg.lam * jnp.sum(jnp.stack(leaves))
 
 
 def cast_params(params, fmt, policy: QuantPolicy, block_size: int = -1,

@@ -171,7 +171,16 @@ def unpack_int4(packed: Array, n: int) -> Array:
 
 def quantize_store(w: Array, fmt, block_size: int = -1):
     """Quantize to storage form: (codes, scales, meta) for checkpoints /
-    serving.  Codes are int8 (int formats) or uint8 codebook indices."""
+    serving.  Codes are int8 (int formats) or uint8 codebook indices.
+
+    ``block_size=-1`` uses the same per-matrix :func:`matrix_axes` scales
+    as :func:`cast_rtn`/:func:`rr_neighbors` — NOT one scale over the
+    flattened tensor — so a stacked (L, a, b) leaf round-trips through
+    checkpoints/serving with exactly the values training saw."""
+    if block_size == -1:
+        s = fmt.scale(_absmax_pertensor(w))
+        codes = fmt.quantize_codes(w, s)
+        return codes, s, dict(shape=w.shape, n_pad=0, block_size=-1)
     blocked, shape, n_pad = _block_view(w, block_size)
     absmax = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True)
     s = fmt.scale(absmax)
@@ -180,5 +189,10 @@ def quantize_store(w: Array, fmt, block_size: int = -1):
 
 
 def dequantize_store(codes: Array, scales: Array, meta, fmt) -> Array:
+    if meta["block_size"] == -1 and codes.shape == tuple(meta["shape"]):
+        # per-matrix keepdims scales broadcast directly against codes
+        return fmt.dequantize(codes, scales)
+    # blockwise layout — including legacy per-tensor artifacts whose codes
+    # were stored as one flat (1, padded_n) block
     w = fmt.dequantize(codes, scales[..., None])
     return _unblock(w, tuple(meta["shape"]), meta["n_pad"])

@@ -120,19 +120,36 @@ def fix_divisibility(mesh, spec: P, shape) -> P:
     return P(*out)
 
 
+# optimizer-chain state keys holding param-shaped trees (AdamW moments,
+# EF-compress carried error): everything after the marker is a param path
+_OPT_TREE_KEYS = ("mu", "nu", "err")
+
+
 def state_shardings(mesh, state_shapes, *, fsdp: bool = True):
     """NamedSharding pytree for the full train state ({params, opt, step}).
 
     Optimizer moments mirror their parameter's sharding (ZeRO posture).
+    ``opt`` may be a flat optimizer dict (legacy) or an update-transform
+    chain state — a tuple of link states like
+    ``({"gnorm"}, {"err": <params>}, {"penalty"}, {"mu"/"nu": <params>})``;
+    param-shaped trees are found by the mu/nu/err path marker, everything
+    else (counters, metric scalars) replicates.
     """
     def spec_for(path, x):
         name = _leaf_name(path)
-        if name.startswith("params"):
+        parts = name.split("/")
+        if parts[0] == "params":
             sub = path[1:]
-        elif name.startswith("opt/mu") or name.startswith("opt/nu"):
-            sub = path[2:]
-        elif name.startswith("ef_err"):
+        elif parts[0] == "ef_err":            # legacy layout
             sub = path[1:]
+        elif parts[0] == "opt":
+            sub = None
+            for i, seg in enumerate(parts):
+                if seg in _OPT_TREE_KEYS:
+                    sub = path[i + 1:]
+                    break
+            if sub is None or x.ndim == 0:
+                return NamedSharding(mesh, P())   # count, gnorm, penalty
         else:
             return NamedSharding(mesh, P())   # step, counters
         spec = fix_divisibility(

@@ -1,3 +1,3 @@
-from .ops import lotion_penalty_fused
+from .ops import lotion_penalty_fused, lotion_penalty_fused_vg
 
-__all__ = ["lotion_penalty_fused"]
+__all__ = ["lotion_penalty_fused", "lotion_penalty_fused_vg"]

@@ -84,6 +84,15 @@ def _fused(w, fisher, fmt_name: str, block_size: int):
     return jnp.sum(pen), flat.reshape(shape)
 
 
+def lotion_penalty_fused_vg(w, fisher, fmt_name: str = "int4",
+                            block_size: int = 256):
+    """Fused (value, grad) in one kernel pass — the decoupled
+    optimizer-side entry point: no custom_vjp detour, no autodiff
+    re-traversal.  ``grad`` is the closed-form a.e. derivative
+    ``1/2 fisher (lo + hi - 2w)`` with stop-gradded scale."""
+    return _fused(w, fisher, fmt_name, block_size)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def lotion_penalty_fused(w, fisher, fmt_name: str = "int4",
                          block_size: int = 256):

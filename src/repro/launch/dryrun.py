@@ -39,7 +39,7 @@ from repro.launch.hlo_analysis import analyze_collectives, roofline_terms  # noq
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models.lm import lm_decode, lm_prefill  # noqa: E402
 from repro.optim import adamw, cosine_with_warmup  # noqa: E402
-from repro.train import TrainConfig, make_train_step  # noqa: E402
+from repro.train import TrainConfig, make_optimizer, make_train_step  # noqa: E402
 
 HBM_PER_CHIP = 16e9   # v5e
 
@@ -49,6 +49,16 @@ TRAIN_MICROBATCHES = {"dbrx-132b": 16, "moonshot-v1-16b-a3b": 8,
                       "gemma3-12b": 8, "llama-3.2-vision-11b": 8}
 # per-arch train attention chunk (smaller tile = smaller fp32 score buffers)
 ATTN_CHUNK_TRAIN = {"dbrx-132b": 512}
+
+
+def _cost_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: older
+    releases return a one-element list of per-device dicts, newer ones the
+    dict itself."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
 
 
 def active_param_count(cfg) -> tuple:
@@ -155,14 +165,15 @@ def lower_cell(arch: str, shape_id: str, *, multi_pod: bool,
     t0 = time.time()
     with mesh:
         if kind == "train":
-            opt = adamw(cosine_with_warmup(3e-4, 100, 10000),
-                        weight_decay=0.0)
             tcfg = TrainConfig(
                 quant=QuantConfig(method="lotion", fmt_name="int4",
                                   lam=lam, block_size=block_size),
                 attn_chunk=attn_chunk_train, logit_chunk=logit_chunk,
                 n_microbatches=n_microbatches)
-            state_abs = sp.state_specs(cfg)
+            # one chain for state specs AND the step (structures must agree)
+            opt = make_optimizer(tcfg, adamw(
+                cosine_with_warmup(3e-4, 100, 10000), weight_decay=0.0))
+            state_abs = sp.state_specs(cfg, tcfg)
             state_sh = state_shardings(mesh, state_abs, fsdp=fsdp)
             step = make_train_step(cfg, tcfg, opt,
                                    grad_shardings=state_sh["params"])
@@ -216,7 +227,7 @@ def lower_cell(arch: str, shape_id: str, *, multi_pod: bool,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     clear_constraints()
     set_cost_mode(False)
 
@@ -280,7 +291,7 @@ def run_cell(arch, shape_id, multi_pod, args, out_fh=None):
         mem = compiled.memory_analysis()
         print(f"== {label}")
         print(mem)                          # proves it fits
-        print({k: v for k, v in compiled.cost_analysis().items()
+        print({k: v for k, v in _cost_dict(compiled).items()
                if k in ("flops", "bytes accessed")})
         # 2) cost accounting: two cheap fully-unrolled lowerings at R'=1
         # and R'=2 repeats give per-repeat (B) and fixed (F) costs;

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs import SHAPES, get_config
 from repro.models.lm import LMConfig, init_cache, lm_init
 from repro.optim import adamw, cosine_with_warmup
-from repro.train import init_state
+from repro.train import TrainConfig, init_state, make_optimizer
 
 
 def sds(shape, dtype):
@@ -34,11 +34,18 @@ def train_batch_specs(cfg: LMConfig, batch: int, seq: int) -> Dict[str, Any]:
     return specs
 
 
-def state_specs(cfg: LMConfig):
-    """Abstract train state (params + AdamW moments + step)."""
-    opt = adamw(cosine_with_warmup(1e-3, 100, 10000))
+def state_specs(cfg: LMConfig, tcfg: Optional[TrainConfig] = None):
+    """Abstract train state (params + optimizer-chain state + step).
+
+    The chain structure depends on the train config (EF compression,
+    decoupled-LOTION link), so pass the SAME ``tcfg`` the step will use;
+    the default matches ``make_train_step``'s default chain for a plain
+    ``TrainConfig()``.
+    """
+    tx = make_optimizer(tcfg if tcfg is not None else TrainConfig(),
+                        adamw(cosine_with_warmup(1e-3, 100, 10000)))
     return jax.eval_shape(
-        lambda k: init_state(lm_init(k, cfg), opt), jax.random.PRNGKey(0))
+        lambda k: init_state(lm_init(k, cfg), tx), jax.random.PRNGKey(0))
 
 
 def params_specs(cfg: LMConfig):

@@ -36,8 +36,8 @@ from repro.distributed.context import set_constraints  # noqa: E402
 from repro.launch import specs as sp  # noqa: E402
 from repro.models.lm import lm_init  # noqa: E402
 from repro.optim import adamw, cosine_with_warmup  # noqa: E402
-from repro.train import (TrainConfig, init_state, make_train_step,  # noqa: E402
-                         run_loop)
+from repro.train import (TrainConfig, init_state, make_optimizer,  # noqa: E402
+                         make_train_step, run_loop)
 
 
 def main():
@@ -53,6 +53,9 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--placement", default=None,
+                    choices=["loss", "decoupled"],
+                    help="LOTION penalty placement (default: decoupled)")
     args = ap.parse_args()
 
     if args.mesh:
@@ -65,8 +68,11 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     qcfg = QuantConfig(method=args.method, fmt_name="int4", lam=args.lam,
                        policy=QuantPolicy(min_size=256 if args.smoke else 1024))
-    tcfg = TrainConfig(quant=qcfg, n_microbatches=args.microbatches)
-    opt = adamw(cosine_with_warmup(args.lr, 5, args.steps))
+    tcfg = TrainConfig(quant=qcfg, n_microbatches=args.microbatches,
+                       penalty_placement=args.placement)
+    # the full update chain (clip -> [lotion] -> adamw core): one object
+    # drives init_state, the sharding specs, and the step
+    opt = make_optimizer(tcfg, adamw(cosine_with_warmup(args.lr, 5, args.steps)))
 
     state_abs = jax.eval_shape(
         lambda k: init_state(lm_init(k, cfg), opt), jax.random.PRNGKey(0))

@@ -1,13 +1,22 @@
-"""Optimizers (no external deps): AdamW, SGD+momentum, schedules, clipping.
+"""Optimizers (no external deps): a composable update-transform chain
+(optax-style ``UpdateTransform`` + ``chain``), AdamW/SGD cores with
+back-compat ``Optimizer`` wrappers, schedules, clipping, and the decoupled
+optimizer-side LOTION penalty link.
 
 AdamW's second moment ``nu`` doubles as the empirical-Fisher diagonal for
-the LOTION regularizer (paper §4.3), which is why the optimizer state is a
-plain dict the train loop can reach into.
+the LOTION regularizer (paper §4.3); ``chain(...).fisher(state)`` finds it
+through the composed optimizer state.
 """
 
-from .adamw import adamw, sgd
+from .adamw import Optimizer, adamw, adamw_core, sgd, sgd_core
+from .clip import clip_by_global_norm, clip_global_norm, global_norm
+from .lotion import lotion_decoupled
 from .schedule import constant, cosine_with_warmup, linear_warmup
-from .clip import clip_by_global_norm, global_norm
+from .transform import (UpdateTransform, apply_updates, as_transform, chain,
+                        identity)
 
-__all__ = ["adamw", "sgd", "cosine_with_warmup", "constant", "linear_warmup",
-           "clip_by_global_norm", "global_norm"]
+__all__ = ["Optimizer", "adamw", "adamw_core", "sgd", "sgd_core",
+           "cosine_with_warmup", "constant", "linear_warmup",
+           "clip_by_global_norm", "clip_global_norm", "global_norm",
+           "UpdateTransform", "chain", "apply_updates", "as_transform",
+           "identity", "lotion_decoupled"]

@@ -1,6 +1,17 @@
-"""AdamW and SGD(+momentum), optax-style (init/update pair) but dict-state
-so the LOTION train loop can read the second moment as the empirical
-Fisher diagonal."""
+"""AdamW and SGD(+momentum) as chainable update-transform cores, plus thin
+back-compat ``Optimizer`` wrappers.
+
+The cores (``adamw_core`` / ``sgd_core``) are :class:`UpdateTransform`s:
+they consume gradient-convention updates and emit the (negative) parameter
+step to be added by ``apply_updates``.  State stays a plain dict so the
+LOTION machinery can read the second moment ``nu`` as the empirical-Fisher
+diagonal through the chain's ``fisher`` accessor.
+
+The wrappers preserve the seed-era ``(grads, state, params) ->
+(new_params, new_state)`` calling convention bit-for-bit (``p - x`` and
+``p + (-x)`` are the same float op), and expose their core as
+``.transform`` so ``make_optimizer``/``chain`` can compose them.
+"""
 
 from __future__ import annotations
 
@@ -10,16 +21,30 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from .transform import UpdateTransform, apply_updates
+
 
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
+    """Back-compat wrapper: params-returning update + the underlying core."""
+
     init: Callable
     update: Callable   # (grads, state, params) -> (new_params, new_state)
     fisher: Callable   # state -> Fisher-diagonal pytree (or None)
+    transform: Optional[UpdateTransform] = None
 
 
-def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
-          weight_decay: float = 0.0) -> Optimizer:
+def _wrap(core: UpdateTransform) -> Optimizer:
+    def update(grads, state, params):
+        updates, new_state = core.update(grads, state, params)
+        return apply_updates(params, updates), new_state
+
+    return Optimizer(init=core.init, update=update, fisher=core.fisher,
+                     transform=core)
+
+
+def adamw_core(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+               weight_decay: float = 0.0) -> UpdateTransform:
     """AdamW with decoupled weight decay.  ``nu`` is the bias-uncorrected
     EMA of squared gradients = the empirical-Fisher diagonal LOTION uses."""
 
@@ -30,7 +55,7 @@ def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
             "count": jnp.zeros((), jnp.int32),
         }
 
-    def update(grads, state, params):
+    def update(grads, state, params=None, **_):
         count = state["count"] + 1
         mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
         nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
@@ -41,19 +66,19 @@ def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
 
         def step(p, m, v):
             upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-            return p - lr * (upd + weight_decay * p)
+            return -(lr * (upd + weight_decay * p))
 
-        new_params = jax.tree.map(step, params, mu, nu)
-        return new_params, {"mu": mu, "nu": nu, "count": count}
+        updates = jax.tree.map(step, params, mu, nu)
+        return updates, {"mu": mu, "nu": nu, "count": count}
 
     def fisher(state):
         return state["nu"]
 
-    return Optimizer(init=init, update=update, fisher=fisher)
+    return UpdateTransform(init=init, update=update, fisher=fisher)
 
 
-def sgd(lr_fn, momentum: float = 0.0, fisher_decay: Optional[float] = None
-        ) -> Optimizer:
+def sgd_core(lr_fn, momentum: float = 0.0,
+             fisher_decay: Optional[float] = None) -> UpdateTransform:
     """SGD with optional momentum.  When ``fisher_decay`` is set, the state
     additionally tracks a g^2 EMA so LOTION works with SGD (the paper's
     synthetic experiments train with SGD/GD)."""
@@ -66,7 +91,7 @@ def sgd(lr_fn, momentum: float = 0.0, fisher_decay: Optional[float] = None
             st["nu"] = jax.tree.map(jnp.zeros_like, params)
         return st
 
-    def update(grads, state, params):
+    def update(grads, state, params=None, **_):
         count = state["count"] + 1
         lr = lr_fn(count)
         new_state = {"count": count}
@@ -80,10 +105,23 @@ def sgd(lr_fn, momentum: float = 0.0, fisher_decay: Optional[float] = None
             nu = jax.tree.map(lambda v, g: fisher_decay * v + (1 - fisher_decay) * g * g,
                               state["nu"], grads)
             new_state["nu"] = nu
-        new_params = jax.tree.map(lambda p, g: p - lr * g, params, step_dir)
-        return new_params, new_state
+        updates = jax.tree.map(lambda g: -(lr * g), step_dir)
+        return updates, new_state
 
     def fisher(state):
         return state.get("nu")
 
-    return Optimizer(init=init, update=update, fisher=fisher)
+    return UpdateTransform(init=init, update=update, fisher=fisher)
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    """Back-compat AdamW wrapper around :func:`adamw_core`."""
+    return _wrap(adamw_core(lr_fn, b1=b1, b2=b2, eps=eps,
+                            weight_decay=weight_decay))
+
+
+def sgd(lr_fn, momentum: float = 0.0, fisher_decay: Optional[float] = None
+        ) -> Optimizer:
+    """Back-compat SGD wrapper around :func:`sgd_core`."""
+    return _wrap(sgd_core(lr_fn, momentum=momentum, fisher_decay=fisher_decay))

@@ -1,9 +1,11 @@
-"""Global-norm gradient clipping."""
+"""Global-norm gradient clipping (function + chainable transform)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from .transform import UpdateTransform
 
 
 def global_norm(tree) -> jnp.ndarray:
@@ -15,3 +17,22 @@ def clip_by_global_norm(tree, max_norm: float):
     norm = global_norm(tree)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
     return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def clip_global_norm(max_norm: float) -> UpdateTransform:
+    """Chain link for :func:`clip_by_global_norm`.
+
+    The observed pre-clip norm is kept in state under ``"gnorm"`` so the
+    train step can surface it as a metric.  With ``max_norm=inf`` the
+    multiply-by-1.0 is a bitwise no-op, which is what makes the
+    loss-side/decoupled equivalence test exact.
+    """
+
+    def init(params):
+        return {"gnorm": jnp.zeros((), jnp.float32)}
+
+    def update(updates, state, params=None, **_):
+        clipped, norm = clip_by_global_norm(updates, max_norm)
+        return clipped, {"gnorm": norm}
+
+    return UpdateTransform(init=init, update=update)

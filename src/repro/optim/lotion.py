@@ -1,0 +1,90 @@
+"""Decoupled optimizer-side LOTION: the Eq. 3 penalty as a chain link.
+
+Instead of routing ``lambda * 1/2 sum f (hi-w)(w-lo)`` through the loss
+and autodiff (re-traversed once per microbatch inside the scan, and
+distorted by global-norm clipping), this transform adds the closed-form
+a.e. gradient ``1/2 lambda f (lo + hi - 2w)`` directly to the update —
+the weight-decay treatment AdamW gives L2 (see DESIGN.md §2, and
+Schoenbauer et al., "Custom Gradient Estimators are Straight-Through
+Estimators in Disguise", for why the *update rule* is the first-class
+object in quantized training).
+
+The penalty is computed exactly once per step, outside the microbatch
+scan and outside clipping.  The Fisher diagonal arrives through the chain
+as the ``fisher=`` extra (the train step reads it from downstream
+optimizer state *before* the update — the same pre-step ``nu`` the
+loss-side path sees).  With ``use_kernel=True`` the fused Pallas kernel
+returns (value, grad) in one pass, so the regularizer costs one read of
+(w, fisher) and one write of grad — no autodiff re-traversal at all.
+
+Gradient form: :func:`repro.core.lotion.lotion_penalty_and_grad` mirrors
+the exact float expression autodiff produces for the loss-side penalty,
+so with ``clip_norm=inf`` and ``n_microbatches=1`` the two placements
+produce bit-identical parameter updates (asserted in
+tests/test_transform.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import get_format
+from repro.core.lotion import lotion_penalty_and_grad
+from repro.core.policy import QuantPolicy
+
+from .transform import UpdateTransform
+
+
+def lotion_decoupled(fmt, lam: float, block_size: int = -1,
+                     use_kernel: bool = False,
+                     policy: Optional[QuantPolicy] = None) -> UpdateTransform:
+    """Decoupled LOTION penalty link.
+
+    ``fmt`` is a format name ("int4", "fp4", ...) or format object.  The
+    scaled penalty value ``lambda * 1/2 sum f (hi-w)(w-lo)`` is kept in
+    state under ``"penalty"`` for metric parity with the loss-side number.
+    Only the stop-gradded-scale penalty has a closed form; use
+    ``penalty_placement="loss"`` for ``differentiate_scale=True``.
+    """
+    fmt = get_format(fmt) if isinstance(fmt, str) else fmt
+    fmt_name = fmt.name
+    policy = policy if policy is not None else QuantPolicy()
+
+    def init(params):
+        return {"penalty": jnp.zeros((), jnp.float32)}
+
+    def update(updates, state, params=None, fisher=None, **_):
+        if params is None:
+            raise ValueError("lotion_decoupled needs params (chain must "
+                             "pass them through)")
+        if lam == 0.0:
+            return updates, {"penalty": jnp.zeros((), jnp.float32)}
+        if fisher is None:
+            fisher = jax.tree.map(jnp.zeros_like, params)
+
+        values = []
+
+        def leaf(path, g, w, f):
+            if not policy.eligible(path, w):
+                return g
+            if use_kernel:
+                from repro.kernels.lotion_reg import ops as reg_ops
+                value, grad = reg_ops.lotion_penalty_fused_vg(
+                    w, f, fmt_name, block_size)
+                values.append(value.astype(jnp.float32))
+                return g + lam * grad
+            value, grad = lotion_penalty_and_grad(w, f, fmt, block_size,
+                                                  lam=lam)
+            values.append(value.astype(jnp.float32))
+            return g + grad
+
+        new_updates = jax.tree_util.tree_map_with_path(
+            leaf, updates, params, fisher)
+        pen = (lam * jnp.sum(jnp.stack(values)) if values
+               else jnp.zeros((), jnp.float32))
+        return new_updates, {"penalty": pen}
+
+    return UpdateTransform(init=init, update=update, tag="lotion_decoupled")

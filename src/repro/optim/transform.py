@@ -1,0 +1,119 @@
+"""Composable update transforms (optax-style ``init``/``update`` pairs).
+
+An :class:`UpdateTransform` maps a gradient-shaped pytree of *updates* to a
+new pytree of updates, threading its own state; :func:`chain` composes
+transforms left-to-right; :func:`apply_updates` adds the final updates to
+the parameters.  The train step is one chain::
+
+    clip -> [ef_compress] -> [lotion_decoupled] -> adamw_core
+
+so cross-cutting concerns (clipping, gradient compression, the LOTION
+penalty) are links that can be reordered, dropped, or inserted without
+touching the step function.  Crucially this is what lets the LOTION
+regularizer run *outside* global-norm clipping and *once per step* outside
+the microbatch scan (see DESIGN.md §2).
+
+Conventions
+-----------
+* ``update(updates, state, params=None, **extras) -> (updates, new_state)``.
+  Transforms that don't need ``params`` or extras must still accept them.
+* ``extras`` carries per-step side inputs; the train loop passes
+  ``fisher=...`` (the empirical-Fisher diagonal read from chained optimizer
+  state *before* the update) for the LOTION link.
+* Updates use the gradient sign convention until the terminal optimizer
+  core, which emits the (negative) step: ``apply_updates`` always *adds*.
+* Chain state is a tuple of link states — a plain pytree, so it
+  checkpoints, shards, and ``eval_shape``s exactly like any other state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+
+
+def _no_fisher(state) -> None:
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateTransform:
+    """An optax-style (init, update) pair.
+
+    ``fisher`` maps the transform's state to the empirical-Fisher diagonal
+    pytree it tracks (or None) — how the LOTION link finds the second
+    moment of a downstream Adam core through :func:`chain`.
+    """
+
+    init: Callable                      # params -> state
+    update: Callable                    # (updates, state, params=None, **extras)
+    fisher: Callable = _no_fisher       # state -> fisher pytree | None
+    links: Optional[Tuple] = None       # set by chain(); None for leaf transforms
+    tag: Optional[str] = None           # identity marker for chain validation
+
+
+def chain(*transforms: UpdateTransform) -> UpdateTransform:
+    """Compose transforms left-to-right; state is the tuple of link states."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(updates, state, params=None, **extras):
+        if not isinstance(state, (tuple, list)) or len(state) != len(transforms):
+            raise ValueError(
+                f"chain of {len(transforms)} links expects a state tuple of "
+                f"the same length, got {type(state).__name__} of length "
+                f"{len(state)} — was the state initialized with this chain?")
+        new_states = []
+        for t, s in zip(transforms, state):
+            updates, s = t.update(updates, s, params, **extras)
+            new_states.append(s)
+        return updates, tuple(new_states)
+
+    def fisher(state):
+        for t, s in zip(transforms, state):
+            f = t.fisher(s)
+            if f is not None:
+                return f
+        return None
+
+    return UpdateTransform(init=init, update=update, fisher=fisher,
+                           links=tuple(transforms))
+
+
+def identity() -> UpdateTransform:
+    """The do-nothing transform (useful as a placeholder link)."""
+    return UpdateTransform(
+        init=lambda params: (),
+        update=lambda updates, state, params=None, **_: (updates, state))
+
+
+def apply_updates(params, updates):
+    """``params + updates`` leafwise (the terminal core emits negative steps)."""
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def as_transform(opt: Any) -> UpdateTransform:
+    """Coerce an optimizer-ish object to an :class:`UpdateTransform`.
+
+    * an ``UpdateTransform`` passes through;
+    * a back-compat :class:`repro.optim.adamw.Optimizer` wrapper contributes
+      its underlying core (``.transform``);
+    * any other object with optax-like ``init``/``update`` returning
+      ``(new_params, new_state)`` is adapted by differencing (NOT bit-exact
+      against applying the object directly — prefer exposing a core).
+    """
+    if isinstance(opt, UpdateTransform):
+        return opt
+    core = getattr(opt, "transform", None)
+    if isinstance(core, UpdateTransform):
+        return core
+
+    def update(updates, state, params=None, **_):
+        new_params, new_state = opt.update(updates, state, params)
+        return jax.tree.map(lambda a, b: a - b, new_params, params), new_state
+
+    return UpdateTransform(init=opt.init, update=update,
+                           fisher=getattr(opt, "fisher", _no_fisher))

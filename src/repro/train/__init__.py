@@ -1,10 +1,10 @@
 """Training substrate: step construction, quantized eval, driver loop."""
 
-from .compress import ef_compress, wire_bytes
+from .compress import ef_compress, ef_transform, wire_bytes
 from .loop import (TrainConfig, cross_entropy, make_eval_fn, make_loss_fn,
-                   make_train_step, run_loop)
+                   make_optimizer, make_train_step, run_loop)
 from .state import init_state
 
 __all__ = ["TrainConfig", "make_train_step", "make_loss_fn", "make_eval_fn",
-           "cross_entropy", "run_loop", "init_state", "ef_compress",
-           "wire_bytes"]
+           "make_optimizer", "cross_entropy", "run_loop", "init_state",
+           "ef_compress", "ef_transform", "wire_bytes"]

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import INT8, cast_rtn
 from repro.core.formats import bits_of
+from repro.optim.transform import UpdateTransform
 
 
 def ef_compress(grads, err, block_size: int = 256) -> Tuple:
@@ -35,6 +36,22 @@ def ef_compress(grads, err, block_size: int = 256) -> Tuple:
     qs, es = zip(*(one(g, e) for g, e in zip(flat_g, flat_e)))
     return (jax.tree_util.tree_unflatten(treedef, qs),
             jax.tree_util.tree_unflatten(treedef, es))
+
+
+def ef_transform(block_size: int = 256) -> UpdateTransform:
+    """Chain-link adapter for :func:`ef_compress`: the carried quantization
+    error lives in transform state (``{"err": ...}``) instead of a separate
+    ``state["ef_err"]`` entry, so it checkpoints/shards with the rest of
+    the optimizer chain state."""
+
+    def init(params):
+        return {"err": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(updates, state, params=None, **_):
+        compressed, err = ef_compress(updates, state["err"], block_size)
+        return compressed, {"err": err}
+
+    return UpdateTransform(init=init, update=update)
 
 
 def wire_bytes(grads, block_size: int = 256) -> int:

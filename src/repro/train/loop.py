@@ -1,10 +1,24 @@
 """Training loop: step construction (quant modes + LOTION penalty +
 microbatching + clipping + EF compression), quantized evaluation, and the
 fault-tolerant driver loop.
+
+The step is built on a composable update-transform chain
+(:mod:`repro.optim.transform`)::
+
+    grads -> clip -> [ef_compress] -> [lotion_decoupled] -> optimizer core
+
+:func:`make_optimizer` assembles the chain from a ``TrainConfig`` and a
+base optimizer; :func:`make_train_step` only computes gradients (the
+microbatch scan) and runs the chain.  With the default
+``penalty_placement="decoupled"``, the LOTION penalty is applied via its
+closed-form gradient exactly once per step — outside the microbatch scan
+and outside clipping (DESIGN.md §2); ``penalty_placement="loss"`` keeps
+the seed-era loss-side behavior.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Callable, Dict, Optional
@@ -15,8 +29,9 @@ import numpy as np
 
 from repro.core import QuantConfig, cast_params, forward_params, penalty
 from repro.models.lm import LMConfig, lm_forward
-from repro.optim import clip_by_global_norm
-from repro.train.compress import ef_compress
+from repro.optim import (UpdateTransform, as_transform, apply_updates, chain,
+                         clip_global_norm, global_norm, lotion_decoupled)
+from repro.train.compress import ef_transform
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +44,65 @@ class TrainConfig:
     seed: int = 0
     attn_chunk: int = 0      # 0 = full-score attention; >0 = streaming chunks
     logit_chunk: int = 0     # 0 = full logits; >0 = chunked head+CE (remat)
+    # None = follow quant.penalty_placement; "loss"/"decoupled" overrides
+    penalty_placement: Optional[str] = None
+
+    def __post_init__(self):
+        from repro.core.modes import PENALTY_PLACEMENTS
+        if (self.penalty_placement is not None
+                and self.penalty_placement not in PENALTY_PLACEMENTS):
+            raise ValueError(
+                f"penalty_placement {self.penalty_placement!r} not in "
+                f"{PENALTY_PLACEMENTS} (or None to follow quant config)")
+
+    @property
+    def placement(self) -> str:
+        return self.penalty_placement or self.quant.penalty_placement
+
+
+def make_optimizer(tcfg: TrainConfig, base) -> UpdateTransform:
+    """Assemble the per-step update chain from a base optimizer.
+
+    ``base`` may be an :class:`UpdateTransform` core, a back-compat
+    ``Optimizer`` wrapper (its ``.transform`` core is used), or an already
+    assembled chain (``links`` set) which passes through untouched.  Use
+    the returned transform for BOTH ``init_state`` and
+    ``make_train_step`` — the chain owns clip/EF/penalty state.
+    """
+    base_t = as_transform(base)
+    q = tcfg.quant
+    wants_lotion = (q.method == "lotion" and q.lam != 0.0
+                    and tcfg.placement == "decoupled")
+    if base_t.links is not None:
+        # pre-assembled chain: used as-is, but it must agree with tcfg on
+        # the penalty placement — a mismatch would silently train without
+        # (or doubly with) the regularizer
+        has_lotion = any(t.tag == "lotion_decoupled" for t in base_t.links)
+        if wants_lotion and not has_lotion:
+            raise ValueError(
+                "pre-assembled chain has no lotion_decoupled link but the "
+                "train config wants the decoupled LOTION penalty — build "
+                "the chain with make_optimizer, or add the link")
+        if has_lotion and not wants_lotion:
+            raise ValueError(
+                "pre-assembled chain contains a lotion_decoupled link but "
+                "the train config does not use the decoupled placement — "
+                "the penalty would be double-counted or misconfigured")
+        return base_t
+    links = [clip_global_norm(tcfg.clip_norm)]
+    if tcfg.ef_compress:
+        links.append(ef_transform(tcfg.ef_block))
+    if wants_lotion:
+        if q.differentiate_scale:
+            raise ValueError(
+                "decoupled LOTION has no closed form for a differentiable "
+                "scale; use penalty_placement='loss' with "
+                "differentiate_scale=True")
+        links.append(lotion_decoupled(q.fmt_name, q.lam, q.block_size,
+                                      use_kernel=q.use_kernel,
+                                      policy=q.policy))
+    links.append(base_t)
+    return chain(*links)
 
 
 def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
@@ -49,15 +123,35 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
 def make_loss_fn(cfg: LMConfig, tcfg: TrainConfig):
     from repro.models.lm import lm_loss
 
+    loss_side = tcfg.placement == "loss"
+
     def loss_fn(params, batch, fisher, rng):
         fwd = forward_params(tcfg.quant, params, rng)
         ce = lm_loss(fwd, cfg, batch["tokens"], batch["labels"],
                      image_embeds=batch.get("image_embeds"),
                      attn_chunk=tcfg.attn_chunk or None,
                      logit_chunk=tcfg.logit_chunk or None)
-        pen = penalty(tcfg.quant, params, fisher)
-        return ce + pen, {"ce": ce, "penalty": pen}
+        if loss_side:
+            pen = penalty(tcfg.quant, params, fisher)
+            return ce + pen, {"ce": ce, "penalty": pen}
+        # decoupled placement: the penalty never touches the loss — it is
+        # applied once per step by the lotion_decoupled chain link
+        return ce, {"ce": ce}
     return loss_fn
+
+
+def _link_metrics(opt_state, out=None) -> Dict[str, jnp.ndarray]:
+    """Collect per-link metric scalars ("gnorm", "penalty") from (possibly
+    nested) chain state.  Trace-time Python over the pytree containers."""
+    out = {} if out is None else out
+    if isinstance(opt_state, (tuple, list)):
+        for s in opt_state:
+            _link_metrics(s, out)
+    elif isinstance(opt_state, dict):
+        for key in ("gnorm", "penalty"):
+            if key in opt_state:
+                out[key] = opt_state[key]
+    return out
 
 
 def make_train_step(cfg: LMConfig, tcfg: TrainConfig, optimizer,
@@ -66,17 +160,24 @@ def make_train_step(cfg: LMConfig, tcfg: TrainConfig, optimizer,
     """Returns ``train_step(state, batch) -> (state, metrics)`` (jit-able,
     pjit-compatible: all collectives emerge from GSPMD sharding).
 
+    ``optimizer`` is anything :func:`make_optimizer` accepts; the SAME
+    chain must have produced ``state["opt"]`` (build it once, pass it to
+    both ``init_state`` and here).
+
     ``grad_shardings``: optional pytree of NamedSharding matching params;
     constrains the gradient tree (and hence the scan-backward gradient
     accumulators, via backward propagation into the loop carry) — without
     it GSPMD can leave stacked-layer gradients replicated, blowing HBM.
     """
+    tx = make_optimizer(tcfg, optimizer)
     loss_fn = loss_fn or make_loss_fn(cfg, tcfg)
 
     def train_step(state, batch):
         params = state["params"]
         rng = jax.random.fold_in(jax.random.PRNGKey(tcfg.seed), state["step"])
-        fisher = optimizer.fisher(state["opt"])
+        # pre-update Fisher (AdamW's nu), read through the chain — the same
+        # f both penalty placements see
+        fisher = tx.fisher(state["opt"])
         if fisher is None:
             fisher = jax.tree.map(jnp.zeros_like, params)
 
@@ -102,17 +203,22 @@ def make_train_step(cfg: LMConfig, tcfg: TrainConfig, optimizer,
         if grad_shardings is not None:
             grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
 
-        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        updates, new_opt = tx.update(grads, state["opt"], params,
+                                     fisher=fisher)
+        new_params = apply_updates(params, updates)
 
         new_state = dict(state)
-        if tcfg.ef_compress:
-            grads, new_err = ef_compress(grads, state["ef_err"], tcfg.ef_block)
-            new_state["ef_err"] = new_err
-
-        new_params, new_opt = optimizer.update(grads, state["opt"], params)
         new_state.update(params=new_params, opt=new_opt,
                          step=state["step"] + 1)
-        metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+
+        metrics = {"loss": loss, **aux}
+        link = _link_metrics(new_opt)
+        metrics["grad_norm"] = link.get("gnorm", None)
+        if metrics["grad_norm"] is None:
+            metrics["grad_norm"] = global_norm(grads)
+        if "penalty" in link:       # decoupled placement
+            metrics["penalty"] = link["penalty"]
+            metrics["loss"] = loss + link["penalty"]
         return new_state, metrics
 
     return train_step
@@ -143,15 +249,24 @@ def make_eval_fn(cfg: LMConfig, qcfg: QuantConfig):
 # Driver loop with telemetry + checkpoint/restart hooks
 # --------------------------------------------------------------------------
 
+# step-time telemetry window: percentiles look at <= the last 200 entries,
+# so a bounded deque keeps week-long runs from growing an unbounded list
+TELEMETRY_WINDOW = 200
+
+
 def run_loop(train_step, state, pipeline, n_steps: int,
              eval_every: int = 0, eval_hook: Optional[Callable] = None,
              ckpt_every: int = 0, ckpt_hook: Optional[Callable] = None,
              log_every: int = 50, log: Callable = print,
              straggler_pct: float = 95.0) -> Dict[str, Any]:
     """Generic driver: telemetry (step-time percentiles for straggler
-    detection), periodic eval + checkpoint.  Resumes from state['step']."""
+    detection), periodic eval + checkpoint.  Resumes from state['step'].
+
+    ``step_times`` in the result holds (at most) the trailing
+    ``TELEMETRY_WINDOW`` step durations.
+    """
     history = []
-    times = []
+    times = collections.deque(maxlen=TELEMETRY_WINDOW)
     start = int(state["step"])
     step_jit = jax.jit(train_step, donate_argnums=(0,))
     for _ in range(start, n_steps):
@@ -163,8 +278,9 @@ def run_loop(train_step, state, pipeline, n_steps: int,
         times.append(dt)
         step = int(state["step"])
         if log_every and step % log_every == 0:
-            p50, p95 = (np.percentile(times[-200:], 50),
-                        np.percentile(times[-200:], straggler_pct))
+            window = np.asarray(times)
+            p50, p95 = (np.percentile(window, 50),
+                        np.percentile(window, straggler_pct))
             log(f"step {step:6d} loss {float(metrics['loss']):.4f} "
                 f"gnorm {float(metrics['grad_norm']):.3f} "
                 f"dt_p50 {p50*1e3:.1f}ms p95 {p95*1e3:.1f}ms")
@@ -172,4 +288,4 @@ def run_loop(train_step, state, pipeline, n_steps: int,
             history.append((step, eval_hook(state)))
         if ckpt_every and ckpt_hook and step % ckpt_every == 0:
             ckpt_hook(state)
-    return {"state": state, "history": history, "step_times": times}
+    return {"state": state, "history": history, "step_times": list(times)}

@@ -1,8 +1,16 @@
-"""Train state (a plain dict pytree — trivially checkpointable)."""
+"""Train state (a plain dict pytree — trivially checkpointable).
+
+``optimizer`` is anything with an ``init(params)``: an
+:class:`~repro.optim.UpdateTransform` chain from
+:func:`~repro.train.make_optimizer` (preferred — clip/EF/penalty state
+lives inside ``state["opt"]``) or a back-compat ``Optimizer`` wrapper.
+Build the chain ONCE and pass the same object here and to
+``make_train_step`` so the state structures agree.
+"""
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -15,5 +23,7 @@ def init_state(params, optimizer, ef_compress: bool = False) -> Dict[str, Any]:
         "step": jnp.zeros((), jnp.int32),
     }
     if ef_compress:
+        # legacy layout only: with a make_optimizer chain the EF error
+        # feedback lives inside state["opt"] and this flag must stay False
         state["ef_err"] = jax.tree.map(jnp.zeros_like, params)
     return state

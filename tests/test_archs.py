@@ -13,7 +13,7 @@ from repro.core import QuantConfig
 from repro.data import lm_batch, permutation_table
 from repro.models.lm import lm_decode, lm_forward, lm_init, lm_prefill
 from repro.optim import adamw, constant
-from repro.train import TrainConfig, init_state, make_train_step
+from repro.train import TrainConfig, init_state, make_optimizer, make_train_step
 
 
 def _batch(cfg, b=2, l=16, key=0):
@@ -46,9 +46,9 @@ def test_smoke_forward_shapes(arch):
 def test_smoke_train_step(arch):
     cfg = get_smoke_config(arch)
     params = lm_init(jax.random.PRNGKey(0), cfg)
-    opt = adamw(constant(1e-3))
     tcfg = TrainConfig(quant=QuantConfig(method="lotion", fmt_name="int4",
                                          lam=100.0))
+    opt = make_optimizer(tcfg, adamw(constant(1e-3)))
     state = init_state(params, opt)
     step = jax.jit(make_train_step(cfg, tcfg, opt))
     batch = _batch(cfg)
@@ -99,9 +99,9 @@ def test_activation_quantization_extension():
     batch = _batch(cfg)
     logits = lm_forward(params, cfg, batch["tokens"])
     assert np.isfinite(np.asarray(logits, np.float32)).all()
-    opt = adamw(constant(1e-3))
     tcfg = TrainConfig(quant=QuantConfig(method="lotion", fmt_name="int4",
                                          lam=100.0))
+    opt = make_optimizer(tcfg, adamw(constant(1e-3)))
     step = jax.jit(make_train_step(cfg, tcfg, opt))
     st, m = step(init_state(params, opt), batch)
     assert np.isfinite(float(m["loss"]))

@@ -71,14 +71,14 @@ def test_resume_is_bit_exact(tmp_path):
     from repro.data import lm_batch, permutation_table
     from repro.models.lm import LMConfig, lm_init
     from repro.optim import adamw, constant
-    from repro.train import TrainConfig, init_state, make_train_step
+    from repro.train import (TrainConfig, init_state, make_optimizer,
+                             make_train_step)
 
     cfg = LMConfig(name="r", n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
                    d_ff=64, vocab=32, dtype=jnp.float32, remat=False)
-    opt = adamw(constant(1e-3))
-    step = jax.jit(make_train_step(
-        cfg, TrainConfig(quant=QuantConfig(policy=QuantPolicy(min_size=64))),
-        opt))
+    tcfg = TrainConfig(quant=QuantConfig(policy=QuantPolicy(min_size=64)))
+    opt = make_optimizer(tcfg, adamw(constant(1e-3)))
+    step = jax.jit(make_train_step(cfg, tcfg, opt))
     perm = permutation_table(0, cfg.vocab)
     batches = [lm_batch(0, s, 4, 16, cfg.vocab, perm) for s in range(4)]
 

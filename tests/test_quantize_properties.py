@@ -1,0 +1,57 @@
+"""Hypothesis property tests for the quantization core.
+
+Kept separate from test_quantize.py and guarded with importorskip so the
+tier-1 suite collects (and the deterministic unit tests run) when the
+optional ``hypothesis`` dependency is absent — install the dev extras
+(requirements-dev.txt) to enable these.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (cast_rr, get_format, rr_neighbors,  # noqa: E402
+                        rr_variance)
+from repro.core.quantize import pack_int4, unpack_int4  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), scale=st.floats(1e-3, 1e3),
+       bits=st.sampled_from([2, 4, 8]))
+def test_property_rr_bracketed(seed, scale, bits):
+    """RR output is always one of the two bracketing representables."""
+    fmt = get_format(f"int{bits}")
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    q = cast_rr(w, fmt, jax.random.PRNGKey(seed + 1))
+    lo, hi = rr_neighbors(w, fmt)
+    d = jnp.minimum(jnp.abs(q - lo), jnp.abs(q - hi))
+    assert float(d.max()) < 1e-5 * scale + 1e-8
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), bits=st.sampled_from([2, 4, 8]))
+def test_property_variance_bounds(seed, bits):
+    """0 <= Var[eps] <= (gap/2)^2 with gap = hi - lo."""
+    fmt = get_format(f"int{bits}")
+    w = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * 2
+    var = np.asarray(rr_variance(w, fmt))
+    lo, hi = rr_neighbors(w, fmt)
+    gap = np.asarray(hi - lo)
+    assert (var >= -1e-7).all()
+    assert (var <= (gap / 2) ** 2 + 1e-6).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(1, 500))
+def test_property_pack_unpack_roundtrip(seed, n):
+    codes = jax.random.randint(jax.random.PRNGKey(seed), (n,), -7, 8
+                               ).astype(jnp.int8)
+    packed = pack_int4(codes)
+    assert packed.size == (n + 1) // 2
+    out = unpack_int4(packed, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))

@@ -11,7 +11,7 @@ from repro.data import DataPipeline, lm_batch, markov_tokens, permutation_table
 from repro.models.lm import LMConfig, lm_init
 from repro.optim import adamw, clip_by_global_norm, constant, cosine_with_warmup, sgd
 from repro.train import (TrainConfig, cross_entropy, ef_compress, init_state,
-                         make_train_step, wire_bytes)
+                         make_optimizer, make_train_step, wire_bytes)
 
 CFG = LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
                d_ff=128, vocab=64, dtype=jnp.float32, remat=False)
@@ -64,8 +64,9 @@ def test_microbatch_equivalence():
     for n in (1, 2):
         qc = QuantConfig(policy=POLICY)
         tc = TrainConfig(quant=qc, n_microbatches=n)
-        step = jax.jit(make_train_step(CFG, tc, opt))
-        st, m = step(init_state(params, opt), batch)
+        tx = make_optimizer(tc, opt)
+        step = jax.jit(make_train_step(CFG, tc, tx))
+        st, m = step(init_state(params, tx), batch)
         outs[n] = (np.asarray(jax.tree.leaves(st["params"])[0]),
                    float(m["loss"]))
     np.testing.assert_allclose(outs[1][0], outs[2][0], atol=1e-5)
@@ -96,8 +97,10 @@ def test_train_modes_run_and_penalty_reported():
                         ("lotion", 100.0)]:
         qc = QuantConfig(method=method, fmt_name="int4", lam=lam,
                          policy=POLICY)
-        step = jax.jit(make_train_step(CFG, TrainConfig(quant=qc), opt))
-        st, m = step(init_state(lm_init(jax.random.PRNGKey(0), CFG), opt),
+        tc = TrainConfig(quant=qc)
+        tx = make_optimizer(tc, opt)
+        step = jax.jit(make_train_step(CFG, tc, tx))
+        st, m = step(init_state(lm_init(jax.random.PRNGKey(0), CFG), tx),
                      _batch())
         assert np.isfinite(float(m["loss"])), method
         if method == "lotion":
@@ -113,9 +116,10 @@ def test_lotion_penalty_reduces_quant_gap():
     for method, lam in [("fp32", 0.0), ("lotion", 3000.0)]:
         qc = QuantConfig(method=method, fmt_name="int8", lam=lam,
                          policy=POLICY)
-        step = jax.jit(make_train_step(CFG, TrainConfig(quant=qc), opt),
-                       donate_argnums=(0,))
-        st = init_state(lm_init(jax.random.PRNGKey(0), CFG), opt)
+        tc = TrainConfig(quant=qc)
+        tx = make_optimizer(tc, opt)
+        step = jax.jit(make_train_step(CFG, tc, tx), donate_argnums=(0,))
+        st = init_state(lm_init(jax.random.PRNGKey(0), CFG), tx)
         for i in range(30):
             st, _ = step(st, _batch(i))
         # mean normalized distance-to-lattice over eligible params

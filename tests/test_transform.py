@@ -1,0 +1,247 @@
+"""Update-transform chain + decoupled-LOTION tests: chain composition,
+closed-form vs autodiff penalty gradient, loss-side/decoupled train-step
+bit-equivalence, and chain-state checkpoint round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core import (FP4_E2M1, INT4, QuantConfig, QuantPolicy,
+                        lotion_penalty, lotion_penalty_and_grad)
+from repro.data import lm_batch, permutation_table
+from repro.models.lm import LMConfig, lm_init
+from repro.optim import (UpdateTransform, adamw, adamw_core, apply_updates,
+                         chain, constant, lotion_decoupled, sgd_core)
+from repro.train import TrainConfig, init_state, make_optimizer, make_train_step
+
+CFG = LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+               d_ff=128, vocab=64, dtype=jnp.float32, remat=False)
+POLICY = QuantPolicy(min_size=256)
+
+
+def _batch(step=0, b=8, l=32):
+    perm = permutation_table(0, CFG.vocab)
+    return lm_batch(0, step, b, l, CFG.vocab, perm)
+
+
+# --------------------------------------------------------------------------
+# chain mechanics
+# --------------------------------------------------------------------------
+
+def _stateless(fn):
+    return UpdateTransform(
+        init=lambda params: (),
+        update=lambda u, s, params=None, **_: (jax.tree.map(fn, u), s))
+
+
+def test_chain_applies_left_to_right():
+    double = _stateless(lambda x: 2.0 * x)
+    plus_one = _stateless(lambda x: x + 1.0)
+    tx = chain(double, plus_one)
+    u, _ = tx.update({"w": jnp.asarray(1.0)}, tx.init({"w": jnp.asarray(1.0)}))
+    assert float(u["w"]) == 3.0    # (1*2)+1, not (1+1)*2
+
+
+def test_chain_rejects_mismatched_state():
+    tx2 = chain(_stateless(lambda x: x), _stateless(lambda x: x))
+    tx3 = chain(_stateless(lambda x: x), _stateless(lambda x: x),
+                _stateless(lambda x: x))
+    p = {"w": jnp.zeros(3)}
+    with pytest.raises(ValueError, match="state tuple"):
+        tx3.update(p, tx2.init(p), p)
+    # a legacy dict optimizer state whose key count matches the link count
+    # must hit the diagnostic, not a confusing zip-over-keys TypeError
+    with pytest.raises(ValueError, match="state tuple"):
+        tx2.update(p, {"count": 0, "mu": p}, p)
+
+
+def test_core_matches_legacy_wrapper_bitwise():
+    """adamw() wrapper == apply_updates(adamw_core()) bit-for-bit."""
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    legacy = adamw(constant(1e-2), weight_decay=0.01)
+    core = adamw_core(constant(1e-2), weight_decay=0.01)
+    p1, st1 = legacy.update(g, legacy.init(p), p)
+    u, st2 = core.update(g, core.init(p), p)
+    p2 = apply_updates(p, u)
+    np.testing.assert_array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+    np.testing.assert_array_equal(np.asarray(st1["nu"]["w"]),
+                                  np.asarray(st2["nu"]["w"]))
+
+
+def test_invalid_placement_rejected_loudly():
+    """A typo'd placement must raise, not silently drop the regularizer."""
+    with pytest.raises(ValueError, match="penalty_placement"):
+        QuantConfig(method="lotion", penalty_placement="decoupledd")
+    with pytest.raises(ValueError, match="penalty_placement"):
+        TrainConfig(penalty_placement="decoupledd")
+
+
+def test_mismatched_prebuilt_chain_rejected():
+    """A pre-assembled chain that disagrees with tcfg on the penalty
+    placement is an error, not a silent no-regularizer run."""
+    lotion_tc = TrainConfig(quant=QuantConfig(
+        method="lotion", lam=100.0, policy=POLICY))
+    plain_chain = chain(adamw_core(constant(1e-3)))
+    with pytest.raises(ValueError, match="no lotion_decoupled link"):
+        make_optimizer(lotion_tc, plain_chain)
+    lotion_chain = make_optimizer(lotion_tc, adamw(constant(1e-3)))
+    with pytest.raises(ValueError, match="double-counted"):
+        make_optimizer(TrainConfig(), lotion_chain)
+
+
+def test_chain_fisher_finds_downstream_nu():
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 2.0)}
+    tx = chain(_stateless(lambda x: x), sgd_core(constant(1e-3), fisher_decay=0.5))
+    st = tx.init(p)
+    assert tx.fisher(st) is not None
+    _, st = tx.update(g, st, p)
+    np.testing.assert_allclose(np.asarray(tx.fisher(st)["w"]), 2.0, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# decoupled penalty gradient == autodiff of the loss-side penalty
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", [INT4, FP4_E2M1], ids=lambda f: f.name)
+@pytest.mark.parametrize("bs", [-1, 64])
+def test_decoupled_grad_matches_autodiff(fmt, bs):
+    """Closed-form grad == autodiff grad of lotion_penalty at the same
+    point (stop-grad scale), bitwise, for int4 + fp4, per-tensor +
+    blockwise, lambda folded in."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(k1, (8, 48)) * 2.0
+    f = jnp.abs(jax.random.normal(k2, (8, 48)))
+    lam = 3000.0
+    auto = jax.grad(lambda w: lam * lotion_penalty(w, f, fmt, bs))(w)
+    value, grad = lotion_penalty_and_grad(w, f, fmt, bs, lam=lam)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(grad))
+    ref = float(lotion_penalty(w, f, fmt, bs))
+    assert abs(float(value) - ref) < 1e-5 * max(abs(ref), 1.0)
+
+
+def test_fused_kernel_vg_matches_custom_vjp_path():
+    """The decoupled entry point returns the SAME kernel pass the
+    custom_vjp detour exposes: value == lotion_penalty_fused and grad ==
+    its VJP, bitwise (kernel-vs-closed-form accuracy itself is covered by
+    the masked comparisons in test_kernels.py)."""
+    from repro.kernels.lotion_reg import (lotion_penalty_fused,
+                                          lotion_penalty_fused_vg)
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 128)) * 2.0
+    f = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (16, 128)))
+    value, grad = lotion_penalty_fused_vg(w, f, "int4", 128)
+    ref_v = lotion_penalty_fused(w, f, "int4", 128)
+    ref_g = jax.grad(lambda x: lotion_penalty_fused(x, f, "int4", 128))(w)
+    np.testing.assert_array_equal(np.asarray(value), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(grad), np.asarray(ref_g))
+
+
+# --------------------------------------------------------------------------
+# train-step equivalence + chain checkpointing
+# --------------------------------------------------------------------------
+
+def _run(placement, batches, params, lam=100.0, n_micro=1,
+         clip=float("inf")):
+    qc = QuantConfig(method="lotion", fmt_name="int4", lam=lam,
+                     policy=POLICY, penalty_placement=placement)
+    tc = TrainConfig(quant=qc, clip_norm=clip, n_microbatches=n_micro)
+    tx = make_optimizer(tc, adamw(constant(1e-3)))
+    step = jax.jit(make_train_step(CFG, tc, tx))
+    st = init_state(params, tx)
+    metrics = None
+    for b in batches:
+        st, metrics = step(st, b)
+    return st, metrics
+
+
+def test_train_step_loss_vs_decoupled_bit_identical():
+    """Acceptance: with clip_norm=inf and n_microbatches=1 the decoupled
+    placement produces bit-identical parameter updates to the loss-side
+    path (several steps, so the Fisher is non-zero and the penalty
+    actually bites)."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    batches = [_batch(s) for s in range(4)]
+    st_loss, m_loss = _run("loss", batches, params)
+    st_dec, m_dec = _run("decoupled", batches, params)
+    for a, b in zip(jax.tree.leaves(st_loss["params"]),
+                    jax.tree.leaves(st_dec["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # metric parity: the decoupled penalty value is the loss-side number
+    np.testing.assert_allclose(float(m_loss["penalty"]),
+                               float(m_dec["penalty"]), rtol=1e-6)
+    np.testing.assert_allclose(float(m_loss["loss"]), float(m_dec["loss"]),
+                               rtol=1e-6)
+    assert float(m_dec["penalty"]) > 0.0
+
+
+def test_decoupled_penalty_once_outside_microbatch_scan():
+    """Structural guarantee: with n_microbatches>1 the scan body carries
+    the penalty math for loss placement (floor from fmt.neighbors) but NOT
+    for decoupled — the closed form runs once, after the scan."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+
+    def scan_body_str(placement):
+        qc = QuantConfig(method="lotion", fmt_name="int4", lam=100.0,
+                         policy=POLICY, penalty_placement=placement)
+        tc = TrainConfig(quant=qc, n_microbatches=2)
+        tx = make_optimizer(tc, adamw(constant(1e-3)))
+        step = make_train_step(CFG, tc, tx)
+        jaxpr = jax.make_jaxpr(step)(init_state(params, tx), _batch())
+        scans = [eq for eq in jaxpr.eqns if eq.primitive.name == "scan"]
+        assert scans, "microbatch scan not found"
+        return "\n".join(str(eq.params["jaxpr"]) for eq in scans)
+
+    assert "floor" in scan_body_str("loss")
+    assert "floor" not in scan_body_str("decoupled")
+
+
+def test_decoupled_with_microbatches_and_ef_runs():
+    """Full chain (clip -> ef -> lotion -> adamw) with microbatching: runs,
+    finite, and the EF error state lives inside the chain state."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    qc = QuantConfig(method="lotion", fmt_name="int4", lam=100.0,
+                     policy=POLICY)
+    tc = TrainConfig(quant=qc, n_microbatches=2, ef_compress=True)
+    tx = make_optimizer(tc, adamw(constant(1e-3)))
+    assert len(tx.links) == 4
+    step = jax.jit(make_train_step(CFG, tc, tx))
+    st = init_state(params, tx)
+    assert "ef_err" not in st
+    st, m = step(st, _batch())
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["penalty"]))
+    err_leaves = jax.tree.leaves(st["opt"][1]["err"])
+    assert err_leaves and all(np.isfinite(np.asarray(e)).all()
+                              for e in err_leaves)
+
+
+def test_chain_state_checkpoint_roundtrip(tmp_path):
+    """Chain order/state survives checkpoint save/restore bit-exactly:
+    train 4 steps == train 2, checkpoint, restore, train 2 more — with the
+    full clip->ef->lotion->adamw chain."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    qc = QuantConfig(method="lotion", fmt_name="int4", lam=100.0,
+                     policy=POLICY)
+    tc = TrainConfig(quant=qc, ef_compress=True)
+    tx = make_optimizer(tc, adamw(constant(1e-3)))
+    step = jax.jit(make_train_step(CFG, tc, tx))
+    batches = [_batch(s, b=4, l=16) for s in range(4)]
+
+    st_a = init_state(params, tx)
+    for b in batches:
+        st_a, _ = step(st_a, b)
+
+    st_b = init_state(params, tx)
+    for b in batches[:2]:
+        st_b, _ = step(st_b, b)
+    ckpt.save(str(tmp_path), 2, st_b)
+    st_c, s = ckpt.load(str(tmp_path), jax.eval_shape(lambda: st_b))
+    assert s == 2
+    for b in batches[2:]:
+        st_c, _ = step(st_c, b)
+
+    for a, c in zip(jax.tree.leaves(st_a), jax.tree.leaves(st_c)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
