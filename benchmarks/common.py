@@ -2,10 +2,13 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
+import numpy as np
 
 
 def time_call(fn: Callable, *args, n_warmup: int = 1, n_iter: int = 5):
@@ -19,5 +22,30 @@ def time_call(fn: Callable, *args, n_warmup: int = 1, n_iter: int = 5):
     return (time.perf_counter() - t0) / n_iter * 1e6
 
 
+def time_percentiles(fn: Callable, *args, n_warmup: int = 2,
+                     n_iter: int = 10):
+    """(p50, p95) us per call — per-call sync, for step-time telemetry."""
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return (float(np.percentile(times, 50)), float(np.percentile(times, 95)))
+
+
 def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def write_bench_json(name: str, payload: dict,
+                     out_dir: Optional[str] = None) -> str:
+    """Write a machine-readable ``BENCH_<name>.json`` artifact so future
+    PRs can diff perf numbers instead of re-parsing CSV logs."""
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir or ".", f"BENCH_{name}.json")
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+    return path

@@ -1,8 +1,11 @@
 """Benchmark harness: one module per paper table/figure + kernel microbenches.
 
-Prints ``name,us_per_call,derived`` CSV.  Roofline terms come from the
-dry-run artifacts (launch/dryrun.py --out) — see benchmarks/roofline_table.py
-for the aggregation used in EXPERIMENTS.md.
+Prints ``name,us_per_call,derived`` CSV.  With ``--json-dir`` every bench
+whose ``main`` returns a record additionally lands a machine-readable
+``BENCH_<name>.json`` (step-time p50/p95, structural pass counts, ...) so
+future PRs can diff perf instead of re-parsing logs.  Roofline terms come
+from the dry-run artifacts (launch/dryrun.py --out) — see
+benchmarks/roofline_table.py for the aggregation used in EXPERIMENTS.
 """
 
 from __future__ import annotations
@@ -11,15 +14,19 @@ import argparse
 import sys
 import time
 
+from .common import write_bench_json
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json-dir", default=None,
+                    help="write BENCH_<name>.json artifacts here")
     args = ap.parse_args()
 
-    from . import (bench_fp4, bench_kernels, bench_lm_quant,
+    from . import (bench_fp4, bench_kernels, bench_lm_quant, bench_opt_step,
                    bench_penalty_placement, bench_quadratic, bench_twolayer)
 
     benches = {
@@ -30,6 +37,7 @@ def main() -> None:
         "fp4": bench_fp4.main,
         "penalty_placement": (
             lambda: bench_penalty_placement.main(fast=args.fast)),
+        "opt_step": (lambda: bench_opt_step.main(fast=args.fast)),
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
@@ -38,7 +46,9 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            fn()
+            rec = fn()
+            if args.json_dir is not None and isinstance(rec, dict):
+                print(f"wrote {write_bench_json(name, rec, args.json_dir)}")
         except Exception as e:  # keep the harness going
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}", file=sys.stderr)
             print(f"{name}_failed,0,error={type(e).__name__}")

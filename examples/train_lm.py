@@ -45,13 +45,20 @@ def main():
                          "closed-form gradient applied once per step, "
                          "outside clipping and the microbatch scan)")
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--use-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused Pallas step/penalty kernels (auto: TPU on, "
+                         "CPU/GPU off; 'on' off-TPU runs interpret mode — "
+                         "correctness only, slow)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    use_kernel = {"auto": None, "on": True, "off": False}[args.use_kernel]
     qcfg = QuantConfig(method=args.method, fmt_name=args.fmt, lam=args.lam,
+                       use_kernel=use_kernel,
                        policy=QuantPolicy(min_size=256 if args.smoke else 1024))
     tcfg = TrainConfig(quant=qcfg, penalty_placement=args.placement)
     opt = make_optimizer(tcfg, adamw(

@@ -34,7 +34,12 @@ class QuantConfig:
     block_size: int = -1          # -1 = per-tensor (paper's LLM setting)
     lam: float = 0.0              # LOTION lambda (paper sweeps 3e3..1e5)
     differentiate_scale: bool = False
-    use_kernel: bool = False      # fused Pallas penalty kernel
+    # fused Pallas kernels (penalty + optimizer step).  None = auto: True
+    # on TPU (compiled kernels), False elsewhere (pure-jnp path; the
+    # kernels would only run in slow interpret mode).  Set True/False to
+    # force either path — the escape hatch for debugging or for running
+    # interpret-mode kernels in tests.
+    use_kernel: Optional[bool] = None
     # "decoupled": closed-form penalty gradient applied once per step as an
     # optimizer-side update transform (outside clipping + microbatch scan);
     # "loss": seed-era behavior, penalty added to the loss and autodiffed
@@ -52,6 +57,19 @@ class QuantConfig:
     @property
     def fmt(self):
         return get_format(self.fmt_name)
+
+    @property
+    def kernel_enabled(self) -> bool:
+        """Resolved ``use_kernel``: explicit setting wins; the default is
+        backend-driven (fused Pallas kernels on TPU, jnp elsewhere).
+
+        NOTE: the fused step core changes the optimizer-state pytree
+        STRUCTURE, so under the ``None`` auto-default a checkpoint is
+        backend-specific — pin ``use_kernel`` explicitly when the same
+        checkpoint must restore on both TPU and CPU (DESIGN.md §5)."""
+        if self.use_kernel is not None:
+            return self.use_kernel
+        return jax.default_backend() == "tpu"
 
     @property
     def is_noop(self) -> bool:
@@ -86,7 +104,7 @@ def penalty(cfg: QuantConfig, params, fisher) -> jnp.ndarray:
         return jnp.zeros((), dtype=jnp.float32)
     fmt, bs = cfg.fmt, cfg.block_size
 
-    if cfg.use_kernel:
+    if cfg.kernel_enabled:
         from repro.kernels.lotion_reg import ops as reg_ops
 
         def _pen(path, x, f):

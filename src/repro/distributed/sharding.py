@@ -129,11 +129,15 @@ def state_shardings(mesh, state_shapes, *, fsdp: bool = True):
     """NamedSharding pytree for the full train state ({params, opt, step}).
 
     Optimizer moments mirror their parameter's sharding (ZeRO posture).
-    ``opt`` may be a flat optimizer dict (legacy) or an update-transform
+    ``opt`` may be a flat optimizer dict (legacy), an update-transform
     chain state — a tuple of link states like
-    ``({"gnorm"}, {"err": <params>}, {"penalty"}, {"mu"/"nu": <params>})``;
+    ``({"gnorm"}, {"err": <params>}, {"penalty"}, {"mu"/"nu": <params>})``
+    — or the fused single-pass core's flat dict
+    ``{"mu": <params>, "nu": <params>, "count", "penalty", "gnorm"}``;
     param-shaped trees are found by the mu/nu/err path marker, everything
-    else (counters, metric scalars) replicates.
+    else (counters, metric scalars) replicates.  The fused-kernel state
+    deliberately reuses the same key names so ONE rule set covers both
+    backends (asserted in tests/test_opt_step.py).
     """
     def spec_for(path, x):
         name = _leaf_name(path)

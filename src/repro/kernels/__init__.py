@@ -1,3 +1,19 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+"""Shared Pallas/TPU compatibility helpers for the kernel packages."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams around 0.5;
+# every kernel routes through this alias so the package works on both.
+TPUCompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-portable ``compiler_params`` for ``pl.pallas_call``."""
+    return TPUCompilerParams(**kwargs)

@@ -39,17 +39,25 @@ def _neighbors_fp4(wb, s):
     return lo * s, hi * s
 
 
-def _reg_kernel(w_ref, f_ref, grad_ref, pen_ref, *, qmax, bs, fp4):
-    w = w_ref[...].astype(jnp.float32)
-    f = f_ref[...].astype(jnp.float32)
+def _blockwise_neighbors(w, bs, qmax, fp4):
+    """In-tile blockwise absmax scales + (lo, hi) brackets for a (tm, tn)
+    tile, blocks of ``bs`` along the lane dim.  THE scale convention for
+    every kernel that quantizes in-tile (lotion_reg, opt_step) — one
+    definition so the fused step's penalty can never diverge from the
+    loss-side regularizer kernel."""
     tm, tn = w.shape
     wb = w.reshape(tm, tn // bs, bs)
     absmax = jnp.max(jnp.abs(wb), axis=-1, keepdims=True)
     denom = 6.0 if fp4 else qmax
     s = jnp.where(absmax > 0, absmax / denom, jnp.ones_like(absmax))
     lo, hi = _neighbors_fp4(wb, s) if fp4 else _neighbors_int(wb, s, qmax)
-    lo = lo.reshape(tm, tn)
-    hi = hi.reshape(tm, tn)
+    return lo.reshape(tm, tn), hi.reshape(tm, tn)
+
+
+def _reg_kernel(w_ref, f_ref, grad_ref, pen_ref, *, qmax, bs, fp4):
+    w = w_ref[...].astype(jnp.float32)
+    f = f_ref[...].astype(jnp.float32)
+    lo, hi = _blockwise_neighbors(w, bs, qmax, fp4)
     var = (hi - w) * (w - lo)
     grad_ref[...] = (0.5 * f * (lo + hi - 2.0 * w)).astype(grad_ref.dtype)
     pen_ref[0, 0] = 0.5 * jnp.sum(f * var)

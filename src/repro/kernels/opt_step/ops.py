@@ -1,0 +1,97 @@
+"""Public wrapper: fused optimizer step for one parameter leaf.
+
+Handles the leaf -> (R, C) tiling (same layout contract as the
+``lotion_reg`` wrapper, so the blockwise view matches
+``core.quantize._block_view`` and the per-matrix scale matches
+``matrix_axes`` semantics), stacks the step scalars into the kernel's
+prefetched (1, 8) operand, and vmaps the per-matrix kernel over the
+leading dims of stacked leaves.
+
+Zero padding is inert through the WHOLE fused rule: padded w = g = mu =
+nu = 0 gives lo = hi = 0, penalty grad 0, mu' = nu' = 0, update 0 and
+w' = 0, so slicing the pad off afterwards recovers the exact unpadded
+result (asserted against the oracle in tests/test_opt_step.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import CodebookFormat, get_format
+from repro.core.quantize import _absmax_pertensor
+from repro.kernels.lotion_reg.ops import _interpret, _to_2d
+
+from .opt_step import N_SCALARS, opt_step_pallas
+
+
+def _scalars_row(lr, bc1, bc2, clip_scale, scale):
+    row = jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(bc1, jnp.float32),
+        jnp.asarray(bc2, jnp.float32), jnp.asarray(clip_scale, jnp.float32),
+        jnp.asarray(scale, jnp.float32)])
+    return jnp.concatenate(
+        [row, jnp.zeros((N_SCALARS - row.shape[0],), jnp.float32)]
+    ).reshape(1, N_SCALARS)
+
+
+def fused_opt_step_leaf(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
+                        lam: float, fmt_name: str, block_size: int,
+                        b1: float, b2: float, eps: float,
+                        weight_decay: float, interpret=None):
+    """One fused (clip + LOTION + AdamW) step for one leaf.
+
+    Returns ``(new_w, new_mu, new_nu, pen)`` with ``pen`` the UNSCALED
+    penalty scalar (0 for ``lam == 0``).  ``lr``/``bc1``/``bc2``/
+    ``clip_scale`` are traced step scalars; everything else is static.
+    """
+    interpret = _interpret() if interpret is None else interpret
+    fmt = get_format(fmt_name)
+    fp4 = isinstance(fmt, CodebookFormat)
+    qmax = 6.0 if fp4 else float(fmt.qmax)
+    shape = w.shape
+    hyper = dict(qmax=qmax, fp4=fp4, b1=b1, b2=b2, eps=eps,
+                 weight_decay=weight_decay, lam=lam, interpret=interpret)
+
+    def run_2d(c_width, scale, penalty_mode, args):
+        tiled = [_to_2d(x, c_width) for x in args]
+        n_pad = tiled[0][1]
+        scalars = _scalars_row(lr, bc1, bc2, clip_scale, scale)
+        w2, mu2, nu2, pen = opt_step_pallas(
+            tiled[0][0], tiled[1][0], tiled[2][0], tiled[3][0], scalars,
+            block_size=(block_size if penalty_mode == "block" else -1),
+            penalty_mode=penalty_mode, **hyper)
+
+        def unpad(x2):
+            flat = x2.reshape(-1)
+            if n_pad:
+                flat = flat[:-n_pad]
+            return flat.reshape(shape)
+
+        return unpad(w2), unpad(mu2), unpad(nu2), jnp.sum(pen)
+
+    if lam == 0.0:
+        return run_2d(1024, 0.0, "none", (w, g, mu, nu))
+
+    if block_size == -1:
+        absmax = _absmax_pertensor(w)
+        if absmax.size == 1:
+            scale = jnp.where(absmax > 0, absmax / qmax, 1.0).reshape(())
+            return run_2d(1024, scale.astype(jnp.float32), "scalar",
+                          (w, g, mu, nu))
+        # stacked leaf: one scale per trailing matrix — vmap the
+        # per-matrix kernel over the flattened leading dims
+        mats = [x.reshape((-1,) + shape[-2:]) for x in (w, g, mu, nu)]
+
+        def one(wi, gi, mi, ni):
+            return fused_opt_step_leaf(
+                wi, gi, mi, ni, lr=lr, bc1=bc1, bc2=bc2,
+                clip_scale=clip_scale, lam=lam, fmt_name=fmt_name,
+                block_size=-1, b1=b1, b2=b2, eps=eps,
+                weight_decay=weight_decay, interpret=interpret)
+
+        nw, nm, nn, pens = jax.vmap(one)(*mats)
+        return (nw.reshape(shape), nm.reshape(shape), nn.reshape(shape),
+                jnp.sum(pens))
+
+    return run_2d(block_size, 0.0, "block", (w, g, mu, nu))

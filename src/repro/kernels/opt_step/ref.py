@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused optimizer step: exactly the per-leaf
+math of the unfused ``clip -> lotion_decoupled -> adamw_core`` chain,
+with the step scalars (lr, bias corrections, clip scale) precomputed.
+
+This doubles as the bit-compatible fallback path of
+``fused_lotion_adamw_core(use_kernel=False)``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.formats import get_format
+from repro.core.lotion import lotion_penalty_and_grad
+
+
+def opt_step_ref(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
+                 lam: float, fmt_name: str, block_size: int,
+                 b1: float, b2: float, eps: float,
+                 weight_decay: float) -> Tuple:
+    """Returns ``(new_w, new_mu, new_nu, pen)``; ``pen`` is the UNSCALED
+    penalty value (multiply by ``lam`` for the loss-side number), 0 when
+    ``lam == 0`` (non-eligible leaves / no regularizer)."""
+    g = g * clip_scale
+    if lam != 0.0:
+        pen, grad = lotion_penalty_and_grad(
+            w, nu, get_format(fmt_name), block_size, lam=lam)
+        g = g + grad
+    else:
+        pen = jnp.zeros((), jnp.float32)
+    mu2 = b1 * mu + (1 - b1) * g
+    nu2 = b2 * nu + (1 - b2) * g * g
+    upd = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + eps)
+    new_w = w - lr * (upd + weight_decay * w)
+    return new_w, mu2, nu2, pen.astype(jnp.float32)

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _wq_kernel(x_ref, c_ref, s_ref, o_ref, acc_ref, *, n_k, int4):
     @pl.when(pl.program_id(2) == 0)
@@ -65,6 +67,9 @@ def wq_matmul_pallas(x, codes, scales, *, block_k: int, int4: bool,
     """x (M, K) @ dequant(codes, scales) -> (M, N)."""
     M, K = x.shape
     N = codes.shape[1]
+    # the K tile is LOCKED to the quant block: the scale BlockSpec below
+    # indexes scale rows by the K-*tile* grid index, which covers the right
+    # (block, column) scale row only when one K tile == one quant block.
     tile_k = block_k
     tile_m = min(tile_m, M)
     tile_n = min(tile_n, N)
@@ -90,7 +95,7 @@ def wq_matmul_pallas(x, codes, scales, *, block_k: int, int4: bool,
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, codes, scales)

@@ -163,16 +163,27 @@ def lower_cell(arch: str, shape_id: str, *, multi_pod: bool,
     _constraints(mesh, cfg, batch, fsdp=fsdp, residual=residual)
 
     t0 = time.time()
+    opt_fused = None   # train cells: whether the fused step core was selected
     with mesh:
         if kind == "train":
+            # use_kernel is PINNED off (not left on the backend-driven
+            # auto-default): the dry-run always runs on host placeholder
+            # devices, where the auto-default would silently resolve to
+            # the unfused chain even when modeling a TPU job.  Pinning
+            # makes the modeled optimizer backend explicit and the
+            # recorded opt_fused field truthful — the fused kernel's
+            # traffic is covered structurally by bench_opt_step.py, not
+            # by XLA cost analysis (which can't see inside pallas_call).
             tcfg = TrainConfig(
                 quant=QuantConfig(method="lotion", fmt_name="int4",
-                                  lam=lam, block_size=block_size),
+                                  lam=lam, block_size=block_size,
+                                  use_kernel=False),
                 attn_chunk=attn_chunk_train, logit_chunk=logit_chunk,
                 n_microbatches=n_microbatches)
             # one chain for state specs AND the step (structures must agree)
             opt = make_optimizer(tcfg, adamw(
                 cosine_with_warmup(3e-4, 100, 10000), weight_decay=0.0))
+            opt_fused = opt.applies_updates
             state_abs = sp.state_specs(cfg, tcfg)
             state_sh = state_shardings(mesh, state_abs, fsdp=fsdp)
             step = make_train_step(cfg, tcfg, opt,
@@ -251,6 +262,7 @@ def lower_cell(arch: str, shape_id: str, *, multi_pod: bool,
         "arch": arch, "shape": shape_id, "kind": kind,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "n_devices": n_dev, "kv_quant": kv_quant, "fsdp": fsdp,
+        "opt_fused": opt_fused,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "flops_per_dev": flops, "hbm_bytes_per_dev": hbm_bytes,
         "collectives": coll.to_json(),

@@ -38,9 +38,13 @@ def state_specs(cfg: LMConfig, tcfg: Optional[TrainConfig] = None):
     """Abstract train state (params + optimizer-chain state + step).
 
     The chain structure depends on the train config (EF compression,
-    decoupled-LOTION link), so pass the SAME ``tcfg`` the step will use;
-    the default matches ``make_train_step``'s default chain for a plain
-    ``TrainConfig()``.
+    decoupled-LOTION link, and the fused-kernel core selection — on TPU a
+    ``use_kernel``-resolved config collapses the chain into the flat
+    fused-state dict), so pass the SAME ``tcfg`` the step will use; the
+    default matches ``make_train_step``'s default chain for a plain
+    ``TrainConfig()``.  Selection is deterministic in (tcfg, backend), so
+    a chain rebuilt here from the same tcfg always agrees structurally
+    with the one the dry-run/train script builds.
     """
     tx = make_optimizer(tcfg if tcfg is not None else TrainConfig(),
                         adamw(cosine_with_warmup(1e-3, 100, 10000)))

@@ -74,7 +74,13 @@ def adamw_core(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
     def fisher(state):
         return state["nu"]
 
-    return UpdateTransform(init=init, update=update, fisher=fisher)
+    # meta lets make_optimizer rebuild this core as the fused Pallas
+    # step kernel (same hyperparameters, one HBM pass) when selected
+    return UpdateTransform(init=init, update=update, fisher=fisher,
+                           tag="adamw_core",
+                           meta={"kind": "adamw", "lr_fn": lr_fn, "b1": b1,
+                                 "b2": b2, "eps": eps,
+                                 "weight_decay": weight_decay})
 
 
 def sgd_core(lr_fn, momentum: float = 0.0,

@@ -13,9 +13,16 @@ def global_norm(tree) -> jnp.ndarray:
     return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
 
 
+def clip_scale(norm, max_norm: float) -> jnp.ndarray:
+    """The global-norm clip multiplier.  Exactly 1.0 at ``max_norm=inf``
+    (bitwise no-op).  Shared by the chain link and the fused step kernel
+    so the two backends can never diverge on the clipping float math."""
+    return jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+
+
 def clip_by_global_norm(tree, max_norm: float):
     norm = global_norm(tree)
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    scale = clip_scale(norm, max_norm)
     return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
 
 

@@ -1,0 +1,129 @@
+"""Fused clip + decoupled-LOTION + AdamW optimizer core.
+
+``fused_lotion_adamw_core`` collapses the whole
+``clip_global_norm -> lotion_decoupled -> adamw_core`` chain into ONE
+terminal :class:`~repro.optim.transform.UpdateTransform` whose update is
+a single Pallas kernel pass per leaf (``repro.kernels.opt_step``): one
+read of (w, g, mu, nu), one write of (w', mu', nu'), and a per-tile
+penalty partial.  The only pre-pass left is the global-norm reduction
+(clipping is global by definition — its elementwise *multiply* fuses
+into the kernel as a scalar operand, the reduction cannot).
+
+The core has ``applies_updates=True``: it emits new PARAMETERS, not an
+update step, so the train step skips ``apply_updates`` and the final
+add-pass disappears too.  State is a flat dict
+``{"mu", "nu", "count", "gnorm"[, "penalty"]}`` — ``penalty``/``gnorm``
+are the same reserved metric keys the chain links use, so
+``_link_metrics`` and the sharding rules treat fused and chained state
+identically; ``penalty`` is present only when ``lam != 0`` (a lam=0
+core under loss-side placement must not shadow the loss-aux penalty).
+
+``use_kernel=False`` swaps the kernel for the pure-jnp oracle
+(``kernels.opt_step.ref``) with identical call structure — the
+bit-compatible fallback used off-TPU and in the kernel tests.
+
+Not supported (``make_optimizer`` falls back to the unfused chain):
+EF gradient compression (reorders the stream between clip and the
+penalty) and ``differentiate_scale=True`` (no closed form — loss-side
+placement only, same rule as ``lotion_decoupled``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+
+from .clip import clip_scale, global_norm
+from .transform import UpdateTransform
+
+
+def fused_lotion_adamw_core(lr_fn, b1: float = 0.9, b2: float = 0.95,
+                            eps: float = 1e-8, weight_decay: float = 0.0,
+                            *, fmt_name: str = "int4", lam: float = 0.0,
+                            block_size: int = -1,
+                            clip_norm: float = float("inf"),
+                            policy: Optional[QuantPolicy] = None,
+                            use_kernel: bool = True) -> UpdateTransform:
+    """One-pass fused optimizer step (terminal core, applies updates).
+
+    ``lam == 0`` degenerates to fused clip+AdamW (no neighbor math in
+    the kernel); with ``lam != 0`` eligible leaves additionally get the
+    Eq. 3 closed-form LOTION gradient and the penalty metric.  The
+    per-step scalars (lr, bias corrections, clip scale) are computed
+    once outside and fed to every leaf kernel as one prefetched operand.
+    """
+    policy = policy if policy is not None else QuantPolicy()
+
+    def init(params):
+        st = {
+            "mu": jax.tree.map(jnp.zeros_like, params),
+            "nu": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32),
+            "gnorm": jnp.zeros((), jnp.float32),
+        }
+        # the reserved "penalty" metric key exists ONLY when this core
+        # owns a LOTION term — with lam=0 under loss-side placement the
+        # real penalty flows through the loss aux, and a spurious 0 here
+        # would clobber it in the train-step metrics
+        if lam != 0.0:
+            st["penalty"] = jnp.zeros((), jnp.float32)
+        return st
+
+    def update(grads, state, params=None, **_):
+        if params is None:
+            raise ValueError("fused_lotion_adamw_core needs params")
+        norm = global_norm(grads)
+        cscale = clip_scale(norm, clip_norm)
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+        lr = lr_fn(count)
+
+        if use_kernel:
+            from repro.kernels.opt_step import fused_opt_step_leaf as leaf_fn
+        else:
+            from repro.kernels.opt_step import opt_step_ref as leaf_fn
+
+        pens = []
+
+        def leaf(path, g, w, m, n):
+            leaf_lam = lam if (lam != 0.0 and policy.eligible(path, w)) else 0.0
+            new_w, new_m, new_n, pen = leaf_fn(
+                w, g, m, n, lr=lr, bc1=bc1, bc2=bc2, clip_scale=cscale,
+                lam=leaf_lam, fmt_name=fmt_name, block_size=block_size,
+                b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+            if leaf_lam != 0.0:
+                pens.append(pen.astype(jnp.float32))
+            return (new_w, new_m, new_n)
+
+        out = jax.tree_util.tree_map_with_path(
+            leaf, grads, params, state["mu"], state["nu"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_state = {"mu": new_mu, "nu": new_nu, "count": count,
+                     "gnorm": norm}
+        if lam != 0.0:
+            new_state["penalty"] = (lam * jnp.sum(jnp.stack(pens)) if pens
+                                    else jnp.zeros((), jnp.float32))
+        return new_params, new_state
+
+    def fisher(state):
+        return state["nu"]
+
+    return UpdateTransform(
+        init=init, update=update, fisher=fisher,
+        tag="fused_lotion_adamw", applies_updates=True,
+        meta={"kind": "fused_lotion_adamw", "lr_fn": lr_fn, "b1": b1,
+              "b2": b2, "eps": eps, "weight_decay": weight_decay,
+              "lam": lam, "fmt_name": fmt_name, "block_size": block_size,
+              "clip_norm": clip_norm, "use_kernel": use_kernel,
+              "policy": policy})

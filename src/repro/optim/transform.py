@@ -22,6 +22,8 @@ Conventions
   state *before* the update) for the LOTION link.
 * Updates use the gradient sign convention until the terminal optimizer
   core, which emits the (negative) step: ``apply_updates`` always *adds*.
+  Exception: a terminal core with ``applies_updates=True`` (the fused
+  step kernel) emits NEW PARAMETERS; callers skip ``apply_updates``.
 * Chain state is a tuple of link states — a plain pytree, so it
   checkpoints, shards, and ``eval_shape``s exactly like any other state.
 """
@@ -45,6 +47,17 @@ class UpdateTransform:
     ``fisher`` maps the transform's state to the empirical-Fisher diagonal
     pytree it tracks (or None) — how the LOTION link finds the second
     moment of a downstream Adam core through :func:`chain`.
+
+    ``applies_updates``: a terminal core that writes NEW PARAMETERS (not a
+    step to be added) — the fused optimizer-step kernel emits ``w'``
+    directly from VMEM, and materializing ``w' - w`` just to re-add it
+    would cost the extra full-tensor HBM pass the fusion exists to remove.
+    Such a core is only valid as the LAST link of a chain; the train step
+    skips :func:`apply_updates` for it.
+
+    ``meta``: optional introspection dict for cores (e.g. AdamW exposes
+    ``{"kind": "adamw", "lr_fn": ..., "b1": ...}``) so ``make_optimizer``
+    can rebuild an equivalent fused core from the same hyperparameters.
     """
 
     init: Callable                      # params -> state
@@ -52,10 +65,22 @@ class UpdateTransform:
     fisher: Callable = _no_fisher       # state -> fisher pytree | None
     links: Optional[Tuple] = None       # set by chain(); None for leaf transforms
     tag: Optional[str] = None           # identity marker for chain validation
+    applies_updates: bool = False       # update() returns new params, not a step
+    meta: Optional[dict] = None         # core hyperparameters (introspection)
 
 
 def chain(*transforms: UpdateTransform) -> UpdateTransform:
-    """Compose transforms left-to-right; state is the tuple of link states."""
+    """Compose transforms left-to-right; state is the tuple of link states.
+
+    A transform with ``applies_updates=True`` consumes the update stream
+    (it writes new parameters), so it may only appear as the final link;
+    the chain inherits the flag from it.
+    """
+    for t in transforms[:-1]:
+        if t.applies_updates:
+            raise ValueError(
+                "a transform with applies_updates=True writes new params "
+                "and must be the LAST link of a chain")
 
     def init(params):
         return tuple(t.init(params) for t in transforms)
@@ -80,7 +105,8 @@ def chain(*transforms: UpdateTransform) -> UpdateTransform:
         return None
 
     return UpdateTransform(init=init, update=update, fisher=fisher,
-                           links=tuple(transforms))
+                           links=tuple(transforms),
+                           applies_updates=transforms[-1].applies_updates)
 
 
 def identity() -> UpdateTransform:

@@ -30,7 +30,8 @@ import numpy as np
 from repro.core import QuantConfig, cast_params, forward_params, penalty
 from repro.models.lm import LMConfig, lm_forward
 from repro.optim import (UpdateTransform, as_transform, apply_updates, chain,
-                         clip_global_norm, global_norm, lotion_decoupled)
+                         clip_global_norm, fused_lotion_adamw_core,
+                         global_norm, lotion_decoupled)
 from repro.train.compress import ef_transform
 
 
@@ -68,6 +69,14 @@ def make_optimizer(tcfg: TrainConfig, base) -> UpdateTransform:
     assembled chain (``links`` set) which passes through untouched.  Use
     the returned transform for BOTH ``init_state`` and
     ``make_train_step`` — the chain owns clip/EF/penalty state.
+
+    When the quant config resolves ``use_kernel`` true (auto on TPU) and
+    the base core is AdamW, the whole ``clip -> [lotion] -> adamw`` chain
+    collapses into :func:`~repro.optim.fused_lotion_adamw_core` — one
+    Pallas kernel pass per leaf instead of ~8 tree-wide elementwise HBM
+    passes (DESIGN.md §5).  The unfused jnp chain stays the
+    bit-compatible fallback: EF compression, ``differentiate_scale`` and
+    loss-side lotion placement all route through it.
     """
     base_t = as_transform(base)
     q = tcfg.quant
@@ -89,17 +98,62 @@ def make_optimizer(tcfg: TrainConfig, base) -> UpdateTransform:
                 "the train config does not use the decoupled placement — "
                 "the penalty would be double-counted or misconfigured")
         return base_t
+    if base_t.applies_updates:
+        # pre-built fused core: passes through, but every baked-in config
+        # value the train config also carries must agree (same
+        # no-silent-misconfig rule as above)
+        meta = base_t.meta or {}
+        has_lotion = meta.get("lam", 0.0) != 0.0
+        if wants_lotion and not has_lotion:
+            raise ValueError(
+                "pre-built fused core has lam=0 but the train config wants "
+                "the decoupled LOTION penalty — build it with make_optimizer")
+        if has_lotion and not wants_lotion:
+            raise ValueError(
+                "pre-built fused core carries a LOTION term the train "
+                "config does not use — the penalty would be misconfigured")
+        checks = [("clip_norm", tcfg.clip_norm),
+                  ("use_kernel", q.kernel_enabled)]
+        if has_lotion:
+            checks += [("lam", q.lam), ("fmt_name", q.fmt_name),
+                       ("block_size", q.block_size), ("policy", q.policy)]
+        for key, want in checks:
+            if key in meta and meta[key] != want:
+                raise ValueError(
+                    f"pre-built fused core was built with {key}="
+                    f"{meta[key]!r} but the train config says {want!r} — "
+                    f"rebuild it with make_optimizer")
+        if tcfg.ef_compress:
+            raise ValueError(
+                "EF compression cannot be fused — drop the pre-built "
+                "fused core and let make_optimizer assemble the chain")
+        return base_t
+    if wants_lotion and q.differentiate_scale:
+        raise ValueError(
+            "decoupled LOTION has no closed form for a differentiable "
+            "scale; use penalty_placement='loss' with "
+            "differentiate_scale=True")
+
+    # fused core selection: collapse clip -> [lotion] -> adamw into the
+    # single-pass step kernel.  The loss-side placement keeps the penalty
+    # in the loss, so the fused core then runs with lam=0 (plain
+    # clip+AdamW fusion).
+    meta = base_t.meta or {}
+    can_fuse = (q.kernel_enabled and meta.get("kind") == "adamw"
+                and not tcfg.ef_compress)
+    if can_fuse:
+        return fused_lotion_adamw_core(
+            meta["lr_fn"], b1=meta["b1"], b2=meta["b2"], eps=meta["eps"],
+            weight_decay=meta["weight_decay"], fmt_name=q.fmt_name,
+            lam=(q.lam if wants_lotion else 0.0), block_size=q.block_size,
+            clip_norm=tcfg.clip_norm, policy=q.policy)
+
     links = [clip_global_norm(tcfg.clip_norm)]
     if tcfg.ef_compress:
         links.append(ef_transform(tcfg.ef_block))
     if wants_lotion:
-        if q.differentiate_scale:
-            raise ValueError(
-                "decoupled LOTION has no closed form for a differentiable "
-                "scale; use penalty_placement='loss' with "
-                "differentiate_scale=True")
         links.append(lotion_decoupled(q.fmt_name, q.lam, q.block_size,
-                                      use_kernel=q.use_kernel,
+                                      use_kernel=q.kernel_enabled,
                                       policy=q.policy))
     links.append(base_t)
     return chain(*links)
@@ -205,7 +259,11 @@ def make_train_step(cfg: LMConfig, tcfg: TrainConfig, optimizer,
 
         updates, new_opt = tx.update(grads, state["opt"], params,
                                      fisher=fisher)
-        new_params = apply_updates(params, updates)
+        # a fused terminal core emits new params straight from the step
+        # kernel; adding a separate updates tree back would re-introduce
+        # the extra full-tensor HBM pass the fusion removed
+        new_params = (updates if tx.applies_updates
+                      else apply_updates(params, updates))
 
         new_state = dict(state)
         new_state.update(params=new_params, opt=new_opt,
@@ -254,6 +312,14 @@ def make_eval_fn(cfg: LMConfig, qcfg: QuantConfig):
 TELEMETRY_WINDOW = 200
 
 
+def opt_state_is_fused(opt_state) -> bool:
+    """True iff ``state["opt"]`` came from the fused single-pass core
+    (flat dict carrying both moments AND the metric scalars) rather than
+    an update-transform chain (tuple of link states)."""
+    return (isinstance(opt_state, dict) and "gnorm" in opt_state
+            and "mu" in opt_state)
+
+
 def run_loop(train_step, state, pipeline, n_steps: int,
              eval_every: int = 0, eval_hook: Optional[Callable] = None,
              ckpt_every: int = 0, ckpt_hook: Optional[Callable] = None,
@@ -268,6 +334,10 @@ def run_loop(train_step, state, pipeline, n_steps: int,
     history = []
     times = collections.deque(maxlen=TELEMETRY_WINDOW)
     start = int(state["step"])
+    # one self-describing line so benchmark logs record which optimizer
+    # backend (fused kernel vs jnp chain) produced the step times
+    log(f"run_loop: opt_fused={opt_state_is_fused(state.get('opt'))} "
+        f"backend={jax.default_backend()}")
     step_jit = jax.jit(train_step, donate_argnums=(0,))
     for _ in range(start, n_steps):
         batch = next(pipeline)

@@ -109,29 +109,37 @@ def test_train_modes_run_and_penalty_reported():
 
 def test_lotion_penalty_reduces_quant_gap():
     """After training with a strong LOTION penalty, weights sit closer to
-    the INT8 lattice than fp32-trained weights (mechanism check)."""
+    the INT8 lattice than fp32-trained weights (mechanism check).
+
+    The per-seed effect is tiny at this toy scale (the Fisher is ~g^2
+    after 30 steps, so even lam=3e3 barely moves the lattice distance and
+    single-seed runs flip sign on float noise) — so this asserts on the
+    MEDIAN gap over 3 fixed seeds with lam=3e4, inside the paper's
+    lambda sweep range (3e3..1e5, §4.3)."""
     from repro.core import rr_variance
-    opt = adamw(constant(3e-3))
-    results = {}
-    for method, lam in [("fp32", 0.0), ("lotion", 3000.0)]:
+
+    def lattice_var(seed: int, method: str, lam: float) -> float:
         qc = QuantConfig(method=method, fmt_name="int8", lam=lam,
                          policy=POLICY)
         tc = TrainConfig(quant=qc)
-        tx = make_optimizer(tc, opt)
+        tx = make_optimizer(tc, adamw(constant(3e-3)))
         step = jax.jit(make_train_step(CFG, tc, tx), donate_argnums=(0,))
-        st = init_state(lm_init(jax.random.PRNGKey(0), CFG), tx)
+        st = init_state(lm_init(jax.random.PRNGKey(seed), CFG), tx)
+        perm = permutation_table(seed, CFG.vocab)
         for i in range(30):
-            st, _ = step(st, _batch(i))
+            st, _ = step(st, lm_batch(seed, i, 8, 32, CFG.vocab, perm))
         # mean normalized distance-to-lattice over eligible params
         tot, cnt = 0.0, 0
         flat, _ = jax.tree_util.tree_flatten_with_path(st["params"])
         for path, x in flat:
             if POLICY.eligible(path, x):
-                v = np.asarray(rr_variance(x, INT8, -1)).mean()
-                tot += v
+                tot += np.asarray(rr_variance(x, INT8, -1)).mean()
                 cnt += 1
-        results[method] = tot / cnt
-    assert results["lotion"] < results["fp32"], results
+        return tot / cnt
+
+    gaps = [lattice_var(seed, "fp32", 0.0)
+            - lattice_var(seed, "lotion", 3e4) for seed in (0, 1, 2)]
+    assert float(np.median(gaps)) > 0.0, gaps
 
 
 def test_cross_entropy_matches_naive():
