@@ -34,6 +34,8 @@ def main():
     prompts = [list(rng.integers(0, cfg.vocab, size=rng.integers(3, 9)))
                for _ in range(args.prompts)]
 
+    from repro.core import param_nbytes
+
     for weights in ("fp32", args.weights):
         eng = Engine(cfg, params, ServeConfig(weights=weights,
                                               max_new_tokens=args.max_new))
@@ -42,7 +44,8 @@ def main():
         dt = time.perf_counter() - t0
         n_tok = sum(len(o) for o in outs)
         print(f"[{weights}] {n_tok} tokens in {dt:.2f}s "
-              f"({n_tok/dt:.1f} tok/s, batch={len(prompts)})")
+              f"({n_tok/dt:.1f} tok/s, batch={len(prompts)}, "
+              f"weight storage {param_nbytes(eng.params)/2**20:.2f} MiB)")
         for i, o in enumerate(outs[:2]):
             print(f"  prompt{i} -> {o}")
 

@@ -1,5 +1,8 @@
-"""Fault-tolerant checkpointing with elastic resharding."""
+"""Fault-tolerant checkpointing with elastic resharding, plus the
+chain-tuple <-> fused-dict optimizer-state migration helper."""
 
 from .io import latest_step, load, save
+from .migrate import migrate_opt_state, opt_state_kind
 
-__all__ = ["save", "load", "latest_step"]
+__all__ = ["save", "load", "latest_step", "migrate_opt_state",
+           "opt_state_kind"]

@@ -14,6 +14,13 @@ Design (scaled-down from a multi-host production layout, same invariants):
 * **elastic resharding on load**: leaves are restored as host arrays and
   re-placed with any target sharding (different mesh shape / device count
   than at save time) via ``load(..., shardings=...)``.
+
+Quantized-storage trees round-trip natively: a
+:class:`repro.core.qtensor.QTensor` is a pytree node whose ``codes`` /
+``scales`` children flatten under DictKey path components, so a quantized
+serving checkpoint stores the int4/int8 codes themselves (manifest
+records the uint8/int8 dtypes and the static layout meta lives in the
+treedef of the ``like`` template at restore).
 """
 
 from __future__ import annotations

@@ -1,0 +1,130 @@
+"""Optimizer-state migration: chain-tuple <-> fused-dict.
+
+The fused single-pass step kernel (``optim/fused.py``) keeps its state as
+a flat dict ``{"mu", "nu", "count", "gnorm"[, "penalty"]}`` while the
+unfused update-transform chain keeps a TUPLE of per-link dicts, e.g.
+``({"gnorm"}, {"penalty"}, {"mu", "nu", "count"})``.  Under the
+``use_kernel=None`` auto-default the structure is therefore
+backend-specific, and a checkpoint written on one backend does not
+``eval_shape``-match the other's default optimizer (DESIGN.md §5 told
+users to pin ``use_kernel``; this module removes the pin).
+
+:func:`migrate_opt_state` moves the *contents* between the two layouts:
+both backends deliberately use the same reserved key names (asserted in
+tests/test_opt_step.py), so migration is a key-matched copy into the
+target template — no numeric transformation, hence bit-exact resume.
+
+Typical use at restore time::
+
+    tx = make_optimizer(tcfg, adamw(lr))          # target backend's chain
+    like = init_state(params, tx)                  # target structure
+    saved, step = ckpt.load(ckpt_dir, saved_like)  # source structure
+    saved["opt"] = migrate_opt_state(saved["opt"], like["opt"])
+
+EF compression is chain-only: migrating a chain state that carries an
+``err`` tree to the fused layout raises (the fused core cannot represent
+it — ``make_optimizer`` never builds the fused core under EF either).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+# the reserved state keys shared by both backends (DESIGN.md §3/§5)
+_SHARED_KEYS = ("mu", "nu", "count", "gnorm", "penalty")
+
+
+def opt_state_kind(opt_state) -> str:
+    """``"chain"`` (tuple of link dicts) or ``"fused"`` (flat dict)."""
+    if isinstance(opt_state, (tuple, list)):
+        return "chain"
+    if isinstance(opt_state, dict):
+        return "fused"
+    raise ValueError(f"unrecognized optimizer state: {type(opt_state)!r}")
+
+
+def _links(opt_state):
+    return (list(opt_state) if isinstance(opt_state, (tuple, list))
+            else [opt_state])
+
+
+def _collect(opt_state) -> Dict[str, Any]:
+    """Flatten either layout into one {reserved key: value} dict."""
+    found: Dict[str, Any] = {}
+    for link in _links(opt_state):
+        if not isinstance(link, dict):
+            continue
+        for k in _SHARED_KEYS + ("err",):
+            if k in link:
+                if k in found:
+                    raise ValueError(
+                        f"optimizer state holds {k!r} in more than one "
+                        f"link — cannot migrate unambiguously")
+                found[k] = link[k]
+    return found
+
+
+def migrate_opt_state(opt_state, like):
+    """Re-layout ``opt_state`` into the structure of ``like``.
+
+    ``like`` is a template with the target structure and leaf shapes —
+    ``optimizer.init(params)`` or its ``eval_shape``.  Every reserved key
+    present in BOTH source and target is copied across (bit-exact);
+    target keys absent from the source keep the template's value (e.g. a
+    zero ``penalty`` when migrating a lam=0 fused state into a chain
+    without the LOTION link... which has no such key anyway).  Raises if
+    the source tracks state the target cannot hold (EF ``err``) or if a
+    param-shaped tree disagrees in structure/shape.
+    """
+    src = _collect(opt_state)
+    dst_keys = set(_collect(like))
+    # only step METRICS (gnorm/penalty) may drop silently; losing mu, nu,
+    # count or the EF error tree would wipe optimizer memory on "resume"
+    if "err" in src and "err" not in dst_keys:
+        raise ValueError(
+            "source optimizer state carries an EF-compression error tree "
+            "('err') but the target layout has no EF link — the fused "
+            "core cannot represent it (DESIGN.md §5)")
+    lost = sorted(k for k in src
+                  if k not in dst_keys and k not in ("gnorm", "penalty"))
+    if lost:
+        raise ValueError(
+            f"target optimizer layout has no slot for load-bearing state "
+            f"{lost} — migrate between layouts of the SAME update rule "
+            f"(chain-tuple <-> fused-dict AdamW), not across optimizers")
+
+    def fill(link_like):
+        if not isinstance(link_like, dict):
+            return link_like
+        out = {}
+        for k, v in link_like.items():
+            if k in src:
+                _check_like(src[k], v, k)
+                out[k] = src[k]
+            else:
+                out[k] = v
+        return out
+
+    if isinstance(like, (tuple, list)):
+        migrated = type(like)(fill(link) for link in like)
+    else:
+        migrated = fill(like)
+    return migrated
+
+
+def _check_like(value, like, key: str) -> None:
+    v_flat, v_def = jax.tree_util.tree_flatten(value)
+    l_flat, l_def = jax.tree_util.tree_flatten(like)
+    if v_def != l_def:
+        raise ValueError(
+            f"optimizer-state key {key!r} has tree structure {v_def} in "
+            f"the source but {l_def} in the target — migrate between "
+            f"optimizers over the SAME parameter tree")
+    for v, l in zip(v_flat, l_flat):
+        if tuple(getattr(v, "shape", ())) != tuple(getattr(l, "shape", ())):
+            raise ValueError(
+                f"optimizer-state key {key!r}: leaf shape "
+                f"{getattr(v, 'shape', ())} vs target "
+                f"{getattr(l, 'shape', ())}")

@@ -11,6 +11,17 @@ from .lotion import (
 )
 from .modes import QuantConfig, cast_params, forward_params, penalty
 from .policy import QuantPolicy
+from .qtensor import (
+    QTensor,
+    dequantize_params,
+    from_matmul_weight,
+    has_qtensor,
+    param_nbytes,
+    qtensor_use_kernel,
+    quantize_params,
+    quantize_qtensor,
+    set_qtensor_kernel,
+)
 from .quantize import (
     block_scales,
     cast_rr,
@@ -29,4 +40,7 @@ __all__ = [
     "lotion_penalty", "lotion_penalty_and_grad", "smoothed_loss_mc",
     "quadratic_smoothed", "fisher_from_grads",
     "forward_params", "penalty", "cast_params",
+    "QTensor", "quantize_qtensor", "from_matmul_weight", "quantize_params",
+    "dequantize_params", "has_qtensor", "param_nbytes",
+    "qtensor_use_kernel", "set_qtensor_kernel",
 ]

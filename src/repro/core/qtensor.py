@@ -1,0 +1,373 @@
+"""QTensor: quantized-storage weight container for the serving path.
+
+The artifact LOTION training produces is a model that *deploys* in low
+precision — so the serving engine should hold the int4/int8 codes
+themselves, not a dequantized fp copy.  :class:`QTensor` is a registered
+pytree node wrapping the ``(codes, scales)`` storage form of
+:func:`repro.core.quantize.quantize_store` so a quantized parameter tree
+survives jit, ``lax.scan`` over stacked layers, sharding and
+checkpointing exactly like a dense tree.
+
+Layout contract (DESIGN.md §6)
+------------------------------
+A QTensor stores a matrix **out-major**: shape ``(..., N, K)`` where K is
+the contraction (input) axis of the matmul it serves and N the output
+axis — i.e. the *transpose* of the ``x @ w`` operand.  Quant blocks run
+along K (the stored last axis), which makes the storage literally
+``quantize_store(w.T)`` reshaped, and makes the tied-embedding head free:
+the ``(vocab, d)`` embedding table is already out-major for
+``logits = x @ embed.T``.
+
+* ``codes``: int8 ``(..., N, K)``, or packed int4 uint8 ``(..., N, K//2)``
+  (two K-values per byte, even K in the low nibble — the
+  ``kernels/wq_matmul`` nibble order).
+* ``scales``: fp32 ``(..., 1, 1)`` per-tensor (one scale per matrix, the
+  paper's per-tensor ``matrix_axes`` semantics) or ``(..., N, K//bs)``
+  blockwise.
+* static meta (pytree aux data, so it survives tree ops and hashes into
+  jit caches): ``fmt_name``, ``bits``, ``block_k``.
+
+``matmul(x, qt)`` computes ``x @ dequant(qt)^T`` through the Pallas
+``wqt_matmul`` kernel (dequant-in-VMEM; HBM reads the codes bytes, never
+a dense weight) when the kernel backend is enabled, else through the
+bit-compatible jnp reference — the same ``use_kernel`` auto-default rule
+as the fused optimizer step (TPU on, else jnp; force with
+:func:`qtensor_use_kernel`).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import IntFormat, get_format
+from .policy import QuantPolicy, path_str
+
+Array = jnp.ndarray
+
+# --------------------------------------------------------------------------
+# Kernel backend selection (mirrors QuantConfig.kernel_enabled's auto rule)
+# --------------------------------------------------------------------------
+
+_USE_KERNEL: list = [None]          # None = auto (TPU yes, else jnp)
+
+
+def set_qtensor_kernel(flag: Optional[bool]) -> None:
+    """Force (True/False) or restore auto (None) kernel dispatch for
+    QTensor matmuls.  Read at TRACE time — wrap the traced region (or set
+    before building jitted callables)."""
+    _USE_KERNEL[0] = flag
+
+
+@contextlib.contextmanager
+def qtensor_use_kernel(flag: Optional[bool]):
+    prev = _USE_KERNEL[0]
+    _USE_KERNEL[0] = flag
+    try:
+        yield
+    finally:
+        _USE_KERNEL[0] = prev
+
+
+def kernel_enabled() -> bool:
+    if _USE_KERNEL[0] is not None:
+        return bool(_USE_KERNEL[0])
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------------
+# The container
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class QTensor:
+    """Quantized out-major weight storage (see module docstring)."""
+
+    codes: Array                 # int8 (..., N, K) | uint8 (..., N, K//2)
+    scales: Array                # f32 (..., 1, 1) | (..., N, K//bs)
+    fmt_name: str = "int8"
+    bits: int = 8
+    block_k: int = -1            # -1 = per-tensor (per-matrix) scale
+
+    # -- pytree protocol (DictKey children so checkpoint/sharding path
+    # helpers see plain "codes"/"scales" path components) ----------------
+    def tree_flatten_with_keys(self):
+        children = ((jax.tree_util.DictKey("codes"), self.codes),
+                    (jax.tree_util.DictKey("scales"), self.scales))
+        return children, (self.fmt_name, self.bits, self.block_k)
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.fmt_name, self.bits,
+                                           self.block_k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scales = children
+        return cls(codes, scales, *aux)
+
+    # -- logical geometry -------------------------------------------------
+    @property
+    def packed(self) -> bool:
+        return self.bits == 4
+
+    @property
+    def in_dim(self) -> int:
+        """K — the contraction axis length (unpacked)."""
+        k = self.codes.shape[-1]
+        return k * 2 if self.packed else k
+
+    @property
+    def out_dim(self) -> int:
+        return self.codes.shape[-2]
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """Logical stored (out-major, unpacked) shape (..., N, K)."""
+        return self.codes.shape[:-1] + (self.in_dim,)
+
+    @property
+    def ndim(self) -> int:
+        return self.codes.ndim
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.codes.size) * self.codes.dtype.itemsize + \
+            int(self.scales.size) * self.scales.dtype.itemsize
+
+    # -- dequantization ---------------------------------------------------
+    def dequantize(self) -> Array:
+        """Dense fp32 matrix in the stored (..., N, K) orientation."""
+        from repro.kernels.wq_matmul.ref import dequant_t_ref
+        return dequant_t_ref(self.codes, self.scales, self.block_k,
+                             self.packed)
+
+    def take(self, idx: Array) -> Array:
+        """Dequantized rows ``dense[idx]`` — the embedding-gather path
+        (reads only the touched code rows, never the full table)."""
+        codes = jnp.take(self.codes, idx, axis=0)
+        if self.block_k == -1:
+            scales = self.scales            # (1, 1) broadcasts over rows
+        else:
+            scales = jnp.take(self.scales, idx, axis=0)
+        from repro.kernels.wq_matmul.ref import dequant_t_ref
+        return dequant_t_ref(codes, scales, self.block_k, self.packed)
+
+
+def _pack_last(codes: Array) -> Array:
+    """int8 codes (..., C) with C even -> packed uint8 (..., C//2), even
+    index in the low nibble (the wq_matmul kernel nibble order)."""
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return ((lo.astype(jnp.int32) & 0xF)
+            | ((hi.astype(jnp.int32) & 0xF) << 4)).astype(jnp.uint8)
+
+
+def quantize_qtensor(stored: Array, fmt, block_k: int = -1) -> QTensor:
+    """Quantize an out-major matrix ``stored`` (..., N, K) into a QTensor.
+
+    Bit-identical scale/code math to :func:`repro.core.quantize.
+    quantize_store` on the same array: per-tensor uses the per-matrix
+    ``matrix_axes`` absmax; blockwise groups contiguous runs of
+    ``block_k`` along the last axis (== ``quantize_store``'s flattened
+    blocks whenever ``K % block_k == 0``, asserted).
+    """
+    fmt = get_format(fmt) if isinstance(fmt, str) else fmt
+    if not isinstance(fmt, IntFormat):
+        raise ValueError(
+            f"QTensor storage supports integer formats only, got "
+            f"{fmt.name!r} (serve codebook formats via the dense cast)")
+    if stored.ndim < 2:
+        raise ValueError("QTensor wraps matrices (ndim >= 2)")
+    stored = stored.astype(jnp.float32)
+    k = stored.shape[-1]
+    if block_k == -1:
+        absmax = jnp.max(jnp.abs(stored), axis=(-2, -1), keepdims=True)
+        s = fmt.scale(absmax)                        # (..., 1, 1)
+        codes = fmt.quantize_codes(stored, s)
+        scales = s
+    else:
+        if k % block_k != 0:
+            raise ValueError(f"K={k} not divisible by block_k={block_k}")
+        blocked = stored.reshape(stored.shape[:-1] + (k // block_k, block_k))
+        absmax = jnp.max(jnp.abs(blocked), axis=-1, keepdims=True)
+        s = fmt.scale(absmax)                        # (..., N, Kb, 1)
+        codes = fmt.quantize_codes(blocked, s).reshape(stored.shape)
+        scales = s[..., 0]                           # (..., N, Kb)
+    if fmt.bits == 4:
+        if k % 2 != 0:
+            raise ValueError(f"int4 packing needs even K, got {k}")
+        codes = _pack_last(codes)
+    elif fmt.bits != 8:
+        raise ValueError(f"unsupported storage width int{fmt.bits}")
+    return QTensor(codes, scales.astype(jnp.float32), fmt.name, fmt.bits,
+                   block_k)
+
+
+def from_matmul_weight(w: Array, fmt, block_k: int = -1) -> QTensor:
+    """Quantize a dense ``x @ w`` operand ``w`` (..., K, N): stored
+    transposed (out-major)."""
+    return quantize_qtensor(jnp.swapaxes(w, -1, -2), fmt, block_k)
+
+
+# --------------------------------------------------------------------------
+# Matmul dispatch
+# --------------------------------------------------------------------------
+
+def matmul(x: Array, qt: QTensor) -> Array:
+    """``x (..., K) @ dequant(qt)^T -> (..., N)``.
+
+    2-D storage: one kernel call over the flattened leading dims of x.
+    3-D storage (E, N, K) — MoE expert stacks: x must be (E, M, K); the
+    kernel is mapped over E (``lax.map`` keeps the HLO size independent
+    of the expert count).  The jnp fallback is the bit-compatible
+    ``wqt_matmul_ref`` oracle.
+    """
+    if qt.codes.ndim == 2:
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if kernel_enabled():
+            from repro.kernels.wq_matmul import wqt_matmul
+            out = wqt_matmul(x2, qt.codes, qt.scales, block_k=qt.block_k,
+                             bits=qt.bits)
+        else:
+            from repro.kernels.wq_matmul.ref import wqt_matmul_ref
+            out = wqt_matmul_ref(x2, qt.codes, qt.scales, qt.block_k,
+                                 qt.packed)
+        return out.reshape(lead + (qt.out_dim,))
+    if qt.codes.ndim == 3:
+        if x.ndim != 3 or x.shape[0] != qt.codes.shape[0]:
+            raise ValueError(
+                f"batched QTensor (E={qt.codes.shape[0]}) needs x of shape "
+                f"(E, M, K), got {x.shape}")
+        if kernel_enabled():
+            from repro.kernels.wq_matmul import wqt_matmul
+
+            def one(args):
+                xe, ce, se = args
+                return wqt_matmul(xe, ce, se, block_k=qt.block_k,
+                                  bits=qt.bits)
+
+            scales = qt.scales
+            if qt.block_k == -1 and scales.shape[0] != qt.codes.shape[0]:
+                scales = jnp.broadcast_to(
+                    scales, (qt.codes.shape[0],) + scales.shape[-2:])
+            return jax.lax.map(one, (x, qt.codes, scales))
+        from repro.kernels.wq_matmul.ref import wqt_matmul_ref
+        return wqt_matmul_ref(x, qt.codes, qt.scales, qt.block_k, qt.packed)
+    raise ValueError(f"unsupported QTensor rank {qt.codes.ndim}")
+
+
+# --------------------------------------------------------------------------
+# Whole-tree conversion (the serving packer)
+# --------------------------------------------------------------------------
+
+# weight leaves whose use-sites route through the central matmul dispatch
+# (models/layers.py::matmul + models/lm.py::_head/_embed).  Leaves outside
+# this set — SSM projections, RWKV mixes, tiny routers — keep the dense
+# cast; converting a leaf no dispatch site understands would break its
+# einsum consumer.
+MATMUL_LEAVES = ("wq", "wk", "wv", "wo", "w_up", "w_gate", "w_down",
+                 "vision_proj", "embed", "lm_head")
+
+# leaves already stored out-major (gather tables used transposed in the
+# head): quantized in place, NOT transposed
+_NATURAL_LEAVES = ("embed",)
+
+
+def _convertible(last: str, x, fmt, block_k: int) -> bool:
+    if last not in MATMUL_LEAVES:
+        return False
+    if not isinstance(fmt, IntFormat) or fmt.bits not in (4, 8):
+        return False
+    if x.ndim < 2 or x.ndim > 3:
+        return False
+    if last == "embed" and x.ndim != 2:
+        return False                      # codebook embeds stay dense
+    k = x.shape[-1] if last in _NATURAL_LEAVES else x.shape[-2]
+    if fmt.bits == 4 and k % 2 != 0:
+        return False
+    if block_k != -1 and k % block_k != 0:
+        return False
+    return True
+
+
+def quantize_params(params, fmt, policy: Optional[QuantPolicy] = None,
+                    block_size: int = -1, mode: str = "rtn",
+                    key: Optional[jax.Array] = None):
+    """Convert eligible weight leaves to QTensor storage; everything else
+    (and eligible-but-unconvertible leaves) gets the dense RTN/RR cast,
+    so the whole tree is quantized either way.
+
+    ``mode="rr"`` applies the unbiased randomized-rounding cast IN THE
+    STORED ORIENTATION and keeps its codes.  That is exact: on the stored
+    matrix, ``cast_rr``'s flattened blocks coincide with the QTensor's
+    K-axis blocks (``K % block_size == 0`` is a conversion precondition),
+    RR lands on that grid, and it preserves each block's absmax (fixed
+    points survive with probability 1) — so re-quantizing the cast is the
+    identity.  Casting in the *dense* orientation first would group
+    blocks along the wrong axis and silently round twice.
+    """
+    from . import quantize as qz
+    fmt = get_format(fmt) if isinstance(fmt, str) else fmt
+    policy = policy if policy is not None else QuantPolicy()
+    if mode == "rr":
+        if key is None:
+            raise ValueError("RR cast needs a key")
+    elif mode != "rtn":
+        raise ValueError(f"mode {mode!r} not in ('rtn', 'rr')")
+    counter = [0]
+
+    def leaf(path, x):
+        last = path_str(path).rsplit("/", 1)[-1]
+        counter[0] += 1
+        if _convertible(last, x, fmt, block_size):
+            stored = x if last in _NATURAL_LEAVES else jnp.swapaxes(x, -1, -2)
+            if mode == "rr":
+                stored = qz.cast_rr(stored.astype(jnp.float32), fmt,
+                                    jax.random.fold_in(key, counter[0]),
+                                    block_size)
+            return quantize_qtensor(stored, fmt, block_size)
+        if mode == "rr":
+            return qz.cast_rr(x, fmt, jax.random.fold_in(key, counter[0]),
+                              block_size)
+        return qz.cast_rtn(x, fmt, block_size)
+
+    return policy.map_eligible(leaf, params)
+
+
+def dequantize_params(params):
+    """Inverse of :func:`quantize_params`'s storage step: every QTensor
+    leaf becomes its dense dequantized matrix in the ORIGINAL (matmul
+    operand) orientation — the reference tree for serving-parity tests."""
+    def leaf(path, x):
+        if not isinstance(x, QTensor):
+            return x
+        dense = x.dequantize()
+        # with is_leaf on QTensor the path ends at the weight's own name
+        last = path_str(path).rsplit("/", 1)[-1]
+        if last in _NATURAL_LEAVES:
+            return dense
+        return jnp.swapaxes(dense, -1, -2)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda t: isinstance(t, QTensor))
+    out = [leaf(p, x) for p, x in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def has_qtensor(params) -> bool:
+    return any(isinstance(t, QTensor) for t in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda t: isinstance(t, QTensor)))
+
+
+def param_nbytes(params) -> int:
+    """Stored bytes of a parameter tree — QTensor leaves count their
+    codes+scales storage, dense leaves their array bytes.  The serving
+    launchers/benchmarks all report through this one helper."""
+    return sum(int(t.nbytes) for t in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda t: isinstance(t, QTensor)))

@@ -24,6 +24,9 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.qtensor import MATMUL_LEAVES as _QT_WEIGHT_NAMES
+from repro.core.qtensor import _NATURAL_LEAVES as _QT_NATURAL
+
 # weights whose LAST dim is the model-parallel (output) dim
 _COL_PARALLEL = (
     "wq", "wk", "wv", "w_up", "w_gate", "in_proj", "w_r", "w_k", "w_v",
@@ -35,6 +38,15 @@ _REPLICATED_HINTS = (
     "norm", "scale", "bias", "a_log", "d_skip", "decay", "bonus", "mu_",
     "gate_", "xattn_gate", "conv_b", "lora", "router", "mu_base",
 )
+
+# QTensor (quantized-storage serving) leaves: the codes/scales children of
+# these weight names derive their spec from the WEIGHT's rule so the int
+# codes and their scales shard congruently.  Storage is out-major
+# (transposed) for matmul operands; the natural gather tables keep their
+# dense orientation (DESIGN.md §6).
+# (the QTensor name sets _QT_WEIGHT_NAMES/_QT_NATURAL are imported from
+# core/qtensor.py above — the convertible-leaf set and the sharding rule
+# set must never drift apart)
 
 
 def _leaf_name(path) -> str:
@@ -55,31 +67,50 @@ def param_spec(path, x, *, fsdp: bool = True, stacked_prefixes=("stage",)) -> P:
     last = name.rsplit("/", 1)[-1]
     dp = "data" if fsdp else None
 
+    # QTensor children: spec comes from the parent weight's rule (codes
+    # and scales congruent); storage is transposed except gather tables.
+    # The divisibility fixup at placement time prunes axes the (smaller)
+    # scales tensors cannot honor, replicating per-tensor (1, 1) scales.
+    qt_child = False
+    parent = name.split("/")[-2] if "/" in name else ""
+    if last in ("codes", "scales") and parent in _QT_WEIGHT_NAMES:
+        qt_child, last = True, parent
+
     if any(h in last for h in _REPLICATED_HINTS) or ndim <= 1:
         return P(*lead)
 
     if last == "embed":
         if ndim == 3:      # (codebooks, vocab, d)
-            return P(*lead, None, "model", dp)
-        return P(*lead, "model", dp)          # (vocab, d)
-    if last == "lm_head":
+            spec = P(*lead, None, "model", dp)
+        else:
+            spec = P(*lead, "model", dp)      # (vocab, d)
+    elif last == "lm_head":
         if ndim == 3:      # (codebooks, d, vocab)
-            return P(*lead, None, dp, "model")
-        return P(*lead, dp, "model")          # (d, vocab)
-    if last == "conv_w":
-        return P(*lead, None, "model")        # depthwise channels
-    if last in ("w_up", "w_gate", "w_down") and ndim == 3:
+            spec = P(*lead, None, dp, "model")
+        else:
+            spec = P(*lead, dp, "model")      # (d, vocab)
+    elif last == "conv_w":
+        spec = P(*lead, None, "model")        # depthwise channels
+    elif last in ("w_up", "w_gate", "w_down") and ndim == 3:
         # MoE expert weights (e, d, f) / (e, f, d): EP over model
         if last == "w_down":
-            return P(*lead, "model", None, dp)
-        return P(*lead, "model", dp, None)
-    if any(last == c for c in _COL_PARALLEL) and ndim == 2:
-        return P(*lead, dp, "model")
-    if any(last == r for r in _ROW_PARALLEL) and ndim == 2:
-        return P(*lead, "model", dp)
-    if ndim == 2:
-        return P(*lead, dp, "model")          # default: 2-D shard
-    return P(*lead)
+            spec = P(*lead, "model", None, dp)
+        else:
+            spec = P(*lead, "model", dp, None)
+    elif any(last == c for c in _COL_PARALLEL) and ndim == 2:
+        spec = P(*lead, dp, "model")
+    elif any(last == r for r in _ROW_PARALLEL) and ndim == 2:
+        spec = P(*lead, "model", dp)
+    elif ndim == 2:
+        spec = P(*lead, dp, "model")          # default: 2-D shard
+    else:
+        spec = P(*lead)
+
+    if qt_child and last not in _QT_NATURAL and len(spec) >= 2:
+        entries = list(spec)
+        entries[-1], entries[-2] = entries[-2], entries[-1]
+        spec = P(*entries)
+    return spec
 
 
 def widen_dp(mesh, spec: P) -> P:

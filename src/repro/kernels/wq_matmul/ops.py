@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from .ref import quantize_weights_ref
-from .wq_matmul import wq_matmul_pallas
+from .wq_matmul import wq_matmul_pallas, wqt_matmul_pallas
 
 
 def _interpret() -> bool:
@@ -24,13 +24,21 @@ def pack_weight(w, block_k: int = 128, bits: int = 4):
                                              "tile_m", "tile_n"))
 def wq_matmul(x, codes, scales, block_k: int = 128, bits: int = 4,
               tile_m: int = 128, tile_n: int = 128):
-    """x (M, K) @ dequant(codes, scales).  M is padded to the tile."""
-    M = x.shape[0]
-    tm = min(tile_m, max(8, M))
-    pad = (-M) % tm
-    if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
-    out = wq_matmul_pallas(x, codes, scales, block_k=block_k,
-                           int4=(bits == 4), tile_m=tm, tile_n=tile_n,
-                           interpret=_interpret())
-    return out[:M]
+    """x (M, K) @ dequant(codes, scales); the M edge (ragged decode
+    batches) is padded to the tile grid inside the pallas wrapper."""
+    return wq_matmul_pallas(x, codes, scales, block_k=block_k,
+                            int4=(bits == 4), tile_m=tile_m, tile_n=tile_n,
+                            interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "bits",
+                                             "tile_m", "tile_n"))
+def wqt_matmul(x, codes, scales, block_k: int = -1, bits: int = 8,
+               tile_m: int = 128, tile_n: int = 128):
+    """x (M, K) @ dequant(codes (N, K[/2]), scales)^T — the QTensor
+    (out-major storage) serving entry point.  ``block_k=-1`` = per-tensor
+    (1, 1) scale; otherwise blockwise (N, K//bs) scales.  M/N edges are
+    padded internally."""
+    return wqt_matmul_pallas(x, codes, scales, block_k=block_k,
+                             int4=(bits == 4), tile_m=tile_m, tile_n=tile_n,
+                             interpret=_interpret())

@@ -26,6 +26,36 @@ def wq_matmul_ref(x, codes, scales, block_k: int, int4: bool):
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
 
 
+def dequant_t_ref(codes, scales, block_k: int, int4: bool):
+    """Transposed (out-major) layout dequant.
+
+    codes (..., N, K) int8 or (..., N, K//2) packed uint4 (even K in the
+    low nibble); scales (..., N, K//bs) blockwise or (..., 1, 1)
+    per-tensor.  Returns the dense (..., N, K) fp32 matrix.
+    """
+    if int4:
+        lo = (codes & 0xF).astype(jnp.int8)
+        hi = ((codes >> 4) & 0xF).astype(jnp.int8)
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        w = jnp.stack([lo, hi], axis=-1).reshape(
+            codes.shape[:-1] + (codes.shape[-1] * 2,))
+    else:
+        w = codes
+    if block_k == -1:
+        s = scales                                   # (..., 1, 1) broadcast
+    else:
+        s = jnp.repeat(scales, block_k, axis=-1)     # (..., N, K)
+    return w.astype(jnp.float32) * s
+
+
+def wqt_matmul_ref(x, codes, scales, block_k: int, int4: bool):
+    """x (..., M, K) @ dequant_t(codes, scales)^T -> (..., M, N)."""
+    w = dequant_t_ref(codes, scales, block_k, int4)
+    return jnp.einsum("...mk,...nk->...mn",
+                      x.astype(jnp.float32), w).astype(x.dtype)
+
+
 def quantize_weights_ref(w, block_k: int, bits: int):
     """Blockwise (along K) symmetric quantization of a (K, N) weight for
     the serving path.  Returns (codes, scales); codes packed for int4."""

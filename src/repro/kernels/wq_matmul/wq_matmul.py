@@ -1,6 +1,8 @@
-"""Weight-only-quantized matmul kernel (pl.pallas_call + BlockSpec).
+"""Weight-only-quantized matmul kernels (pl.pallas_call + BlockSpec).
 
-Computes ``x @ dequant(codes, scales)`` for int8 or packed-int4 weights:
+Two entry points over the same dequant-in-VMEM dataflow:
+
+``wq_matmul_pallas`` — the original K-major layout:
 
   x      (M, K)      bf16/f32 activations
   codes  (K, N)      int8   — or packed int4: (K//2, N) uint8, two K-values
@@ -9,15 +11,33 @@ Computes ``x @ dequant(codes, scales)`` for int8 or packed-int4 weights:
                      blockwise absmax layout with blocks along K, so a
                      whole (TK=bs, TN) tile shares one scale row
 
+``wqt_matmul_pallas`` — the transposed QTensor storage layout (out-major,
+contraction along the stored LAST axis; see DESIGN.md §6), computing
+``x @ dequant(stored)^T``:
+
+  x      (M, K)
+  codes  (N, K)      int8   — or packed int4: (N, K//2) uint8, two
+                     K-values per byte (even K in low nibble)
+  scales (N, K//bs)  f32 blockwise, or (1, 1) per-tensor (one scalar per
+                     matrix, the paper's LLM setting)
+
+This is the serving path for every QTensor weight, including the
+tied-embedding head where the (vocab, d) table already sits in the
+out-major layout.
+
 Grid (M/TM, N/TN, K/TK) with a VMEM fp32 accumulator scratch; the dequant
-(convert + scale multiply) happens on the (TK, TN) tile already resident
+(convert + scale multiply) happens on the weight tile already resident
 in VMEM, feeding the MXU dot — the HBM read is 1 byte (or half) per
-weight instead of 2, which is the whole point of serving INT4/INT8 models
-(decode is weight-bandwidth-bound).  K tiles are the innermost
+weight instead of 2-4, which is the whole point of serving INT4/INT8
+models (decode is weight-bandwidth-bound).  K tiles are the innermost
 ("arbitrary") grid dim; output is written on the last K step.
 
-TPU alignment: TN multiple of 128 (lanes), TK = bs multiple of 8; int4
-unpack is a nibble shift + sign-extend, vectorizable on VREGs.
+Edge handling: M (decode batch — 1, 8, 12, ... rather than a multiple of
+128) and N are padded *inside* the pallas wrappers to the tile grid and
+sliced back; K tiles stay locked to the quant block so the scale
+BlockSpec indexing is exact.  TPU alignment: TN multiple of 128 (lanes)
+for large N, TK = bs multiple of 8; int4 unpack is a nibble shift +
+sign-extend, vectorizable on VREGs.
 """
 
 from __future__ import annotations
@@ -30,6 +50,20 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import tpu_compiler_params
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pick_tile_k(K: int, pref: int = 512) -> int:
+    """Largest 8-aligned divisor of K up to ``pref`` (whole K if none):
+    the per-tensor path has no quant block locking the K tile, so pick
+    something VMEM-friendly that still divides K exactly."""
+    for cand in (pref, 384, 256, 128, 64, 32, 16, 8):
+        if cand <= K and K % cand == 0:
+            return cand
+    return K
 
 
 def _wq_kernel(x_ref, c_ref, s_ref, o_ref, acc_ref, *, n_k, int4):
@@ -71,12 +105,18 @@ def wq_matmul_pallas(x, codes, scales, *, block_k: int, int4: bool,
     # indexes scale rows by the K-*tile* grid index, which covers the right
     # (block, column) scale row only when one K tile == one quant block.
     tile_k = block_k
-    tile_m = min(tile_m, M)
+    # M edge: decode batches are small and ragged (1, 8, 12, ...) — pad x
+    # up to an 8-aligned tile grid here and slice the output back, so
+    # callers never need M % tile_m == 0
+    tile_m = min(tile_m, _round_up(M, 8))
+    m_pad = _round_up(M, tile_m)
+    if m_pad != M:
+        x = jnp.pad(x, ((0, m_pad - M), (0, 0)))
     tile_n = min(tile_n, N)
-    assert M % tile_m == 0 and N % tile_n == 0 and K % tile_k == 0
+    assert N % tile_n == 0 and K % tile_k == 0
     assert scales.shape == (K // block_k, N), scales.shape
     n_k = K // tile_k
-    grid = (M // tile_m, N // tile_n, n_k)
+    grid = (m_pad // tile_m, N // tile_n, n_k)
 
     x_spec = pl.BlockSpec((tile_m, tile_k), lambda i, j, k: (i, k))
     if int4:
@@ -88,14 +128,114 @@ def wq_matmul_pallas(x, codes, scales, *, block_k: int, int4: bool,
     s_spec = pl.BlockSpec((1, tile_n), lambda i, j, k: (k, j))
     o_spec = pl.BlockSpec((tile_m, tile_n), lambda i, j, k: (i, j))
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_wq_kernel, n_k=n_k, int4=int4),
         grid=grid,
         in_specs=[x_spec, c_spec, s_spec],
         out_specs=o_spec,
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((m_pad, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, codes, scales)
+    return out[:M] if m_pad != M else out
+
+
+# --------------------------------------------------------------------------
+# Transposed (out-major) layout: the QTensor serving entry point
+# --------------------------------------------------------------------------
+
+def _wqt_kernel(x_ref, c_ref, s_ref, o_ref, acc_ref, *, n_k, int4,
+                per_tensor):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                       # (TM, TK)
+    codes = c_ref[...]                   # (TN, TK) int8 | (TN, TK//2) uint8
+    if int4:
+        lo = (codes & 0xF).astype(jnp.int8)
+        hi = ((codes >> 4) & 0xF).astype(jnp.int8)
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        # interleave back along K: even k = lo nibble, odd k = hi nibble
+        tn, tk2 = codes.shape
+        w = jnp.stack([lo, hi], axis=-1).reshape(tn, tk2 * 2)
+    else:
+        w = codes
+    s = s_ref[...]                       # (TN, 1) blockwise | (1, 1) scalar
+    wd = w.astype(jnp.float32) * (s[0, 0] if per_tensor else s)
+    # x (TM, TK) contracted with wd (TN, TK) along the shared K axis
+    acc_ref[...] += jax.lax.dot_general(
+        x.astype(jnp.float32), wd,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def wqt_matmul_pallas(x, codes, scales, *, block_k: int, int4: bool,
+                      tile_m: int = 128, tile_n: int = 128,
+                      interpret: bool = True):
+    """x (M, K) @ dequant(codes (N, K[/2]), scales)^T -> (M, N).
+
+    ``block_k == -1`` is the per-tensor mode: ``scales`` is a (1, 1)
+    scalar shared by the whole matrix and the K tile is free; otherwise
+    the K tile is locked to the quant block (``scales`` is (N, K//bs)).
+    M and N edges are padded to the tile grid and sliced back.
+    """
+    M, K = x.shape
+    N = codes.shape[0]
+    per_tensor = block_k == -1
+    if per_tensor:
+        assert scales.shape[-2:] == (1, 1), scales.shape
+        tile_k = _pick_tile_k(K)
+    else:
+        tile_k = block_k
+        assert K % tile_k == 0, (K, tile_k)
+        assert scales.shape == (N, K // block_k), scales.shape
+    if int4:
+        assert tile_k % 2 == 0 and codes.shape == (N, K // 2), codes.shape
+    else:
+        assert codes.shape == (N, K), codes.shape
+
+    tile_m = min(tile_m, _round_up(M, 8))
+    m_pad = _round_up(M, tile_m)
+    if m_pad != M:
+        x = jnp.pad(x, ((0, m_pad - M), (0, 0)))
+    tile_n = min(tile_n, _round_up(N, 8))
+    n_pad = _round_up(N, tile_n)
+    if n_pad != N:
+        codes = jnp.pad(codes, ((0, n_pad - N), (0, 0)))
+        if not per_tensor:
+            scales = jnp.pad(scales, ((0, n_pad - N), (0, 0)))
+    n_k = K // tile_k
+    grid = (m_pad // tile_m, n_pad // tile_n, n_k)
+
+    x_spec = pl.BlockSpec((tile_m, tile_k), lambda i, j, k: (i, k))
+    kdiv = 2 if int4 else 1
+    c_spec = pl.BlockSpec((tile_n, tile_k // kdiv), lambda i, j, k: (j, k))
+    if per_tensor:
+        s_spec = pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
+    else:
+        s_spec = pl.BlockSpec((tile_n, 1), lambda i, j, k: (j, k))
+    o_spec = pl.BlockSpec((tile_m, tile_n), lambda i, j, k: (i, j))
+
+    out = pl.pallas_call(
+        functools.partial(_wqt_kernel, n_k=n_k, int4=int4,
+                          per_tensor=per_tensor),
+        grid=grid,
+        in_specs=[x_spec, c_spec, s_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, codes, scales)
+    if m_pad != M or n_pad != N:
+        out = out[:M, :N]
+    return out

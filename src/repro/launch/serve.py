@@ -1,8 +1,16 @@
 """Distributed serving launcher: sharded params + KV cache on a mesh,
 batched prefill+decode (the execution twin of the decode dry-run cells).
 
+``--weights rtn:int4`` now means *stored* int4: integer-format casts keep
+their packed codes + scales as QTensor parameters (sharded congruently by
+the same rule set as the dense weights) and every matmul streams the
+codes through the wq_matmul kernel / jnp fallback — no dense weight
+materialization on the serving path.  ``--store dense`` restores the
+legacy dequantized-at-load behavior.
+
     REPRO_FORCE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
-        --arch granite-3-2b --smoke --mesh 2x4 --batch 8 --prompt-len 32
+        --arch granite-3-2b --smoke --mesh 2x4 --batch 8 --prompt-len 32 \
+        --weights rtn:int4
 """
 
 from __future__ import annotations
@@ -19,13 +27,13 @@ if os.environ.get("REPRO_FORCE_DEVICES"):
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_config, get_smoke_config  # noqa: E402
-from repro.core import QuantConfig, QuantPolicy, cast_params  # noqa: E402
-from repro.distributed import cache_shardings, params_shardings  # noqa: E402
-from repro.models.lm import init_cache, lm_decode, lm_init, lm_prefill  # noqa: E402
+from repro.core import (QuantPolicy, cast_params, get_format,  # noqa: E402
+                        param_nbytes, quantize_params, qtensor_use_kernel)
+from repro.core.formats import IntFormat  # noqa: E402
+from repro.distributed import params_shardings  # noqa: E402
+from repro.models.lm import lm_decode, lm_init, lm_prefill  # noqa: E402
 
 
 def main():
@@ -37,6 +45,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--weights", default="fp32")
+    ap.add_argument("--store", choices=("auto", "qtensor", "dense"),
+                    default="auto",
+                    help="auto: QTensor codes for int formats, dense cast "
+                         "otherwise")
+    ap.add_argument("--use-kernel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="wq_matmul dispatch (auto: TPU kernel, else jnp)")
     ap.add_argument("--kv-quant", action="store_true")
     args = ap.parse_args()
 
@@ -49,12 +64,22 @@ def main():
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = lm_init(jax.random.PRNGKey(0), cfg)
+    dense_bytes = param_nbytes(params)
     if args.weights != "fp32":
-        mode, fmt = args.weights.split(":")
-        qc = QuantConfig(method="ptq", fmt_name=fmt,
-                         policy=QuantPolicy(min_size=256 if args.smoke else 1024))
-        params = cast_params(params, qc.fmt, qc.policy, qc.block_size,
-                             mode=mode, key=jax.random.PRNGKey(1))
+        mode, fmt_name = args.weights.split(":")
+        fmt = get_format(fmt_name)
+        policy = QuantPolicy(min_size=256 if args.smoke else 1024)
+        store_q = (args.store == "qtensor"
+                   or (args.store == "auto" and isinstance(fmt, IntFormat)
+                       and fmt.bits in (4, 8)))
+        if store_q:
+            params = quantize_params(params, fmt, policy, -1, mode=mode,
+                                     key=jax.random.PRNGKey(1))
+        else:
+            params = cast_params(params, fmt, policy, -1, mode=mode,
+                                 key=jax.random.PRNGKey(1))
+    use_kernel = {"auto": None, "on": True, "off": False}[args.use_kernel]
+    stored_bytes = param_nbytes(params)
 
     cache_len = args.prompt_len + args.new_tokens
     with mesh:
@@ -63,10 +88,17 @@ def main():
         toks = jax.random.randint(jax.random.PRNGKey(2),
                                   (args.batch, args.prompt_len), 0, cfg.vocab)
 
-        prefill = jax.jit(lambda p, t: lm_prefill(
-            p, cfg, t, cache_len=cache_len, kv_quant=args.kv_quant))
-        decode = jax.jit(lambda p, c, t, pos: lm_decode(p, cfg, c, t, pos),
-                         donate_argnums=(1,))
+        def prefill_fn(p, t):
+            with qtensor_use_kernel(use_kernel):
+                return lm_prefill(p, cfg, t, cache_len=cache_len,
+                                  kv_quant=args.kv_quant)
+
+        def decode_fn(p, c, t, pos):
+            with qtensor_use_kernel(use_kernel):
+                return lm_decode(p, cfg, c, t, pos)
+
+        prefill = jax.jit(prefill_fn)
+        decode = jax.jit(decode_fn, donate_argnums=(1,))
 
         t0 = time.perf_counter()
         logits, cache = prefill(params, toks)
@@ -85,7 +117,9 @@ def main():
 
     n_tok = args.batch * args.new_tokens
     print(f"mesh={dict(mesh.shape)} weights={args.weights} "
-          f"kv_quant={args.kv_quant}")
+          f"kv_quant={args.kv_quant} "
+          f"weight_bytes={stored_bytes} ({stored_bytes/dense_bytes:.2f}x "
+          f"of fp32 dense)")
     print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.3f}s | "
           f"decode: {n_tok} tokens in {t_decode:.3f}s "
           f"({n_tok/t_decode:.1f} tok/s)")

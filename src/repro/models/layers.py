@@ -16,8 +16,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.qtensor import QTensor
+from repro.core.qtensor import matmul as _qt_matmul
+
 Array = jnp.ndarray
 NEG_INF = -1e30
+
+
+def matmul(x: Array, w) -> Array:
+    """Central weight-matmul dispatch: ``x @ w``.
+
+    ``w`` is either a dense (..., K, N) array (cast to the activation
+    dtype, the mixed-precision rule every layer used inline before) or a
+    :class:`~repro.core.qtensor.QTensor` stored out-major (N, K), routed
+    through the ``wq_matmul`` Pallas kernel (dequant-in-VMEM) or its
+    bit-compatible jnp oracle per the kernel auto-default.  Every weight
+    matmul in the model goes through here so quantized-storage serving is
+    a parameter-tree property, not a model rewrite.
+    """
+    if isinstance(w, QTensor):
+        return _qt_matmul(x, w).astype(x.dtype)
+    return x @ w.astype(x.dtype)
 
 
 def _norm_init(d):
@@ -99,9 +118,9 @@ def _qkv(params, spec: AttnSpec, x: Array, ctx: Optional[Array] = None):
     """Project q from x, k/v from ctx (cross) or x (self)."""
     b = x.shape[0]
     src = ctx if spec.is_cross else x
-    q = (x @ params["wq"].astype(x.dtype)).reshape(b, x.shape[1], spec.n_heads, spec.head_dim)
-    k = (src @ params["wk"].astype(x.dtype)).reshape(b, src.shape[1], spec.n_kv_heads, spec.head_dim)
-    v = (src @ params["wv"].astype(x.dtype)).reshape(b, src.shape[1], spec.n_kv_heads, spec.head_dim)
+    q = matmul(x, params["wq"]).reshape(b, x.shape[1], spec.n_heads, spec.head_dim)
+    k = matmul(src, params["wk"]).reshape(b, src.shape[1], spec.n_kv_heads, spec.head_dim)
+    v = matmul(src, params["wv"]).reshape(b, src.shape[1], spec.n_kv_heads, spec.head_dim)
     if spec.qk_norm:
         q = rms_norm(q, params["q_norm_scale"])
         k = rms_norm(k, params["k_norm_scale"])
@@ -174,7 +193,7 @@ def attn_apply(
                             causal and not spec.is_cross, spec.window,
                             spec.softcap, chunk)
     o = o.reshape(b, l, spec.q_dim)
-    out = o @ params["wo"].astype(x.dtype)
+    out = matmul(o, params["wo"])
     return (out, kv) if return_kv else out
 
 
@@ -307,7 +326,7 @@ def attn_decode(
                           cv.astype(x.dtype))
 
     if spec.is_cross:
-        q = (x @ params["wq"].astype(x.dtype)).reshape(b, spec.n_heads, hd)
+        q = matmul(x, params["wq"]).reshape(b, spec.n_heads, hd)
         if spec.qk_norm:
             q = rms_norm(q, params["q_norm_scale"])
         q4 = q.reshape(b, g, rep, hd)
@@ -317,7 +336,7 @@ def attn_decode(
             logits = spec.softcap * jnp.tanh(logits / spec.softcap)
         probs = jax.nn.softmax(logits, axis=-1)
         o = out_from(probs, v).reshape(b, 1, spec.q_dim)
-        return o @ params["wo"].astype(x.dtype), cache_k, cache_v
+        return matmul(o, params["wo"]), cache_k, cache_v
 
     q, k, v = _qkv(params, spec, x)
     q = apply_rope(q, pos[:, None], spec.rope_theta)
@@ -344,7 +363,7 @@ def attn_decode(
     bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]  # (b,1,1,l)
     probs = jax.nn.softmax(logits + bias, axis=-1)
     o = out_from(probs, cache_v).reshape(b, 1, spec.q_dim)
-    return o @ params["wo"].astype(x.dtype), cache_k, cache_v
+    return matmul(o, params["wo"]), cache_k, cache_v
 
 
 # --------------------------------------------------------------------------
@@ -368,14 +387,14 @@ def mlp_init(key, spec: MLPSpec):
 
 
 def mlp_apply(params, spec: MLPSpec, x: Array) -> Array:
-    up = x @ params["w_up"].astype(x.dtype)
+    up = matmul(x, params["w_up"])
     if spec.kind == "swiglu":
-        h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype)) * up
+        h = jax.nn.silu(matmul(x, params["w_gate"])) * up
     elif spec.kind == "geglu":
-        h = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype)) * up
+        h = jax.nn.gelu(matmul(x, params["w_gate"])) * up
     else:
         h = jax.nn.gelu(up)
-    return h @ params["w_down"].astype(x.dtype)
+    return matmul(h, params["w_down"])
 
 
 # --------------------------------------------------------------------------
@@ -406,6 +425,22 @@ def moe_init(key, spec: MoESpec):
     if spec.kind in ("swiglu", "geglu"):
         p["w_gate"] = jax.random.normal(ks[3], (e, d, f), jnp.float32) * scale
     return p
+
+
+def _moe_expert_matmul(xin: Array, w) -> Array:
+    """Per-expert matmul ``xin (g, e, c, d) @ w (e, d, f) -> (g, e, c, f)``.
+
+    Dense experts stay a single einsum; QTensor experts (stored
+    (e, f, d)) route each expert's (g*c, d) slab through the central
+    quantized matmul — expert weights are the dominant HBM term of MoE
+    decode, so they must stream as codes too.
+    """
+    if isinstance(w, QTensor):
+        g, e, c, d = xin.shape
+        xe = xin.transpose(1, 0, 2, 3).reshape(e, g * c, d)
+        out = _qt_matmul(xe, w).astype(xin.dtype)
+        return out.reshape(e, g, c, -1).transpose(1, 0, 2, 3)
+    return jnp.einsum("gecd,edf->gecf", xin, w.astype(xin.dtype))
 
 
 def moe_apply(params, spec: MoESpec, x: Array) -> Tuple[Array, Dict[str, Array]]:
@@ -456,14 +491,14 @@ def moe_apply(params, spec: MoESpec, x: Array) -> Tuple[Array, Dict[str, Array]]
                          topv.astype(x.dtype))
 
     xin = jnp.einsum("gtec,gtd->gecd", dispatch, xt)
-    up = jnp.einsum("gecd,edf->gecf", xin, params["w_up"].astype(x.dtype))
+    up = _moe_expert_matmul(xin, params["w_up"])
     if spec.kind in ("swiglu", "geglu"):
-        gate = jnp.einsum("gecd,edf->gecf", xin, params["w_gate"].astype(x.dtype))
+        gate = _moe_expert_matmul(xin, params["w_gate"])
         act = jax.nn.silu(gate) if spec.kind == "swiglu" else jax.nn.gelu(gate)
         h = act * up
     else:
         h = jax.nn.gelu(up)
-    eout = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(x.dtype))
+    eout = _moe_expert_matmul(h, params["w_down"])
     out = jnp.einsum("gtec,gecd->gtd", combine, eout)
 
     # GShard aux loss: mean fraction of tokens per expert * mean router prob

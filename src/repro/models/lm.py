@@ -29,12 +29,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.qtensor import QTensor
 from repro.distributed.context import constrain, constrain_tree, scan_unroll
 
 from . import layers, ssm
 from .layers import (AttnSpec, MLPSpec, MoESpec, attn_apply, attn_decode,
-                     attn_init, dense_init, mlp_apply, mlp_init, moe_apply,
-                     moe_init, rms_norm)
+                     attn_init, dense_init, matmul, mlp_apply, mlp_init,
+                     moe_apply, moe_init, rms_norm)
 from .ssm import (Mamba2Spec, RWKV6Spec, mamba2_apply, mamba2_decode,
                   mamba2_init, mamba2_init_state, rwkv6_channel_mix,
                   rwkv6_channel_mix_init, rwkv6_init_state, rwkv6_time_mix,
@@ -282,6 +283,9 @@ def _embed(params, cfg: LMConfig, tokens: Array) -> Array:
         parts = [jnp.take(params["embed"][c], tokens[..., c], axis=0)
                  for c in range(cfg.n_codebooks)]
         x = sum(parts)
+    elif isinstance(params["embed"], QTensor):
+        # gather + per-row dequant: reads only the touched code rows
+        x = params["embed"].take(tokens)
     else:
         x = jnp.take(params["embed"], tokens, axis=0)
     x = x.astype(cfg.dtype)
@@ -304,8 +308,14 @@ def _head(params, cfg: LMConfig, x: Array) -> Array:
             logits = jnp.einsum("bld,cdv->blcv", x,
                                 params["lm_head"].astype(x.dtype))
     else:
-        w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
-        logits = x @ w.astype(x.dtype)
+        w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        if isinstance(w, QTensor):
+            # QTensor storage is out-major (vocab, d) for BOTH the tied
+            # table and the (transposed-at-pack-time) untied head — the
+            # transpose is baked into the layout, one kernel serves both
+            logits = matmul(x, w)
+        else:
+            logits = x @ (w.T if cfg.tie_embeddings else w).astype(x.dtype)
     logits = constrain(logits.astype(jnp.float32), "logits")
     if cfg.softcap_final is not None:
         logits = cfg.softcap_final * jnp.tanh(logits / cfg.softcap_final)
@@ -321,8 +331,7 @@ def _trunk(params, cfg: LMConfig, tokens: Array,
     positions = jnp.arange(l)
     ctx = None
     if cfg.n_image_tokens and image_embeds is not None:
-        ctx = (image_embeds.astype(cfg.dtype)
-               @ params["vision_proj"].astype(cfg.dtype))
+        ctx = matmul(image_embeds.astype(cfg.dtype), params["vision_proj"])
 
     def unit_body(x, unit_p):
         x = constrain(x, "residual")
@@ -494,8 +503,7 @@ def lm_prefill(params, cfg: LMConfig, tokens: Array,
     positions = jnp.arange(l)
     ctx = None
     if cfg.n_image_tokens and image_embeds is not None:
-        ctx = (image_embeds.astype(cfg.dtype)
-               @ params["vision_proj"].astype(cfg.dtype))
+        ctx = matmul(image_embeds.astype(cfg.dtype), params["vision_proj"])
 
     def unit_body(x, unit_p):
         x = constrain(x, "residual")

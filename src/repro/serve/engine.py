@@ -9,24 +9,52 @@ greedy or temperature sampling.  Weights can be served as:
 * ``rtn:<fmt>`` — RTN-cast (e.g. ``rtn:int4``), the paper's deployment cast;
 * ``rr:<fmt>``  — randomized-rounding cast (the paper evaluates both).
 
-The quantized cast uses the same policy/format machinery as training, so a
-LOTION checkpoint serves through the identical code path it was optimized
-for.  (The packed-int4 Pallas matmul lives in repro.kernels.wq_matmul and
-is benchmarked separately; the engine itself keeps dequantized weights,
-which is exact for correctness purposes.)
+For integer formats the cast is *stored*, not just simulated:
+``rtn:int4`` keeps the packed int4 codes + scales as
+:class:`~repro.core.qtensor.QTensor` parameters end-to-end through
+prefill and decode, and every weight matmul streams the codes through the
+``wq_matmul`` Pallas kernel (dequant-in-VMEM) — decode is
+weight-bandwidth-bound, so reading 0.5-1 byte per weight instead of 4 is
+the serving win the whole training pipeline exists for (DESIGN.md §6).
+Off-TPU the same QTensor tree runs through the bit-compatible jnp
+reference path (``use_kernel`` auto-default, as in the fused optimizer
+step); ``quantized_storage=False`` restores the legacy dense-dequantized
+serving path, which remains the behavior for codebook formats (fp4).
+
+Engine mechanics:
+
+* ``generate`` accumulates sampled tokens ON DEVICE and transfers the
+  whole (batch, new_tokens) block once at the end — the per-token
+  ``int(tok[i])`` host sync it replaces serialized every decode step on
+  the transfer latency.
+* ``cache_len`` is bucketed up to the next power of two, so the decode
+  step — the serving hot loop, whose static shapes are (batch,
+  cache_len) — compiles O(log max_seq) times instead of once per
+  distinct prompt-length/new-token combination, and prefill no longer
+  re-traces when only ``max_new_tokens`` varies.  Bucketing is
+  output-invariant: unwritten cache slots are exactly masked by the
+  ring-validity rule (and for sliding-window layers whose window
+  exceeds the unbucketed cache length, the ring grows toward the true
+  window — strictly more window-bounded context, never less).  Prompt
+  widths are NOT bucketed: left-pad tokens are attended (they land in
+  valid cache slots), so padding beyond the batch max would change
+  generations — prefill still compiles per distinct batch prompt width,
+  as before.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import QuantConfig, cast_params
-from repro.models.lm import LMConfig, init_cache, lm_decode, lm_prefill
+from repro.core import QuantPolicy, cast_params, quantize_params
+from repro.core.formats import IntFormat, get_format
+from repro.core.qtensor import qtensor_use_kernel
+from repro.models.lm import LMConfig, lm_decode, lm_prefill
 
 
 @dataclasses.dataclass
@@ -36,6 +64,22 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0       # 0 => greedy
     seed: int = 0
+    # Quantized STORAGE: None = auto (QTensor codes for int4/int8, dense
+    # cast otherwise); False forces the legacy dense-dequantized path.
+    quantized_storage: Optional[bool] = None
+    # quantize the embedding table / lm head too (tied-head serving reads
+    # the whole table per step — the single largest weight of small LMs)
+    include_embeddings: bool = False
+    # Pallas wq_matmul dispatch: None = auto (TPU on, else jnp fallback)
+    use_kernel: Optional[bool] = None
+    policy: Optional[QuantPolicy] = None
+
+
+def bucket_cache_len(n: int, floor: int = 16) -> int:
+    """Next power of two >= n (min ``floor``): bounds the number of
+    distinct static cache shapes — and therefore decode re-jits —
+    to O(log max_seq)."""
+    return max(floor, 1 << max(n - 1, 1).bit_length())
 
 
 class Engine:
@@ -43,31 +87,49 @@ class Engine:
         self.cfg = cfg
         self.scfg = scfg
         self.params = self._prepare(params)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: lm_decode(p, cfg, c, t, pos))
-        self._prefill = jax.jit(
-            lambda p, t, cl: lm_prefill(p, cfg, t, cache_len=cl),
-            static_argnums=(2,))
+
+        # the kernel-backend choice is read at TRACE time; baking the
+        # with-block into the jitted callables pins this engine's choice
+        # regardless of what other engines/tests set globally
+        def _decode_fn(p, c, t, pos):
+            with qtensor_use_kernel(scfg.use_kernel):
+                return lm_decode(p, cfg, c, t, pos)
+
+        def _prefill_fn(p, t, cl):
+            with qtensor_use_kernel(scfg.use_kernel):
+                return lm_prefill(p, cfg, t, cache_len=cl)
+
+        self._decode = jax.jit(_decode_fn)
+        self._prefill = jax.jit(_prefill_fn, static_argnums=(2,))
 
     def _prepare(self, params):
         w = self.scfg.weights
         if w == "fp32":
             return params
         mode, fmt_name = w.split(":")
-        qcfg = QuantConfig(method="ptq", fmt_name=fmt_name,
-                           block_size=self.scfg.block_size)
+        fmt = get_format(fmt_name)
+        policy = self.scfg.policy if self.scfg.policy is not None else \
+            QuantPolicy(include_embeddings=self.scfg.include_embeddings)
         key = jax.random.PRNGKey(self.scfg.seed)
-        return cast_params(params, qcfg.fmt, qcfg.policy,
-                           qcfg.block_size, mode=mode, key=key)
+        storage = self.scfg.quantized_storage
+        if storage is None:
+            storage = isinstance(fmt, IntFormat) and fmt.bits in (4, 8)
+        if storage:
+            return quantize_params(params, fmt, policy,
+                                   self.scfg.block_size, mode=mode, key=key)
+        return cast_params(params, fmt, policy,
+                           self.scfg.block_size, mode=mode, key=key)
 
     def generate(self, prompts: Sequence[Sequence[int]],
                  max_new_tokens: Optional[int] = None) -> List[List[int]]:
         """Greedy/temperature generation for a batch of token prompts."""
-        mnt = max_new_tokens or self.scfg.max_new_tokens
+        mnt = max_new_tokens if max_new_tokens is not None else \
+            self.scfg.max_new_tokens
         b = len(prompts)
-        lens = [len(p) for p in prompts]
-        max_len = max(lens)
-        cache_len = max_len + mnt
+        if mnt <= 0:
+            return [[] for _ in prompts]
+        max_len = max(len(p) for p in prompts)
+        cache_len = bucket_cache_len(max_len + mnt)
         # left-pad with token 0 so every prompt ends at position max_len-1
         toks = np.zeros((b, max_len), np.int32)
         for i, p in enumerate(prompts):
@@ -75,17 +137,18 @@ class Engine:
         logits, cache = self._prefill(self.params, jnp.asarray(toks), cache_len)
 
         key = jax.random.PRNGKey(self.scfg.seed + 1)
-        out = [[] for _ in range(b)]
         pos = jnp.full((b,), max_len - 1, jnp.int32)
         tok = self._sample(logits[:, 0], key)
-        for t in range(mnt):
-            for i in range(b):
-                out[i].append(int(tok[i]))
+        steps = [tok]                  # accumulated on device
+        for t in range(mnt - 1):
             pos = pos + 1
             logits, cache = self._decode(self.params, cache, tok[:, None], pos)
             key = jax.random.fold_in(key, t)
             tok = self._sample(logits[:, 0], key)
-        return out
+            steps.append(tok)
+        # one device->host transfer for the whole generation
+        out = np.asarray(jnp.stack(steps, axis=1))
+        return [row.tolist() for row in out]
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         if self.scfg.temperature <= 0.0:

@@ -99,6 +99,95 @@ def test_resume_is_bit_exact(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 
 
+def _lotion_setup(use_kernel):
+    from repro.core import QuantConfig, QuantPolicy
+    from repro.optim import adamw, constant
+    from repro.train import TrainConfig, make_optimizer
+
+    qc = QuantConfig(method="lotion", fmt_name="int4", lam=1e3,
+                     policy=QuantPolicy(min_size=64), use_kernel=use_kernel)
+    tc = TrainConfig(quant=qc, clip_norm=1.0)
+    return tc, make_optimizer(tc, adamw(constant(1e-3)))
+
+
+def test_migrate_opt_state_fused_chain_roundtrip(tmp_path):
+    """Chain-tuple <-> fused-dict migration: train 2 steps on the fused
+    backend, checkpoint, migrate into the chain layout, resume — params
+    match training on the chain backend throughout, bit-exact (both
+    backends share the reserved mu/nu/count/gnorm/penalty keys)."""
+    from repro.data import lm_batch, permutation_table
+    from repro.models.lm import LMConfig, lm_init
+    from repro.train import init_state, make_train_step
+
+    cfg = LMConfig(name="mig", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=2, d_ff=64, vocab=32, dtype=jnp.float32,
+                   remat=False)
+    tc_f, tx_f = _lotion_setup(True)    # fused-dict (interpret kernel)
+    tc_c, tx_c = _lotion_setup(False)   # chain-tuple
+    step_f = jax.jit(make_train_step(cfg, tc_f, tx_f))
+    step_c = jax.jit(make_train_step(cfg, tc_c, tx_c))
+    perm = permutation_table(0, cfg.vocab)
+    batches = [lm_batch(0, s, 4, 16, cfg.vocab, perm) for s in range(4)]
+
+    st = init_state(lm_init(jax.random.PRNGKey(0), cfg), tx_f)
+    for b in batches[:2]:
+        st, _ = step_f(st, b)
+    assert ckpt.opt_state_kind(st["opt"]) == "fused"
+    ckpt.save(str(tmp_path), 2, st)
+
+    # restore the FUSED structure, migrate into the chain template
+    restored, _ = ckpt.load(str(tmp_path), jax.eval_shape(lambda: st))
+    like = init_state(lm_init(jax.random.PRNGKey(0), cfg), tx_c)
+    restored["opt"] = ckpt.migrate_opt_state(restored["opt"], like["opt"])
+    assert ckpt.opt_state_kind(restored["opt"]) == "chain"
+    for b in batches[2:]:
+        restored, _ = step_c(restored, b)
+
+    ref = init_state(lm_init(jax.random.PRNGKey(0), cfg), tx_c)
+    for b in batches:
+        ref, _ = step_c(ref, b)
+    for a, c in zip(jax.tree.leaves(restored["params"]),
+                    jax.tree.leaves(ref["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=2e-6, rtol=2e-6)
+
+    # and back: chain -> fused is the same copy in reverse
+    back = ckpt.migrate_opt_state(
+        restored["opt"],
+        init_state(lm_init(jax.random.PRNGKey(0), cfg), tx_f)["opt"])
+    assert ckpt.opt_state_kind(back) == "fused"
+    np.testing.assert_array_equal(
+        np.asarray(back["count"]),
+        np.asarray([l["count"] for l in restored["opt"]
+                    if isinstance(l, dict) and "count" in l][0]))
+
+
+def test_migrate_rejects_cross_optimizer_state_loss():
+    """Load-bearing keys (mu/nu/count) with no slot in the target layout
+    must raise, not silently wipe optimizer memory."""
+    from repro.checkpoint.migrate import migrate_opt_state
+
+    fused = {"mu": {"w": jnp.ones((4,))}, "nu": {"w": jnp.ones((4,))},
+             "count": jnp.ones((), jnp.int32), "gnorm": jnp.zeros(())}
+    sgd_like = ({"gnorm": jnp.zeros(())}, {"count": jnp.zeros((), jnp.int32)})
+    with pytest.raises(ValueError):
+        migrate_opt_state(fused, sgd_like)
+
+
+def test_migrate_rejects_ef_error_tree():
+    """EF compression state cannot migrate into the fused layout."""
+    from repro.checkpoint.migrate import migrate_opt_state
+
+    src = ({"gnorm": jnp.zeros(())}, {"err": {"w": jnp.zeros((4,))}},
+           {"mu": {"w": jnp.zeros((4,))}, "nu": {"w": jnp.zeros((4,))},
+            "count": jnp.zeros((), jnp.int32)})
+    fused_like = {"mu": {"w": jnp.zeros((4,))}, "nu": {"w": jnp.zeros((4,))},
+                  "count": jnp.zeros((), jnp.int32),
+                  "gnorm": jnp.zeros(())}
+    with pytest.raises(ValueError):
+        migrate_opt_state(src, fused_like)
+
+
 def test_elastic_restore_with_shardings(tmp_path):
     """Restore onto an explicit (single-device) sharding — the elastic
     path API; multi-device resharding is covered by the dry-run harness."""

@@ -176,6 +176,28 @@ def test_wq_matmul_matches_ref(bits, mnk, dtype):
         atol=tol * np.abs(np.asarray(want)).max(), rtol=tol)
 
 
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("m", [1, 3, 12, 77])
+def test_wq_matmul_ragged_m_edge(bits, m):
+    """The M % tile_m assert is lifted: decode-shaped (small/ragged) M is
+    padded inside the kernel wrapper and sliced back — results match the
+    oracle and the aligned-M result row-for-row."""
+    k, n = 256, 128
+    x_full = _rand((128, k), jnp.float32, seed=20, scale=0.5)
+    w = _rand((k, n), jnp.float32, seed=21, scale=0.5)
+    codes, scales = pack_weight(w, block_k=128, bits=bits)
+    want = wq_matmul_ref(x_full[:m], codes, scales, 128, int4=(bits == 4))
+    got = wq_matmul(x_full[:m], codes, scales, block_k=128, bits=bits)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+    # padded-vs-unpadded equivalence: the ragged result equals the first
+    # m rows of the aligned 128-row call
+    aligned = wq_matmul(x_full, codes, scales, block_k=128, bits=bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(aligned[:m]),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_wq_matmul_quantization_error_bounded():
     """End-to-end: int8 wq matmul ~ fp matmul within quantization error."""
     x = _rand((16, 256), jnp.float32, seed=12, scale=0.3)

@@ -55,3 +55,24 @@ def test_property_pack_unpack_roundtrip(seed, n):
     assert packed.size == (n + 1) // 2
     out = unpack_int4(packed, n)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10**6), m=st.integers(1, 160),
+       bits=st.sampled_from([4, 8]))
+def test_property_wq_matmul_m_edge_padding_equivalence(seed, m, bits):
+    """Kernel M-edge handling: for ANY ragged decode batch m, the padded
+    kernel result equals the pure-jnp oracle on the unpadded input (the
+    padding/masking never leaks into real rows)."""
+    from repro.kernels.wq_matmul import pack_weight, wq_matmul
+    from repro.kernels.wq_matmul.ref import wq_matmul_ref
+
+    k, n = 128, 128
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n)) * 0.5
+    codes, scales = pack_weight(w, block_k=128, bits=bits)
+    got = wq_matmul(x, codes, scales, block_k=128, bits=bits)
+    want = wq_matmul_ref(x, codes, scales, 128, int4=(bits == 4))
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)

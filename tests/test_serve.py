@@ -7,9 +7,11 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
+from repro.core import QTensor, has_qtensor
 from repro.models.lm import (LMConfig, init_cache, lm_decode, lm_forward,
                              lm_init, lm_prefill)
 from repro.serve import Engine, ServeConfig
+from repro.serve.engine import bucket_cache_len
 
 CFG = LMConfig(name="s", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
                d_ff=128, vocab=64, dtype=jnp.float32, remat=False)
@@ -63,6 +65,80 @@ def test_kv_quantized_decode_close_to_fp():
     err = np.abs(np.asarray(ld[:, 0] - full[:, l - 1]))
     rel = err.max() / max(np.abs(np.asarray(full[:, l - 1])).max(), 1e-6)
     assert rel < 0.08, rel   # int8 KV: small logit perturbation
+
+
+def test_engine_quantized_storage_is_default_for_int():
+    """rtn:int4 means STORED int4: the engine's prepared params hold
+    QTensor codes, and generation still works end-to-end."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    eng = Engine(CFG, params, ServeConfig(weights="rtn:int4",
+                                          max_new_tokens=4))
+    assert has_qtensor(eng.params)
+    outs = eng.generate([[1, 2, 3], [7]])
+    assert all(len(o) == 4 for o in outs)
+    # fp4 (codebook) falls back to the dense cast
+    eng_fp4 = Engine(CFG, params, ServeConfig(weights="rtn:fp4",
+                                              max_new_tokens=2))
+    assert not has_qtensor(eng_fp4.params)
+    # and an explicit opt-out restores the dense path for int too
+    eng_dense = Engine(CFG, params, ServeConfig(weights="rtn:int4",
+                                                quantized_storage=False,
+                                                max_new_tokens=2))
+    assert not has_qtensor(eng_dense.params)
+
+
+def test_engine_quantized_storage_matches_dense_cast_serving():
+    """Storage is a representation change only: QTensor serving and the
+    legacy dense-dequantized serving produce THE SAME greedy tokens —
+    per-tensor int8 dequantizes to identical floats on the jnp path, so
+    any divergence here is a storage-path bug, not quantization noise."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    q = Engine(CFG, params, ServeConfig(weights="rtn:int8",
+                                        max_new_tokens=16, use_kernel=False))
+    d = Engine(CFG, params, ServeConfig(weights="rtn:int8",
+                                        quantized_storage=False,
+                                        max_new_tokens=16))
+    prompts = [[1, 2, 3], [9, 8, 7, 6]]
+    assert q.generate(prompts) == d.generate(prompts)
+
+
+def test_bucket_cache_len_bounds_compiles():
+    assert bucket_cache_len(1) == 16
+    assert bucket_cache_len(16) == 16
+    assert bucket_cache_len(17) == 32
+    assert bucket_cache_len(100) == 128
+    # distinct max_new_tokens within one bucket share one compiled decode
+    buckets = {bucket_cache_len(8 + n) for n in range(1, 30)}
+    assert len(buckets) <= 3, buckets
+
+
+def test_engine_prompt_width_not_padded_beyond_batch_max():
+    """Bucketing must not change generations: prompt width stays at the
+    batch max (left-pad tokens are attended, so widening would shift
+    every generation).  Identical prompts through engines built from the
+    same params must generate identically regardless of other batch
+    shapes served before."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    a = Engine(CFG, params, ServeConfig(weights="fp32", max_new_tokens=6))
+    b = Engine(CFG, params, ServeConfig(weights="fp32", max_new_tokens=6))
+    b.generate([[5] * 9])           # warm a different prompt width first
+    assert a.generate([[1, 2, 3]]) == b.generate([[1, 2, 3]])
+
+
+def test_engine_zero_new_tokens():
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    eng = Engine(CFG, params, ServeConfig(weights="fp32"))
+    assert eng.generate([[1, 2], [3]], max_new_tokens=0) == [[], []]
+
+
+def test_engine_generate_single_transfer_semantics():
+    """Device-side token accumulation returns the same tokens as the
+    seed-era per-token host loop (greedy, prefix property)."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    eng = Engine(CFG, params, ServeConfig(weights="fp32"))
+    long = eng.generate([[1, 2, 3]], max_new_tokens=8)
+    short = eng.generate([[1, 2, 3]], max_new_tokens=4)
+    assert long[0][:4] == short[0]  # greedy decode is prefix-stable
 
 
 @pytest.mark.parametrize("arch", ["gemma2-2b", "zamba2-2.7b"])
