@@ -246,6 +246,12 @@ def cache_spec(path, x, mesh, batch: int) -> P:
     length-sharding is architecture-agnostic, unlike head-sharding which
     fails for small GQA head counts.  Recurrent states shard heads/channels
     over `model`.
+
+    The continuous-batching slot pool is the same pytree with
+    ``batch == n_slots`` (a fixed compile-time constant — DESIGN.md §7),
+    so one rule set serves static and scheduled decode; quantized caches
+    ride as ``k/v -> codes|scale`` children (int8, or packed-uint8 int4
+    whose trailing head_dim/2 stays unsharded like head_dim).
     """
     name = _leaf_name(path)
     dims = list(x.shape)

@@ -38,12 +38,16 @@ def _scalars_row(lr, bc1, bc2, clip_scale, scale):
 def fused_opt_step_leaf(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
                         lam: float, fmt_name: str, block_size: int,
                         b1: float, b2: float, eps: float,
-                        weight_decay: float, interpret=None):
-    """One fused (clip + LOTION + AdamW) step for one leaf.
+                        weight_decay: float, core: str = "adamw",
+                        momentum: float = 0.0, fisher_decay=None,
+                        interpret=None):
+    """One fused (clip + LOTION + AdamW/SGD) step for one leaf.
 
     Returns ``(new_w, new_mu, new_nu, pen)`` with ``pen`` the UNSCALED
     penalty scalar (0 for ``lam == 0``).  ``lr``/``bc1``/``bc2``/
     ``clip_scale`` are traced step scalars; everything else is static.
+    ``core="sgd"`` ignores b1/b2/eps/weight_decay/bc* and uses
+    ``momentum``/``fisher_decay`` instead (pass ``bc1=bc2=1.0``).
     """
     interpret = _interpret() if interpret is None else interpret
     fmt = get_format(fmt_name)
@@ -51,7 +55,9 @@ def fused_opt_step_leaf(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
     qmax = 6.0 if fp4 else float(fmt.qmax)
     shape = w.shape
     hyper = dict(qmax=qmax, fp4=fp4, b1=b1, b2=b2, eps=eps,
-                 weight_decay=weight_decay, lam=lam, interpret=interpret)
+                 weight_decay=weight_decay, lam=lam, core=core,
+                 momentum=momentum, fisher_decay=fisher_decay,
+                 interpret=interpret)
 
     def run_2d(c_width, scale, penalty_mode, args):
         tiled = [_to_2d(x, c_width) for x in args]
@@ -88,7 +94,8 @@ def fused_opt_step_leaf(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
                 wi, gi, mi, ni, lr=lr, bc1=bc1, bc2=bc2,
                 clip_scale=clip_scale, lam=lam, fmt_name=fmt_name,
                 block_size=-1, b1=b1, b2=b2, eps=eps,
-                weight_decay=weight_decay, interpret=interpret)
+                weight_decay=weight_decay, core=core, momentum=momentum,
+                fisher_decay=fisher_decay, interpret=interpret)
 
         nw, nm, nn, pens = jax.vmap(one)(*mats)
         return (nw.reshape(shape), nm.reshape(shape), nn.reshape(shape),

@@ -1,7 +1,11 @@
 """Fused optimizer-step kernel (pl.pallas_call + BlockSpec).
 
-One pass per (8x128-aligned) tile computes the ENTIRE per-step update
-rule of the ``clip -> lotion_decoupled -> adamw_core`` chain:
+Two terminal cores share the pass (static ``core`` switch): ``"adamw"``
+(the LM runs) and ``"sgd"`` with optional momentum + Fisher-EMA tracking
+(the paper's synthetic experiments train with SGD/GD; ``fisher_decay``
+maintains the g^2 EMA LOTION reads as f).  For AdamW, one pass per
+(8x128-aligned) tile computes the ENTIRE per-step update rule of the
+``clip -> lotion_decoupled -> adamw_core`` chain:
 
     gc   = g * clip_scale                       (global-norm clip)
     ct   = 1/2 lam f                            (f = pre-update nu)
@@ -49,7 +53,8 @@ N_SCALARS = 8
 
 def _opt_kernel(w_ref, g_ref, mu_ref, nu_ref, sc_ref,
                 w_out, mu_out, nu_out, pen_ref, *,
-                b1, b2, eps, wd, lam, qmax, bs, fp4, penalty_mode):
+                b1, b2, eps, wd, lam, qmax, bs, fp4, penalty_mode,
+                core, momentum, fisher_decay):
     w = w_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
     mu = mu_ref[...].astype(jnp.float32)
@@ -75,10 +80,22 @@ def _opt_kernel(w_ref, g_ref, mu_ref, nu_ref, sc_ref,
         g = g + (ct * (hi - w) - ct * (w - lo))
         pen_ref[0, 0] = 0.5 * jnp.sum(nu * ((hi - w) * (w - lo)))
 
-    mu2 = b1 * mu + (1 - b1) * g
-    nu2 = b2 * nu + (1 - b2) * g * g
-    upd = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + eps)
-    w_out[...] = (w - lr * (upd + wd * w)).astype(w_out.dtype)
+    if core == "adamw":
+        mu2 = b1 * mu + (1 - b1) * g
+        nu2 = b2 * nu + (1 - b2) * g * g
+        upd = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + eps)
+        w_out[...] = (w - lr * (upd + wd * w)).astype(w_out.dtype)
+    else:  # "sgd": the paper's synthetic-experiment optimizer — nu is a
+        # pure Fisher EMA (LOTION's f), never a step denominator
+        nu2 = (fisher_decay * nu + (1 - fisher_decay) * g * g
+               if fisher_decay is not None else nu)
+        if momentum:
+            mu2 = momentum * mu + g
+            step = mu2
+        else:
+            mu2 = mu
+            step = g
+        w_out[...] = (w - lr * step).astype(w_out.dtype)
     mu_out[...] = mu2.astype(mu_out.dtype)
     nu_out[...] = nu2.astype(nu_out.dtype)
 
@@ -87,6 +104,8 @@ def opt_step_pallas(w2d, g2d, mu2d, nu2d, scalars, *,
                     qmax: float, block_size: int, fp4: bool,
                     penalty_mode: str, b1: float, b2: float, eps: float,
                     weight_decay: float, lam: float,
+                    core: str = "adamw", momentum: float = 0.0,
+                    fisher_decay=None,
                     tile_m: int = 8, tile_n: int = 1024,
                     interpret: bool = True):
     """Fused step over a 2-D leaf view.
@@ -113,7 +132,8 @@ def opt_step_pallas(w2d, g2d, mu2d, nu2d, scalars, *,
 
     kern = functools.partial(
         _opt_kernel, b1=b1, b2=b2, eps=eps, wd=weight_decay, lam=lam,
-        qmax=qmax, bs=block_size, fp4=fp4, penalty_mode=penalty_mode)
+        qmax=qmax, bs=block_size, fp4=fp4, penalty_mode=penalty_mode,
+        core=core, momentum=momentum, fisher_decay=fisher_decay)
     return pl.pallas_call(
         kern, grid=grid,
         in_specs=[tile, tile, tile, tile, sc_spec],

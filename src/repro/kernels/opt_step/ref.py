@@ -1,9 +1,11 @@
 """Pure-jnp oracle for the fused optimizer step: exactly the per-leaf
-math of the unfused ``clip -> lotion_decoupled -> adamw_core`` chain,
-with the step scalars (lr, bias corrections, clip scale) precomputed.
+math of the unfused ``clip -> lotion_decoupled -> adamw_core`` (or
+``sgd_core``) chain, with the step scalars (lr, bias corrections, clip
+scale) precomputed.
 
 This doubles as the bit-compatible fallback path of
-``fused_lotion_adamw_core(use_kernel=False)``.
+``fused_lotion_adamw_core``/``fused_lotion_sgd_core`` with
+``use_kernel=False``.
 """
 
 from __future__ import annotations
@@ -19,7 +21,8 @@ from repro.core.lotion import lotion_penalty_and_grad
 def opt_step_ref(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
                  lam: float, fmt_name: str, block_size: int,
                  b1: float, b2: float, eps: float,
-                 weight_decay: float) -> Tuple:
+                 weight_decay: float, core: str = "adamw",
+                 momentum: float = 0.0, fisher_decay=None) -> Tuple:
     """Returns ``(new_w, new_mu, new_nu, pen)``; ``pen`` is the UNSCALED
     penalty value (multiply by ``lam`` for the loss-side number), 0 when
     ``lam == 0`` (non-eligible leaves / no regularizer)."""
@@ -30,8 +33,19 @@ def opt_step_ref(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
         g = g + grad
     else:
         pen = jnp.zeros((), jnp.float32)
-    mu2 = b1 * mu + (1 - b1) * g
-    nu2 = b2 * nu + (1 - b2) * g * g
-    upd = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + eps)
-    new_w = w - lr * (upd + weight_decay * w)
+    if core == "adamw":
+        mu2 = b1 * mu + (1 - b1) * g
+        nu2 = b2 * nu + (1 - b2) * g * g
+        upd = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + eps)
+        new_w = w - lr * (upd + weight_decay * w)
+    else:  # "sgd" (+momentum, optional Fisher g^2 EMA)
+        nu2 = (fisher_decay * nu + (1 - fisher_decay) * g * g
+               if fisher_decay is not None else nu)
+        if momentum:
+            mu2 = momentum * mu + g
+            step = mu2
+        else:
+            mu2 = mu
+            step = g
+        new_w = w - lr * step
     return new_w, mu2, nu2, pen.astype(jnp.float32)

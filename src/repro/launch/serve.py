@@ -11,6 +11,12 @@ legacy dequantized-at-load behavior.
     REPRO_FORCE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
         --arch granite-3-2b --smoke --mesh 2x4 --batch 8 --prompt-len 32 \
         --weights rtn:int4
+
+``--scheduler`` swaps the static prefill+decode loop for an offered-load
+replay (Poisson arrivals) of the continuous-batching scheduler vs the
+static barrier server at equal slot count (``--n-slots``,
+``--steps-per-tick``, ``--arrival-rate``, ``--n-requests``); ``--kv-quant
+[int8|int4]`` selects the quantized KV cache.
 """
 
 from __future__ import annotations
@@ -36,6 +42,44 @@ from repro.distributed import params_shardings  # noqa: E402
 from repro.models.lm import lm_decode, lm_init, lm_prefill  # noqa: E402
 
 
+def _replay(cfg, params, args, use_kernel, kv_quant, stored_bytes,
+            dense_bytes):
+    """Offered-load replay: static barrier batching vs the continuous
+    scheduler at equal slot count (``params`` arrive weight-prepared and
+    sharded, so the serve configs run them as-is)."""
+    from repro.serve import Engine, Scheduler, SchedulerConfig, ServeConfig
+    from repro.serve.replay import (compare, poisson_workload,
+                                    replay_continuous, replay_static)
+
+    scfg = ServeConfig(weights="fp32", use_kernel=use_kernel,
+                       kv_quant=kv_quant, max_new_tokens=args.new_tokens)
+    engine = Engine(cfg, params, scfg)
+    sch = Scheduler(cfg, params, scfg, SchedulerConfig(
+        n_slots=args.n_slots, steps_per_tick=args.steps_per_tick,
+        cache_len=args.prompt_len + args.new_tokens))
+    nt = args.new_tokens
+    workload = poisson_workload(
+        0, args.n_requests, cfg.vocab, rate=args.arrival_rate,
+        prompt_lens=(2, args.prompt_len),
+        budgets=tuple(sorted({max(2, nt // 8), max(2, nt // 2), nt})))
+    replay_static(engine, workload, args.n_slots)      # warm both
+    replay_continuous(sch, workload)
+    rec = compare(replay_static(engine, workload, args.n_slots),
+                  replay_continuous(sch, workload))
+    print(f"offered load: {args.n_requests} reqs @ "
+          f"{args.arrival_rate}/s | weights={args.weights} "
+          f"kv_quant={kv_quant} weight_bytes={stored_bytes} "
+          f"({stored_bytes / dense_bytes:.2f}x of fp32 dense)")
+    for name in ("static", "continuous"):
+        m = rec[name]
+        print(f"{name:>10}: {m['tok_per_s']:8.1f} tok/s | "
+              f"p50 {m['latency_p50_s']:.3f}s p95 {m['latency_p95_s']:.3f}s "
+              f"| goodput@SLO {m['goodput_tok_per_s']:8.1f} tok/s | "
+              f"{m['decode_launches']} launches")
+    print(f"continuous/static throughput: {rec['throughput_ratio']:.2f}x "
+          f"(outputs identical: {rec['outputs_identical']})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -52,7 +96,17 @@ def main():
     ap.add_argument("--use-kernel", choices=("auto", "on", "off"),
                     default="auto",
                     help="wq_matmul dispatch (auto: TPU kernel, else jnp)")
-    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--kv-quant", nargs="?", const="int8", default=None,
+                    choices=("int8", "int4"),
+                    help="quantized KV cache (bare flag = int8)")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="continuous-batching offered-load replay "
+                         "(vs the static barrier server)")
+    ap.add_argument("--n-slots", type=int, default=8)
+    ap.add_argument("--steps-per-tick", type=int, default=4)
+    ap.add_argument("--n-requests", type=int, default=32)
+    ap.add_argument("--arrival-rate", type=float, default=100.0,
+                    help="Poisson arrivals per virtual-clock second")
     args = ap.parse_args()
 
     if args.mesh:
@@ -81,17 +135,23 @@ def main():
     use_kernel = {"auto": None, "on": True, "off": False}[args.use_kernel]
     stored_bytes = param_nbytes(params)
 
+    kv_quant = args.kv_quant or False
     cache_len = args.prompt_len + args.new_tokens
     with mesh:
         p_sh = params_shardings(mesh, jax.eval_shape(lambda: params))
         params = jax.device_put(params, p_sh)
+
+        if args.scheduler:
+            _replay(cfg, params, args, use_kernel, kv_quant,
+                    stored_bytes, dense_bytes)
+            return
         toks = jax.random.randint(jax.random.PRNGKey(2),
                                   (args.batch, args.prompt_len), 0, cfg.vocab)
 
         def prefill_fn(p, t):
             with qtensor_use_kernel(use_kernel):
                 return lm_prefill(p, cfg, t, cache_len=cache_len,
-                                  kv_quant=args.kv_quant)
+                                  kv_quant=kv_quant)
 
         def decode_fn(p, c, t, pos):
             with qtensor_use_kernel(use_kernel):
@@ -117,7 +177,7 @@ def main():
 
     n_tok = args.batch * args.new_tokens
     print(f"mesh={dict(mesh.shape)} weights={args.weights} "
-          f"kv_quant={args.kv_quant} "
+          f"kv_quant={kv_quant} "
           f"weight_bytes={stored_bytes} ({stored_bytes/dense_bytes:.2f}x "
           f"of fp32 dense)")
     print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.3f}s | "

@@ -137,13 +137,20 @@ def _expand_kv(k: Array, n_heads: int) -> Array:
 
 
 def _mask_bias(q_pos: Array, k_pos: Array, causal: bool, window: Optional[int]) -> Array:
-    """(q_len, k_len) additive mask bias from absolute positions."""
-    d = q_pos[:, None] - k_pos[None, :]
-    ok = jnp.ones(d.shape, bool)
+    """(..., q_len, k_len) additive mask bias from absolute positions.
+
+    Positions may be flat ``(len,)`` (shared across the batch — training)
+    or per-row ``(b, len)`` (ragged left-padded prompts).  Negative
+    positions denote left-pad slots and are always masked as keys, so a
+    padded prompt attends exactly what the unpadded prompt would — the
+    invariant that makes per-slot prefill-insert match static batching.
+    """
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = k_pos[..., None, :] >= 0
     if causal:
-        ok &= d >= 0
+        ok = ok & (d >= 0)
     if window is not None:
-        ok &= d < window
+        ok = ok & (d < window)
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
@@ -187,6 +194,8 @@ def attn_apply(
         ke = _expand_kv(k, spec.n_heads)
         ve = _expand_kv(v, spec.n_heads)
         bias = _mask_bias(positions, k_pos, causal and not spec.is_cross, spec.window)
+        if bias.ndim == 3:          # per-row positions: (b, q, k) -> (b, 1, q, k)
+            bias = bias[:, None]
         o = _sdpa(q, ke, ve, bias, spec.softcap)
     else:
         o = _streaming_sdpa(q, k, v, positions, k_pos,
@@ -218,7 +227,8 @@ def _streaming_sdpa(q, k, v, q_pos, k_pos, causal, window, softcap, chunk):
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         # pad as FUTURE positions so the causal mask excludes them even
         # when window is None
-        k_pos = jnp.pad(k_pos, (0, pad), constant_values=10 ** 9)
+        k_pos = jnp.pad(k_pos, ((0, 0),) * (k_pos.ndim - 1) + ((0, pad),),
+                        constant_values=10 ** 9)
     q4 = q.reshape(b, ql, g, rep, d)
     scale = 1.0 / np.sqrt(d)
 
@@ -226,15 +236,18 @@ def _streaming_sdpa(q, k, v, q_pos, k_pos, causal, window, softcap, chunk):
         m, s, o = carry
         kc = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, axis=1)
         vc = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, axis=1)
-        kpc = jax.lax.dynamic_slice_in_dim(k_pos, i * chunk, chunk, axis=0)
+        kpc = jax.lax.dynamic_slice_in_dim(k_pos, i * chunk, chunk,
+                                           axis=k_pos.ndim - 1)
         logits = jnp.einsum("bqgrd,bkgd->bgrqk", q4, kc).astype(jnp.float32)
         logits = logits * scale
         if softcap is not None:
             logits = softcap * jnp.tanh(logits / softcap)
         bias = _mask_bias(q_pos, kpc, causal, window)
         # padded slots carry sentinel positions: mask even when non-causal
-        bias = jnp.where(kpc[None, :] >= 10 ** 9, NEG_INF, bias)
-        logits = logits + bias[None, None, None]
+        bias = jnp.where(kpc[..., None, :] >= 10 ** 9, NEG_INF, bias)
+        # (q, k) -> (1, 1, 1, q, k) / per-row (b, q, k) -> (b, 1, 1, q, k)
+        bias = bias[:, None, None] if bias.ndim == 3 else bias[None, None, None]
+        logits = logits + bias
         m_new = jnp.maximum(m, logits.max(axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(logits - m_new[..., None])
@@ -254,14 +267,57 @@ def _streaming_sdpa(q, k, v, q_pos, k_pos, causal, window, softcap, chunk):
     return o.transpose(0, 3, 1, 2, 4).reshape(b, ql, h, d).astype(q.dtype)
 
 
-# ---- quantized KV cache (int8 per-vector absmax; beyond-paper serving
-# feature using the paper's own quantizer — halves the decode memory term).
+# ---- quantized KV cache (per-vector absmax; beyond-paper serving feature
+# using the paper's own quantizer).  int8 halves the decode cache traffic;
+# int4 (symmetric [-7, 7] nibbles packed two-per-byte along head_dim)
+# quarters it — pairing with int4 weights so the WHOLE decode working set
+# streams at <= 0.5 byte/element.
 
-def kv_quantize(k: Array) -> Dict[str, Array]:
-    """k: (b, l, kvh, hd) -> int8 codes + fp32 scale per (b, l, kvh)."""
+def kv_bits(kv_quant) -> int:
+    """Normalize the ``kv_quant`` option: False/None -> 0 (dense),
+    True/'int8' -> 8, 'int4' -> 4."""
+    if not kv_quant:
+        return 0
+    if kv_quant is True or kv_quant == "int8":
+        return 8
+    if kv_quant == "int4":
+        return 4
+    raise ValueError(f"kv_quant must be False, True, 'int8' or 'int4'; "
+                     f"got {kv_quant!r}")
+
+
+def _pack_int4(codes: Array) -> Array:
+    """int8 (..., hd) in [-7, 7] -> uint8 (..., hd/2); low nibble = even
+    index."""
+    lo = codes[..., 0::2] & 0xF
+    hi = codes[..., 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def _unpack_int4(packed: Array) -> Array:
+    """uint8 (..., hd/2) -> int8 (..., hd) (sign-extended nibbles)."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(packed.shape[:-1] + (2 * packed.shape[-1],))
+
+
+def kv_quantize(k: Array, bits: int = 8) -> Dict[str, Array]:
+    """k: (b, l, kvh, hd) -> codes + fp32 scale per (b, l, kvh).
+
+    ``bits=8``: int8 codes.  ``bits=4``: int4 codes packed two-per-byte
+    along head_dim (requires even head_dim)."""
+    qmax = {8: 127.0, 4: 7.0}[bits]
     absmax = jnp.max(jnp.abs(k), axis=-1, keepdims=True)
-    scale = jnp.where(absmax > 0, absmax / 127.0, jnp.ones_like(absmax))
-    codes = jnp.clip(jnp.rint(k / scale), -127, 127).astype(jnp.int8)
+    scale = jnp.where(absmax > 0, absmax / qmax, jnp.ones_like(absmax))
+    codes = jnp.clip(jnp.rint(k / scale), -qmax, qmax).astype(jnp.int8)
+    if bits == 4:
+        if k.shape[-1] % 2:
+            raise ValueError(f"int4 KV cache needs even head_dim, "
+                             f"got {k.shape[-1]}")
+        codes = _pack_int4(codes)
     return {"codes": codes, "scale": scale.astype(jnp.float32)}
 
 
@@ -269,10 +325,18 @@ def _is_quantized_cache(c) -> bool:
     return isinstance(c, dict) and "codes" in c
 
 
+def _cache_codes(c) -> Array:
+    """Quantized-cache codes as int8, unpacking int4 nibbles (uint8
+    storage marks the packed layout)."""
+    codes = c["codes"]
+    return _unpack_int4(codes) if codes.dtype == jnp.uint8 else codes
+
+
 def _cache_write(cache, new, slot, bidx):
     """Write the (b, kvh, hd) vector `new` at ring slots."""
     if _is_quantized_cache(cache):
-        q = kv_quantize(new[:, None])  # (b,1,kvh,*)
+        bits = 4 if cache["codes"].dtype == jnp.uint8 else 8
+        q = kv_quantize(new[:, None], bits)  # (b,1,kvh,*)
         return {
             "codes": cache["codes"].at[bidx, slot].set(q["codes"][:, 0]),
             "scale": cache["scale"].at[bidx, slot].set(q["scale"][:, 0]),
@@ -310,7 +374,7 @@ def attn_decode(
         """q4: (b, g, rep, hd); ck raw (b,l,g,hd) or quantized."""
         if _is_quantized_cache(ck):
             s = jnp.einsum("bgrd,blgd->bgrl", q4,
-                           ck["codes"].astype(q4.dtype))
+                           _cache_codes(ck).astype(q4.dtype))
             return s.astype(jnp.float32) * ck["scale"][..., 0].transpose(
                 0, 2, 1)[:, :, None, :]
         return jnp.einsum("bgrd,blgd->bgrl", q4,
@@ -321,7 +385,7 @@ def attn_decode(
         if _is_quantized_cache(cv):
             p = probs * cv["scale"][..., 0].transpose(0, 2, 1)[:, :, None, :]
             return jnp.einsum("bgrl,blgd->bgrd", p.astype(x.dtype),
-                              cv["codes"].astype(x.dtype))
+                              _cache_codes(cv).astype(x.dtype))
         return jnp.einsum("bgrl,blgd->bgrd", probs.astype(x.dtype),
                           cv.astype(x.dtype))
 
@@ -443,7 +507,9 @@ def _moe_expert_matmul(xin: Array, w) -> Array:
     return jnp.einsum("gecd,edf->gecf", xin, w.astype(xin.dtype))
 
 
-def moe_apply(params, spec: MoESpec, x: Array) -> Tuple[Array, Dict[str, Array]]:
+def moe_apply(params, spec: MoESpec, x: Array,
+              token_mask: Optional[Array] = None
+              ) -> Tuple[Array, Dict[str, Array]]:
     """Capacity-based top-k dispatch (GShard).  x: (b, l, d) -> (b, l, d).
 
     Tokens are processed in GROUPS of ``group_size`` (capacity is enforced
@@ -453,6 +519,11 @@ def moe_apply(params, spec: MoESpec, x: Array) -> Tuple[Array, Dict[str, Array]]
     data, expert dim over model (EP); the dispatch/combine einsums lower
     to all-to-alls under GSPMD.  Returns (out, aux) with load-balance
     terms.
+
+    ``token_mask`` (b,) bool — rows excluded from dispatch entirely: they
+    consume NO expert capacity and produce zero output.  Continuous-
+    batching decode runs with free/retired slots still in the batch; an
+    unmasked garbage row would steal capacity from live requests.
     """
     b, l, d = x.shape
     t = b * l
@@ -474,6 +545,9 @@ def moe_apply(params, spec: MoESpec, x: Array) -> Tuple[Array, Dict[str, Array]]
     cap = max(cap, spec.top_k)
 
     onehot = jax.nn.one_hot(topi, e, dtype=jnp.int32)              # (g, t, k, e)
+    if token_mask is not None:
+        tm = jnp.broadcast_to(token_mask[:, None], (b, l)).reshape(n_g, g_sz)
+        onehot = onehot * tm[..., None, None].astype(onehot.dtype)
     # position of each (token, choice) within its expert queue (per group);
     # int32 cumsum (bf16 cumsum loses exactness past 256)
     pos_in_e = jnp.cumsum(

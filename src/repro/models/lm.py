@@ -396,22 +396,27 @@ def lm_loss(params, cfg: LMConfig, tokens: Array, labels: Array,
 # Decode cache
 # ==========================================================================
 
-def _kv_zeros(shape, dtype, kv_quant: bool):
-    if kv_quant:
-        return {"codes": jnp.zeros(shape, jnp.int8),
+def _kv_zeros(shape, dtype, kv_quant):
+    bits = layers.kv_bits(kv_quant)
+    if bits:
+        cshape = shape[:-1] + (shape[-1] // 2,) if bits == 4 else shape
+        cdtype = jnp.uint8 if bits == 4 else jnp.int8
+        return {"codes": jnp.zeros(cshape, cdtype),
                 "scale": jnp.ones(shape[:-1] + (1,), jnp.float32)}
     return jnp.zeros(shape, dtype)
 
 
 def init_cache(cfg: LMConfig, batch: int, cache_len: int,
-               dtype=jnp.bfloat16, kv_quant: bool = False) -> Dict[str, Any]:
+               dtype=jnp.bfloat16, kv_quant=False) -> Dict[str, Any]:
     """Cache pytree, stacked over repeats for scan-compatibility.
 
     ``cache_len`` is the max sequence length for global layers; local
     layers use a ring buffer of size ``window``.  ``kv_quant`` stores
-    self-attention KV as int8 codes + per-vector fp32 scales (the paper's
-    absmax quantizer applied to the serving cache — halves decode HBM
-    traffic; cross-attn KV stays in ``dtype``).
+    self-attention KV as quantized codes + per-vector fp32 absmax scales
+    (the paper's quantizer applied to the serving cache): ``"int8"`` (or
+    ``True``) halves decode cache HBM traffic, ``"int4"`` (nibbles packed
+    two-per-byte along head_dim) quarters it — the pairing for int4
+    weights.  Cross-attn KV stays in ``dtype``.
     """
     r = cfg.n_repeats
     unit: Dict[str, Any] = {}
@@ -445,17 +450,72 @@ def init_cache(cfg: LMConfig, batch: int, cache_len: int,
     return cache
 
 
+def cache_insert(pool_cache, row_cache, slot):
+    """Insert a single-request cache (batch=1, same ``cache_len``) into a
+    slot-pool cache at batch index ``slot``.
+
+    Every cache leaf — KV rings, quantized code/scale pairs, mamba/rwkv
+    recurrent states — is stacked ``(repeats, batch, ...)``, so one
+    ``dynamic_update_index_in_dim`` on axis 1 covers the whole pytree.
+    The slot's ENTIRE row is replaced, which is what makes slot reuse
+    leak-free: no KV from the slot's previous occupant survives the
+    insert (and the ring-validity rule masks the not-yet-written tail
+    until decode overwrites it).
+    """
+    def one(pool, row):
+        return jax.lax.dynamic_update_index_in_dim(
+            pool, jax.lax.squeeze(row, (1,)).astype(pool.dtype), slot, 1)
+
+    return jax.tree.map(one, pool_cache, row_cache)
+
+
 # ==========================================================================
 # Prefill (fills cache) and decode (one token)
 # ==========================================================================
 
 def _kv_to_cache(k, v, kind: str, cfg: LMConfig, cache_len: int,
-                 kv_quant: bool = False):
-    """Pack full-sequence (k, v) into the decode-cache layout."""
+                 kv_quant=False, pads: Optional[Array] = None):
+    """Pack full-sequence (k, v) into the decode-cache layout.
+
+    ``pads`` (b,) — per-row left-pad widths under ragged prompts: row i's
+    column c holds position ``c - pads[i]`` and must land at ring slot
+    ``pos % ring_len`` (the slot the decode validity rule will look up),
+    so each row is scatter-written at its own offsets; pad columns
+    (negative positions) and positions older than the ring are dumped
+    into a scratch slot and sliced off.  ``pads=None`` keeps the legacy
+    position==column layout (training / un-padded prefill) unchanged.
+    """
     b, l = k.shape[0], k.shape[1]
+    bits = layers.kv_bits(kv_quant)
 
     def store(x):
-        return layers.kv_quantize(x) if kv_quant else x.astype(cfg.dtype)
+        return layers.kv_quantize(x, bits) if bits else x.astype(cfg.dtype)
+
+    if kind == "xattn":
+        return {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
+
+    if pads is not None:
+        ring_len = (min(cfg.window or cache_len, cache_len)
+                    if kind == "local" else cache_len)
+        positions = jnp.arange(l)[None, :] - pads[:, None]       # (b, l)
+        length = l - pads                                        # (b,)
+        keep = (positions >= 0) & (positions >= length[:, None] - ring_len)
+        slots = jnp.where(keep, positions % ring_len, ring_len)  # dump row
+        bidx = jnp.arange(b)[:, None]
+
+        def scatter(t):
+            def one(vals, fill):
+                buf = jnp.full((b, ring_len + 1) + vals.shape[2:], fill,
+                               vals.dtype)
+                return buf.at[bidx, slots].set(vals)[:, :ring_len]
+
+            s = store(t)
+            if bits:
+                return {"codes": one(s["codes"], 0),
+                        "scale": one(s["scale"], 1.0)}
+            return one(s, 0)
+
+        return {"k": scatter(k), "v": scatter(v)}
 
     if kind == "local":
         wl = min(cfg.window or cache_len, cache_len)
@@ -464,9 +524,10 @@ def _kv_to_cache(k, v, kind: str, cfg: LMConfig, cache_len: int,
 
         def ring(t):
             vals = store(t[:, l - take:])
-            if kv_quant:
+            if bits:
                 return {
-                    "codes": jnp.zeros((b, wl) + t.shape[2:], jnp.int8)
+                    "codes": jnp.zeros((b, wl) + vals["codes"].shape[2:],
+                                       vals["codes"].dtype)
                     .at[:, slots].set(vals["codes"]),
                     "scale": jnp.ones((b, wl) + t.shape[2:-1] + (1,),
                                       jnp.float32)
@@ -476,8 +537,6 @@ def _kv_to_cache(k, v, kind: str, cfg: LMConfig, cache_len: int,
                     .at[:, slots].set(vals))
 
         return {"k": ring(k), "v": ring(v)}
-    if kind == "xattn":
-        return {"k": k.astype(cfg.dtype), "v": v.astype(cfg.dtype)}
     pad = cache_len - l
 
     def pad_store(t):
@@ -485,7 +544,7 @@ def _kv_to_cache(k, v, kind: str, cfg: LMConfig, cache_len: int,
         return jax.tree.map(
             lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
                               constant_values=1.0 if a.dtype == jnp.float32
-                              and kv_quant else 0),
+                              and bits else 0),
             s)
 
     return {"k": pad_store(k), "v": pad_store(v)}
@@ -495,12 +554,30 @@ def lm_prefill(params, cfg: LMConfig, tokens: Array,
                image_embeds: Optional[Array] = None,
                attn_chunk: Optional[int] = None,
                cache_len: Optional[int] = None,
-               kv_quant: bool = False):
-    """Forward + cache fill in one pass.  Returns (last logits, cache)."""
+               kv_quant=False,
+               prompt_lens: Optional[Array] = None):
+    """Forward + cache fill in one pass.  Returns (last logits, cache).
+
+    ``prompt_lens`` (b,) — real (un-padded) prompt length per row for
+    left-padded ragged batches.  Rows get per-row positions
+    ``col - pad`` (pads negative), pad keys are masked out of every
+    attention score, and the KV cache is written at position-indexed ring
+    slots — so generations are *pad-invariant*: identical to running each
+    prompt alone (the property continuous batching's per-slot
+    prefill-insert relies on), and prompt widths become bucketable.
+    Attention-family blocks only; recurrent (mamba/rwkv) blocks still
+    consume pad tokens, so callers gate ``prompt_lens`` on attention-only
+    patterns.
+    """
     b, l = tokens.shape[0], tokens.shape[1]
     cache_len = cache_len or l
     x = _embed(params, cfg, tokens)
-    positions = jnp.arange(l)
+    pads = None
+    if prompt_lens is None:
+        positions = jnp.arange(l)
+    else:
+        pads = (l - prompt_lens).astype(jnp.int32)               # (b,)
+        positions = jnp.arange(l)[None, :] - pads[:, None]       # (b, l)
     ctx = None
     if cfg.n_image_tokens and image_embeds is not None:
         ctx = matmul(image_embeds.astype(cfg.dtype), params["vision_proj"])
@@ -519,7 +596,7 @@ def lm_prefill(params, cfg: LMConfig, tokens: Array,
                     ctx=ctx if kind == "xattn" else None,
                     chunk=attn_chunk, return_kv=True)
                 new_caches[name] = _kv_to_cache(k, v, kind, cfg, cache_len,
-                                                kv_quant)
+                                                kv_quant, pads=pads)
                 if kind == "xattn":
                     o = jnp.tanh(p["xattn_gate"]).astype(x.dtype) * o
                 if cfg.use_post_norm:
@@ -560,7 +637,8 @@ def lm_prefill(params, cfg: LMConfig, tokens: Array,
                                    cfg.attn_spec("attn"), hs, positions,
                                    chunk=attn_chunk, return_kv=True)
             new_caches["__shared__"] = _kv_to_cache(k, v, "attn", cfg,
-                                                    cache_len, kv_quant)
+                                                    cache_len, kv_quant,
+                                                    pads=pads)
             x = x + o
             h = rms_norm(x, params["shared"]["ffn_norm_scale"])
             x = x + mlp_apply(params["shared"]["mlp"], cfg.mlp_spec(), h)
@@ -579,9 +657,12 @@ def lm_prefill(params, cfg: LMConfig, tokens: Array,
     return logits, cache
 
 
-def lm_decode(params, cfg: LMConfig, cache, tokens: Array, pos: Array):
+def lm_decode(params, cfg: LMConfig, cache, tokens: Array, pos: Array,
+              token_mask: Optional[Array] = None):
     """One-token decode.  tokens: (b, 1[, codebooks]); pos: (b,) int32.
 
+    ``token_mask`` (b,) bool — live rows under continuous batching (free /
+    retired slots decode along but must not consume MoE expert capacity).
     Returns (logits (b, 1, ...), new_cache).
     """
     x = _embed(params, cfg, tokens)
@@ -610,7 +691,8 @@ def lm_decode(params, cfg: LMConfig, cache, tokens: Array, pos: Array):
                 x = x + o
                 h = rms_norm(x, p["ffn_norm_scale"])
                 if cfg.ffn == "moe":
-                    hm, _ = moe_apply(p["moe"], cfg.moe_spec(), h)
+                    hm, _ = moe_apply(p["moe"], cfg.moe_spec(), h,
+                                      token_mask=token_mask)
                     if cfg.n_shared_experts:
                         shared_spec = MLPSpec(cfg.d_model,
                                               cfg.d_ff * cfg.n_shared_experts,

@@ -117,7 +117,13 @@ def sgd_core(lr_fn, momentum: float = 0.0,
     def fisher(state):
         return state.get("nu")
 
-    return UpdateTransform(init=init, update=update, fisher=fisher)
+    # meta lets make_optimizer rebuild this core as the fused Pallas
+    # step kernel, exactly as for adamw_core (DESIGN.md §5)
+    return UpdateTransform(init=init, update=update, fisher=fisher,
+                           tag="sgd_core",
+                           meta={"kind": "sgd", "lr_fn": lr_fn,
+                                 "momentum": momentum,
+                                 "fisher_decay": fisher_decay})
 
 
 def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,

@@ -1,15 +1,18 @@
-"""Fused clip + decoupled-LOTION + AdamW optimizer core.
+"""Fused clip + decoupled-LOTION + {AdamW, SGD} optimizer cores.
 
 ``fused_lotion_adamw_core`` collapses the whole
 ``clip_global_norm -> lotion_decoupled -> adamw_core`` chain into ONE
 terminal :class:`~repro.optim.transform.UpdateTransform` whose update is
 a single Pallas kernel pass per leaf (``repro.kernels.opt_step``): one
 read of (w, g, mu, nu), one write of (w', mu', nu'), and a per-tile
-penalty partial.  The only pre-pass left is the global-norm reduction
-(clipping is global by definition — its elementwise *multiply* fuses
-into the kernel as a scalar operand, the reduction cannot).
+penalty partial.  ``fused_lotion_sgd_core`` is the same pass with the
+SGD(+momentum) rule — the paper's synthetic experiments train with
+SGD/GD, where ``fisher_decay`` maintains the g^2 EMA LOTION reads as the
+Fisher diagonal f.  The only pre-pass left in either is the global-norm
+reduction (clipping is global by definition — its elementwise *multiply*
+fuses into the kernel as a scalar operand, the reduction cannot).
 
-The core has ``applies_updates=True``: it emits new PARAMETERS, not an
+The cores have ``applies_updates=True``: they emit new PARAMETERS, not an
 update step, so the train step skips ``apply_updates`` and the final
 add-pass disappears too.  State is a flat dict
 ``{"mu", "nu", "count", "gnorm"[, "penalty"]}`` — ``penalty``/``gnorm``
@@ -17,6 +20,8 @@ are the same reserved metric keys the chain links use, so
 ``_link_metrics`` and the sharding rules treat fused and chained state
 identically; ``penalty`` is present only when ``lam != 0`` (a lam=0
 core under loss-side placement must not shadow the loss-aux penalty).
+``mu``/``nu`` are always present (uniform sharding/checkpoint layout);
+for SGD without momentum / without ``fisher_decay`` they stay zeros.
 
 ``use_kernel=False`` swaps the kernel for the pure-jnp oracle
 (``kernels.opt_step.ref``) with identical call structure — the
@@ -24,8 +29,9 @@ bit-compatible fallback used off-TPU and in the kernel tests.
 
 Not supported (``make_optimizer`` falls back to the unfused chain):
 EF gradient compression (reorders the stream between clip and the
-penalty) and ``differentiate_scale=True`` (no closed form — loss-side
-placement only, same rule as ``lotion_decoupled``).
+penalty), ``differentiate_scale=True`` (no closed form — loss-side
+placement only, same rule as ``lotion_decoupled``), and LOTION-on-SGD
+without ``fisher_decay`` (no Fisher estimate to weight the penalty).
 """
 
 from __future__ import annotations
@@ -41,21 +47,11 @@ from .clip import clip_scale, global_norm
 from .transform import UpdateTransform
 
 
-def fused_lotion_adamw_core(lr_fn, b1: float = 0.9, b2: float = 0.95,
-                            eps: float = 1e-8, weight_decay: float = 0.0,
-                            *, fmt_name: str = "int4", lam: float = 0.0,
-                            block_size: int = -1,
-                            clip_norm: float = float("inf"),
-                            policy: Optional[QuantPolicy] = None,
-                            use_kernel: bool = True) -> UpdateTransform:
-    """One-pass fused optimizer step (terminal core, applies updates).
-
-    ``lam == 0`` degenerates to fused clip+AdamW (no neighbor math in
-    the kernel); with ``lam != 0`` eligible leaves additionally get the
-    Eq. 3 closed-form LOTION gradient and the penalty metric.  The
-    per-step scalars (lr, bias corrections, clip scale) are computed
-    once outside and fed to every leaf kernel as one prefetched operand.
-    """
+def _fused_core(kind: str, lr_fn, *, b1: float, b2: float, eps: float,
+                weight_decay: float, momentum: float, fisher_decay,
+                fmt_name: str, lam: float, block_size: int,
+                clip_norm: float, policy: Optional[QuantPolicy],
+                use_kernel: bool, meta: dict) -> UpdateTransform:
     policy = policy if policy is not None else QuantPolicy()
 
     def init(params):
@@ -75,13 +71,16 @@ def fused_lotion_adamw_core(lr_fn, b1: float = 0.9, b2: float = 0.95,
 
     def update(grads, state, params=None, **_):
         if params is None:
-            raise ValueError("fused_lotion_adamw_core needs params")
+            raise ValueError(f"fused_lotion_{kind}_core needs params")
         norm = global_norm(grads)
         cscale = clip_scale(norm, clip_norm)
         count = state["count"] + 1
-        c = count.astype(jnp.float32)
-        bc1 = 1 - b1 ** c
-        bc2 = 1 - b2 ** c
+        if kind == "adamw":
+            c = count.astype(jnp.float32)
+            bc1 = 1 - b1 ** c
+            bc2 = 1 - b2 ** c
+        else:
+            bc1 = bc2 = jnp.ones((), jnp.float32)
         lr = lr_fn(count)
 
         if use_kernel:
@@ -96,7 +95,8 @@ def fused_lotion_adamw_core(lr_fn, b1: float = 0.9, b2: float = 0.95,
             new_w, new_m, new_n, pen = leaf_fn(
                 w, g, m, n, lr=lr, bc1=bc1, bc2=bc2, clip_scale=cscale,
                 lam=leaf_lam, fmt_name=fmt_name, block_size=block_size,
-                b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+                b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+                core=kind, momentum=momentum, fisher_decay=fisher_decay)
             if leaf_lam != 0.0:
                 pens.append(pen.astype(jnp.float32))
             return (new_w, new_m, new_n)
@@ -117,13 +117,66 @@ def fused_lotion_adamw_core(lr_fn, b1: float = 0.9, b2: float = 0.95,
         return new_params, new_state
 
     def fisher(state):
+        if kind == "sgd" and fisher_decay is None:
+            return None               # nu is inert zeros, not a Fisher
         return state["nu"]
 
     return UpdateTransform(
         init=init, update=update, fisher=fisher,
-        tag="fused_lotion_adamw", applies_updates=True,
-        meta={"kind": "fused_lotion_adamw", "lr_fn": lr_fn, "b1": b1,
-              "b2": b2, "eps": eps, "weight_decay": weight_decay,
-              "lam": lam, "fmt_name": fmt_name, "block_size": block_size,
-              "clip_norm": clip_norm, "use_kernel": use_kernel,
-              "policy": policy})
+        tag=f"fused_lotion_{kind}", applies_updates=True,
+        meta={**meta, "lr_fn": lr_fn, "lam": lam, "fmt_name": fmt_name,
+              "block_size": block_size, "clip_norm": clip_norm,
+              "use_kernel": use_kernel, "policy": policy})
+
+
+def fused_lotion_adamw_core(lr_fn, b1: float = 0.9, b2: float = 0.95,
+                            eps: float = 1e-8, weight_decay: float = 0.0,
+                            *, fmt_name: str = "int4", lam: float = 0.0,
+                            block_size: int = -1,
+                            clip_norm: float = float("inf"),
+                            policy: Optional[QuantPolicy] = None,
+                            use_kernel: bool = True) -> UpdateTransform:
+    """One-pass fused optimizer step (terminal core, applies updates).
+
+    ``lam == 0`` degenerates to fused clip+AdamW (no neighbor math in
+    the kernel); with ``lam != 0`` eligible leaves additionally get the
+    Eq. 3 closed-form LOTION gradient and the penalty metric.  The
+    per-step scalars (lr, bias corrections, clip scale) are computed
+    once outside and fed to every leaf kernel as one prefetched operand.
+    """
+    return _fused_core(
+        "adamw", lr_fn, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+        momentum=0.0, fisher_decay=None, fmt_name=fmt_name, lam=lam,
+        block_size=block_size, clip_norm=clip_norm, policy=policy,
+        use_kernel=use_kernel,
+        meta={"kind": "fused_lotion_adamw", "b1": b1, "b2": b2, "eps": eps,
+              "weight_decay": weight_decay})
+
+
+def fused_lotion_sgd_core(lr_fn, momentum: float = 0.0,
+                          fisher_decay: Optional[float] = None,
+                          *, fmt_name: str = "int4", lam: float = 0.0,
+                          block_size: int = -1,
+                          clip_norm: float = float("inf"),
+                          policy: Optional[QuantPolicy] = None,
+                          use_kernel: bool = True) -> UpdateTransform:
+    """One-pass fused clip + LOTION + SGD(+momentum) step (terminal core).
+
+    The synthetic-experiment twin of :func:`fused_lotion_adamw_core`:
+    bit-compatible with the unfused ``clip -> lotion_decoupled ->
+    sgd_core`` chain.  A LOTION term (``lam != 0``) requires
+    ``fisher_decay`` — SGD has no second moment, so the g^2 EMA is the
+    only Fisher estimate for the penalty weighting.
+    """
+    if lam != 0.0 and fisher_decay is None:
+        raise ValueError(
+            "fused_lotion_sgd_core with lam != 0 needs fisher_decay: the "
+            "LOTION penalty is Fisher-weighted and SGD tracks no second "
+            "moment of its own")
+    return _fused_core(
+        "sgd", lr_fn, b1=0.0, b2=0.0, eps=0.0, weight_decay=0.0,
+        momentum=momentum, fisher_decay=fisher_decay, fmt_name=fmt_name,
+        lam=lam, block_size=block_size, clip_norm=clip_norm, policy=policy,
+        use_kernel=use_kernel,
+        meta={"kind": "fused_lotion_sgd", "momentum": momentum,
+              "fisher_decay": fisher_decay})

@@ -1,5 +1,10 @@
-"""Batched serving of (quantized) checkpoints."""
+"""Serving of (quantized) checkpoints: the static batched :class:`Engine`
+(parity oracle) and the continuous-batching :class:`Scheduler`
+(persistent decode slots + on-device multi-step decode)."""
 
-from .engine import Engine, ServeConfig
+from .engine import Engine, ServeConfig, attn_only, prepare_params
+from .scheduler import Scheduler, SchedulerConfig
+from .slots import Request, SlotPool
 
-__all__ = ["Engine", "ServeConfig"]
+__all__ = ["Engine", "ServeConfig", "Scheduler", "SchedulerConfig",
+           "Request", "SlotPool", "attn_only", "prepare_params"]

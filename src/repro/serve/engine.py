@@ -1,5 +1,6 @@
-"""Batched serving engine: the deployment target of weight-only quantized
-models (the artifact LOTION training is *for*).
+"""Static-batch serving engine: the parity oracle for the continuous-
+batching scheduler (``repro.serve.scheduler``), and the deployment target
+of weight-only quantized models (the artifact LOTION training is *for*).
 
 Request flow: prompts are padded into a batch bucket -> one ``prefill``
 fills the KV cache -> a jitted ``decode`` step runs autoregressively with
@@ -27,25 +28,32 @@ Engine mechanics:
   whole (batch, new_tokens) block once at the end — the per-token
   ``int(tok[i])`` host sync it replaces serialized every decode step on
   the transfer latency.
+* ``max_new_tokens`` / ``eos_id`` may be per-request sequences: every row
+  still rides the same decode loop (max of the budgets — the static
+  batch's fundamental waste; the scheduler retires slots instead), but
+  outputs are truncated to each request's own budget / at its own EOS.
+* For attention-only patterns, ragged prompts run with per-row
+  ``prompt_lens``: left-pad tokens are RoPE'd at negative positions and
+  masked out of every attention score, so a request's generation is
+  *pad-invariant* — independent of its batchmates, and token-identical to
+  the continuous scheduler's per-slot prefill-insert (the parity the
+  acceptance tests pin).  Recurrent blocks (mamba/rwkv) consume pads
+  positionally, so hybrid-arch batches keep the legacy pads-attended
+  semantics (batch equal-length prompts for exact parity there).
 * ``cache_len`` is bucketed up to the next power of two, so the decode
   step — the serving hot loop, whose static shapes are (batch,
   cache_len) — compiles O(log max_seq) times instead of once per
-  distinct prompt-length/new-token combination, and prefill no longer
-  re-traces when only ``max_new_tokens`` varies.  Bucketing is
+  distinct prompt-length/new-token combination.  Bucketing is
   output-invariant: unwritten cache slots are exactly masked by the
-  ring-validity rule (and for sliding-window layers whose window
-  exceeds the unbucketed cache length, the ring grows toward the true
-  window — strictly more window-bounded context, never less).  Prompt
-  widths are NOT bucketed: left-pad tokens are attended (they land in
-  valid cache slots), so padding beyond the batch max would change
-  generations — prefill still compiles per distinct batch prompt width,
-  as before.
+  ring-validity rule.  Prompt widths are NOT bucketed here (for hybrid
+  archs widening would change generations; the scheduler buckets them
+  where pad-invariance holds).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +62,7 @@ import numpy as np
 from repro.core import QuantPolicy, cast_params, quantize_params
 from repro.core.formats import IntFormat, get_format
 from repro.core.qtensor import qtensor_use_kernel
-from repro.models.lm import LMConfig, lm_decode, lm_prefill
+from repro.models.lm import ATTN_KINDS, LMConfig, lm_decode, lm_prefill
 
 
 @dataclasses.dataclass
@@ -72,6 +80,9 @@ class ServeConfig:
     include_embeddings: bool = False
     # Pallas wq_matmul dispatch: None = auto (TPU on, else jnp fallback)
     use_kernel: Optional[bool] = None
+    # KV cache storage: False = dense (model dtype), "int8"/"int4" =
+    # per-vector absmax codes (int4 packs two nibbles per byte)
+    kv_quant: Union[bool, str] = False
     policy: Optional[QuantPolicy] = None
 
 
@@ -82,11 +93,79 @@ def bucket_cache_len(n: int, floor: int = 16) -> int:
     return max(floor, 1 << max(n - 1, 1).bit_length())
 
 
+def attn_only(cfg: LMConfig) -> bool:
+    """True when per-row ``prompt_lens`` masking makes generations
+    pad-invariant: every block is attention-family (KV-cache-backed —
+    recurrent blocks consume pads positionally) AND the FFN is dense
+    (capacity-based MoE dispatches pad tokens into the shared expert
+    groups during prefill, so a padded row can evict a batchmate's
+    tokens regardless of attention masking)."""
+    return (all(kind in ATTN_KINDS for kind in cfg.pattern)
+            and cfg.ffn != "moe")
+
+
+def prepare_params(params, scfg: ServeConfig):
+    """Apply the ServeConfig weight representation to a dense fp32 tree:
+    identity for fp32, QTensor quantized storage for int formats (unless
+    opted out), dense RTN/RR cast otherwise.  Shared by the static Engine
+    and the continuous-batching Scheduler."""
+    w = scfg.weights
+    if w == "fp32":
+        return params
+    mode, fmt_name = w.split(":")
+    fmt = get_format(fmt_name)
+    policy = scfg.policy if scfg.policy is not None else \
+        QuantPolicy(include_embeddings=scfg.include_embeddings)
+    key = jax.random.PRNGKey(scfg.seed)
+    storage = scfg.quantized_storage
+    if storage is None:
+        storage = isinstance(fmt, IntFormat) and fmt.bits in (4, 8)
+    if storage:
+        return quantize_params(params, fmt, policy,
+                               scfg.block_size, mode=mode, key=key)
+    return cast_params(params, fmt, policy,
+                       scfg.block_size, mode=mode, key=key)
+
+
+def sample_token(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
+    """Greedy argmax (``temperature <= 0``) or temperature sampling.
+    ONE definition shared by the static engine and the scheduler —
+    scheduler-vs-static token parity depends on the two never drifting."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def _per_request(value, default, b: int) -> List[int]:
+    """Normalize a scalar-or-sequence request option to a per-row list."""
+    if value is None:
+        value = default
+    if isinstance(value, (int, np.integer)) or value is None:
+        return [value] * b
+    value = list(value)
+    if len(value) != b:
+        raise ValueError(f"per-request option has {len(value)} entries "
+                         f"for a batch of {b}")
+    return value
+
+
+def truncate_output(tokens: Sequence[int], mnt: int,
+                    eos_id: Optional[int]) -> List[int]:
+    """Cut a decoded row to its request budget: at most ``mnt`` tokens,
+    stopping at (and including) the first ``eos_id``."""
+    out = list(tokens[:max(mnt, 0)])
+    if eos_id is not None and eos_id in out:
+        out = out[:out.index(eos_id) + 1]
+    return out
+
+
 class Engine:
     def __init__(self, cfg: LMConfig, params, scfg: ServeConfig):
         self.cfg = cfg
         self.scfg = scfg
-        self.params = self._prepare(params)
+        self.params = prepare_params(params, scfg)
+        self._mask_pads = attn_only(cfg)
 
         # the kernel-backend choice is read at TRACE time; baking the
         # with-block into the jitted callables pins this engine's choice
@@ -95,37 +174,28 @@ class Engine:
             with qtensor_use_kernel(scfg.use_kernel):
                 return lm_decode(p, cfg, c, t, pos)
 
-        def _prefill_fn(p, t, cl):
+        def _prefill_fn(p, t, cl, lens):
             with qtensor_use_kernel(scfg.use_kernel):
-                return lm_prefill(p, cfg, t, cache_len=cl)
+                return lm_prefill(p, cfg, t, cache_len=cl,
+                                  kv_quant=scfg.kv_quant, prompt_lens=lens)
 
         self._decode = jax.jit(_decode_fn)
         self._prefill = jax.jit(_prefill_fn, static_argnums=(2,))
 
-    def _prepare(self, params):
-        w = self.scfg.weights
-        if w == "fp32":
-            return params
-        mode, fmt_name = w.split(":")
-        fmt = get_format(fmt_name)
-        policy = self.scfg.policy if self.scfg.policy is not None else \
-            QuantPolicy(include_embeddings=self.scfg.include_embeddings)
-        key = jax.random.PRNGKey(self.scfg.seed)
-        storage = self.scfg.quantized_storage
-        if storage is None:
-            storage = isinstance(fmt, IntFormat) and fmt.bits in (4, 8)
-        if storage:
-            return quantize_params(params, fmt, policy,
-                                   self.scfg.block_size, mode=mode, key=key)
-        return cast_params(params, fmt, policy,
-                           self.scfg.block_size, mode=mode, key=key)
-
     def generate(self, prompts: Sequence[Sequence[int]],
-                 max_new_tokens: Optional[int] = None) -> List[List[int]]:
-        """Greedy/temperature generation for a batch of token prompts."""
-        mnt = max_new_tokens if max_new_tokens is not None else \
-            self.scfg.max_new_tokens
+                 max_new_tokens: Union[int, Sequence[int], None] = None,
+                 eos_id: Union[int, Sequence[int], None] = None,
+                 ) -> List[List[int]]:
+        """Greedy/temperature generation for a batch of token prompts.
+
+        ``max_new_tokens`` and ``eos_id`` may be per-request sequences;
+        the batch still decodes ``max(max_new_tokens)`` steps (the static
+        barrier the scheduler exists to remove) and each row is truncated
+        to its own budget, stopping at its EOS (included)."""
         b = len(prompts)
+        mnts = _per_request(max_new_tokens, self.scfg.max_new_tokens, b)
+        eoss = _per_request(eos_id, None, b)
+        mnt = max(mnts)
         if mnt <= 0:
             return [[] for _ in prompts]
         max_len = max(len(p) for p in prompts)
@@ -134,10 +204,16 @@ class Engine:
         toks = np.zeros((b, max_len), np.int32)
         for i, p in enumerate(prompts):
             toks[i, max_len - len(p):] = p
-        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache_len)
+        lens = (jnp.asarray([len(p) for p in prompts], jnp.int32)
+                if self._mask_pads else None)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                      cache_len, lens)
 
         key = jax.random.PRNGKey(self.scfg.seed + 1)
-        pos = jnp.full((b,), max_len - 1, jnp.int32)
+        if self._mask_pads:
+            pos = jnp.asarray([len(p) - 1 for p in prompts], jnp.int32)
+        else:
+            pos = jnp.full((b,), max_len - 1, jnp.int32)
         tok = self._sample(logits[:, 0], key)
         steps = [tok]                  # accumulated on device
         for t in range(mnt - 1):
@@ -148,10 +224,8 @@ class Engine:
             steps.append(tok)
         # one device->host transfer for the whole generation
         out = np.asarray(jnp.stack(steps, axis=1))
-        return [row.tolist() for row in out]
+        return [truncate_output(row.tolist(), m, e)
+                for row, m, e in zip(out, mnts, eoss)]
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
-        if self.scfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+        return sample_token(logits, key, self.scfg.temperature)

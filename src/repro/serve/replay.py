@@ -1,0 +1,146 @@
+"""Offered-load replay: a Poisson request stream served by static
+batching vs the continuous-batching scheduler, on a shared virtual clock.
+
+The replay drives both serving disciplines with the SAME workload
+(seeded: ragged prompt lengths, heterogeneous per-request token budgets,
+exponential inter-arrival gaps) and charges each host->device launch's
+measured wall time to a virtual clock that also gates admissions — so
+throughput, per-request latency and goodput are comparable between
+disciplines and across machines, while arrivals stay deterministic.
+
+Static discipline: a barrier server — take up to ``n_slots`` queued
+requests that have arrived, run one ``Engine.generate`` (every row pays
+the batch-max token budget), repeat.  Continuous discipline:
+``Scheduler.step(now=clock)`` — admission happens whenever a slot frees,
+finished requests retire mid-flight.
+
+Used by ``benchmarks/bench_serve.py`` (JSON + assertions) and
+``repro.launch.serve --scheduler`` (interactive comparison).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ReplayRequest:
+    prompt: List[int]
+    max_new_tokens: int
+    arrival: float                # seconds on the virtual clock
+
+
+def poisson_workload(seed: int, n_requests: int, vocab: int,
+                     rate: float = 50.0,
+                     prompt_lens=(2, 12),
+                     budgets=(2, 2, 4, 8, 16, 24)) -> List[ReplayRequest]:
+    """Seeded Poisson stream with ragged prompts and a long-tailed budget
+    mix (the heterogeneity static batching pays max() over)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    out = []
+    for i in range(n_requests):
+        plen = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        out.append(ReplayRequest(
+            prompt=rng.integers(0, vocab, plen).tolist(),
+            max_new_tokens=int(rng.choice(budgets)),
+            arrival=float(arrivals[i])))
+    return out
+
+
+def _metrics(latency: Dict[int, float], tokens: Dict[int, List[int]],
+             makespan: float, slo: float) -> dict:
+    lats = np.asarray([latency[i] for i in sorted(latency)])
+    total = sum(len(t) for t in tokens.values())
+    good = sum(len(tokens[i]) for i in tokens if latency[i] <= slo)
+    return {
+        "makespan_s": makespan,
+        "total_tokens": total,
+        "tok_per_s": total / max(makespan, 1e-9),
+        "latency_p50_s": float(np.percentile(lats, 50)),
+        "latency_p95_s": float(np.percentile(lats, 95)),
+        # goodput: tokens of requests that met the latency SLO (compare()
+        # sets it to the static run's MEDIAN latency)
+        "goodput_tok_per_s": good / max(makespan, 1e-9),
+        "slo_s": slo,
+    }
+
+
+def replay_static(engine, workload: List[ReplayRequest],
+                  n_slots: int) -> dict:
+    """Barrier server: groups of <= n_slots arrived requests, one static
+    ``generate`` per group.  Returns outputs + completion bookkeeping."""
+    clock = 0.0
+    pending = list(range(len(workload)))
+    outputs: Dict[int, List[int]] = {}
+    done_at: Dict[int, float] = {}
+    n_launches = 0
+    while pending:
+        clock = max(clock, workload[pending[0]].arrival)
+        group = [i for i in pending if workload[i].arrival <= clock][:n_slots]
+        pending = [i for i in pending if i not in group]
+        t0 = time.perf_counter()
+        outs = engine.generate([workload[i].prompt for i in group],
+                               max_new_tokens=[workload[i].max_new_tokens
+                                               for i in group])
+        dt = time.perf_counter() - t0
+        # the whole batch completes at the barrier
+        clock += dt
+        n_launches += 1 + max(w.max_new_tokens
+                              for w in (workload[i] for i in group)) - 1
+        for i, o in zip(group, outs):
+            outputs[i] = o
+            done_at[i] = clock
+    latency = {i: done_at[i] - workload[i].arrival for i in done_at}
+    return {"outputs": outputs, "latency": latency, "makespan": clock,
+            "decode_launches": n_launches}
+
+
+def replay_continuous(scheduler, workload: List[ReplayRequest]) -> dict:
+    """Continuous server: submit the stream, drive ``step(now=clock)``."""
+    rid_of = {}
+    for i, w in enumerate(workload):
+        rid_of[scheduler.submit(w.prompt, w.max_new_tokens,
+                                arrival=w.arrival)] = i
+    clock = 0.0
+    start_ticks = scheduler.n_ticks   # scheduler may be warm (reused)
+    done_at: Dict[int, float] = {}
+    while scheduler.has_work():
+        if not scheduler.pool.occupied():
+            # idle: jump to the next arrival still in the queue
+            nxt = min(scheduler.requests[r].arrival for r in scheduler.queue)
+            clock = max(clock, nxt)
+        t0 = time.perf_counter()
+        completed = scheduler.step(now=clock)
+        clock += time.perf_counter() - t0
+        for req in completed:
+            done_at[rid_of[req.rid]] = clock
+    outputs = {rid_of[r]: scheduler.requests[r].out for r in rid_of}
+    latency = {i: done_at[i] - workload[i].arrival for i in done_at}
+    ticks = {rid_of[r]: scheduler.requests[r].ticks for r in rid_of}
+    return {"outputs": outputs, "latency": latency, "makespan": clock,
+            "decode_launches": scheduler.n_ticks - start_ticks,
+            "ticks": ticks}
+
+
+def compare(static: dict, continuous: dict) -> dict:
+    """Joint summary at a shared SLO (the static run's median latency —
+    requests a barrier server half-serves comfortably)."""
+    slo = float(np.percentile(
+        [static["latency"][i] for i in static["latency"]], 50))
+    s = _metrics(static["latency"], static["outputs"],
+                 static["makespan"], slo)
+    c = _metrics(continuous["latency"], continuous["outputs"],
+                 continuous["makespan"], slo)
+    s["decode_launches"] = static["decode_launches"]
+    c["decode_launches"] = continuous["decode_launches"]
+    return {
+        "static": s,
+        "continuous": c,
+        "throughput_ratio": c["tok_per_s"] / max(s["tok_per_s"], 1e-9),
+        "outputs_identical": static["outputs"] == continuous["outputs"],
+    }

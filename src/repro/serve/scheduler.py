@@ -1,0 +1,284 @@
+"""Continuous-batching scheduler: persistent decode slots + on-device
+multi-step decode.
+
+The static :class:`~repro.serve.engine.Engine` barrier-synchronizes one
+batch per ``generate`` call: every request pays the batch-max prompt
+width, the batch-max token budget, and one host->device dispatch per
+token.  Quantized storage (DESIGN.md §6) made each decode step
+weight-cheap, but a Python-dispatched step per token means the int4
+bandwidth win never becomes throughput.  The scheduler turns the decode
+loop inside out:
+
+* **Fixed slot pool** — the decode batch dim is a compile-time constant
+  (``n_slots``), so the hot loop compiles ONCE regardless of load; free
+  slots ride along masked instead of forcing a re-jit at every occupancy
+  change.
+* **Per-slot prefill-insert admission** — a queued request prefills alone
+  (batch=1, its own length — no batchmate padding) against the pool's
+  ``cache_len``; the resulting cache row is spliced into the pool at its
+  slot by :func:`~repro.models.lm.cache_insert`, replacing the previous
+  occupant's row wholesale (slot reuse cannot leak KV).
+* **k-step on-device decode tick** — one ``lax.scan`` advances EVERY
+  active slot ``steps_per_tick`` tokens: sampling, cache ring-writes and
+  per-slot done-masking (token budget / EOS) all run inside the scan, so
+  a request costs ceil((mnt-1)/k) decode dispatches instead of mnt-1.
+  Finished and free slots stop advancing (frozen position, re-writing the
+  same KV — idempotent) and are masked out of MoE capacity via
+  ``token_mask``.
+* **Retirement + FIFO admission** — after each tick the host reads the
+  (k, n_slots) emitted-token block (one transfer), applies the SAME
+  termination rule the device used, releases finished slots, and admits
+  queued requests in submit order (lowest free slot first, so a replayed
+  request stream is deterministic).
+
+Greedy generations are token-identical to the static engine for the same
+request set (the engine's per-row ``prompt_lens`` masking makes static
+batching pad-invariant; capacity-based MoE routing is the documented
+exception — expert-capacity contention is inherently batch-composition-
+dependent).  Temperature sampling uses per-request/per-tick folded keys
+and is NOT stream-identical to the static engine.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qtensor import qtensor_use_kernel
+from repro.models.lm import (LMConfig, cache_insert, init_cache, lm_decode,
+                             lm_prefill)
+
+from .engine import (ServeConfig, attn_only, bucket_cache_len,
+                     prepare_params, sample_token)
+from .slots import ACTIVE, DONE, Request, SlotPool
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    n_slots: int = 8            # decode batch dim (compile-time constant)
+    steps_per_tick: int = 4     # k: tokens decoded per host->device launch
+    cache_len: int = 256        # per-slot KV capacity (prompt + generation)
+    # pow2-bucket per-request prefill widths (attention-only patterns,
+    # where pad masking makes it output-invariant): bounds prefill re-jits
+    # to O(log cache_len) instead of one per distinct prompt length
+    bucket_prompts: bool = True
+
+
+class Scheduler:
+    """Continuous-batching server over a fixed pool of decode slots."""
+
+    def __init__(self, cfg: LMConfig, params, scfg: Optional[ServeConfig]
+                 = None, sched: Optional[SchedulerConfig] = None):
+        self.cfg = cfg
+        self.scfg = scfg = scfg if scfg is not None else ServeConfig()
+        self.sched = sched = sched if sched is not None else SchedulerConfig()
+        self.params = prepare_params(params, scfg)
+        self.pool = SlotPool(sched.n_slots)
+        self.requests: Dict[int, Request] = {}
+        self.queue: collections.deque = collections.deque()
+        self._next_rid = 0
+        self._admit_seq = 0
+        self._mask_pads = attn_only(cfg)
+        self._key = jax.random.PRNGKey(scfg.seed + 1)
+        self._tick_key = jax.random.PRNGKey(scfg.seed + 2)
+        # structural dispatch accounting (ISSUE 4 acceptance)
+        self.n_ticks = 0
+        self.n_prefills = 0
+
+        n, k, cl = sched.n_slots, sched.steps_per_tick, sched.cache_len
+        dt = cfg.dtype
+        self._cache = init_cache(cfg, n, cl, dtype=dt, kv_quant=scfg.kv_quant)
+        self._state = {
+            "tok": jnp.zeros((n,), jnp.int32),
+            "pos": jnp.zeros((n,), jnp.int32),
+            "steps": jnp.zeros((n,), jnp.int32),
+            "mnt": jnp.zeros((n,), jnp.int32),
+            "eos": jnp.full((n,), -1, jnp.int32),
+            "active": jnp.zeros((n,), bool),
+        }
+
+        def _sample(logits, key):
+            return sample_token(logits, key, scfg.temperature)
+
+        def _prefill_fn(p, toks, lens, key):
+            with qtensor_use_kernel(scfg.use_kernel):
+                logits, row_cache = lm_prefill(
+                    p, cfg, toks, cache_len=cl, kv_quant=scfg.kv_quant,
+                    prompt_lens=lens)
+            return _sample(logits[:, 0], key), row_cache
+
+        def _insert_fn(cache, state, row_cache, slot, tok, plen, mnt, eos):
+            cache = cache_insert(cache, row_cache, slot)
+            state = {
+                "tok": state["tok"].at[slot].set(tok),
+                "pos": state["pos"].at[slot].set(plen - 1),
+                "steps": state["steps"].at[slot].set(1),
+                "mnt": state["mnt"].at[slot].set(mnt),
+                "eos": state["eos"].at[slot].set(eos),
+                "active": state["active"].at[slot].set(True),
+            }
+            return cache, state
+
+        def _tick_fn(p, cache, state, key):
+            mnt, eos = state["mnt"], state["eos"]
+
+            def body(carry, kk):
+                cache, tok, pos, steps, active = carry
+                pos2 = jnp.where(active, pos + 1, pos)
+                with qtensor_use_kernel(scfg.use_kernel):
+                    logits, cache = lm_decode(p, cfg, cache, tok[:, None],
+                                              pos2, token_mask=active)
+                new_tok = jnp.where(active, _sample(logits[:, 0], kk),
+                                    tok).astype(jnp.int32)
+                steps2 = jnp.where(active, steps + 1, steps)
+                emitted = jnp.where(active, new_tok, -1)
+                done = (steps2 >= mnt) | (new_tok == eos)
+                return (cache, new_tok, pos2, steps2, active & ~done), emitted
+
+            keys = jax.random.split(key, k)
+            carry = (cache, state["tok"], state["pos"], state["steps"],
+                     state["active"])
+            (cache, tok, pos, steps, active), em = jax.lax.scan(
+                body, carry, keys)
+            new_state = {"tok": tok, "pos": pos, "steps": steps,
+                         "mnt": mnt, "eos": eos, "active": active}
+            return cache, new_state, em          # em: (k, n_slots)
+
+        self._prefill = jax.jit(_prefill_fn)
+        self._insert = jax.jit(_insert_fn, donate_argnums=(0, 1))
+        self._tick = jax.jit(_tick_fn, donate_argnums=(1, 2))
+
+    # ------------------------------------------------------------------
+    # request API
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int],
+               max_new_tokens: Optional[int] = None,
+               eos_id: Optional[int] = None,
+               arrival: float = 0.0) -> int:
+        """Queue one request; returns its request id.  Admission happens
+        on subsequent :meth:`step` calls, in submit order (FIFO)."""
+        mnt = (max_new_tokens if max_new_tokens is not None
+               else self.scfg.max_new_tokens)
+        if len(prompt) + mnt > self.sched.cache_len:
+            raise ValueError(
+                f"request needs {len(prompt)} + {mnt} cache slots but the "
+                f"pool was built with cache_len={self.sched.cache_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=list(prompt), max_new_tokens=mnt,
+                      eos_id=eos_id, arrival=arrival)
+        self.requests[rid] = req
+        if mnt <= 0:
+            req.state = DONE
+        else:
+            self.queue.append(rid)
+        return rid
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.pool.occupied())
+
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        """Admit what fits (arrival-gated when ``now`` is given), run one
+        decode tick, retire finished slots.  Returns requests completed
+        by this step."""
+        completed = self._admit(now)
+        completed += self._do_tick()
+        return completed
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain the queue and all active slots; returns {rid: tokens}."""
+        while self.has_work():
+            self.step()
+        return {rid: r.out for rid, r in self.requests.items() if r.done}
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 max_new_tokens: Union[int, Sequence[int], None] = None,
+                 eos_id: Union[int, Sequence[int], None] = None,
+                 ) -> List[List[int]]:
+        """Engine-compatible convenience: submit a batch, drain, return
+        outputs in submission order."""
+        from .engine import _per_request
+        b = len(prompts)
+        mnts = _per_request(max_new_tokens, self.scfg.max_new_tokens, b)
+        eoss = _per_request(eos_id, None, b)
+        rids = [self.submit(p, m, e) for p, m, e in zip(prompts, mnts, eoss)]
+        self.run()
+        return [self.requests[r].out for r in rids]
+
+    # ------------------------------------------------------------------
+    # admission (per-slot prefill-insert)
+    # ------------------------------------------------------------------
+
+    def _admit(self, now: Optional[float] = None) -> List[Request]:
+        completed = []
+        while self.pool.n_free and self.queue:
+            rid = self.queue[0]
+            req = self.requests[rid]
+            if now is not None and req.arrival > now:
+                break                  # offered-load replay: not here yet
+            self.queue.popleft()
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
+
+            toks = np.asarray([req.prompt], np.int32)
+            lens = None
+            if self._mask_pads and self.sched.bucket_prompts:
+                w = bucket_cache_len(len(req.prompt), floor=8)
+                padded = np.zeros((1, w), np.int32)
+                padded[0, w - len(req.prompt):] = req.prompt
+                toks = padded
+                lens = jnp.asarray([len(req.prompt)], jnp.int32)
+            key = jax.random.fold_in(self._key, rid)
+            self.n_prefills += 1
+            tok, row_cache = self._prefill(self.params, jnp.asarray(toks),
+                                           lens, key)
+            first = int(tok[0])
+            req.out.append(first)
+            if req.finished_by(first, 1):
+                req.state = DONE       # budget of 1 / instant EOS: no slot
+                completed.append(req)
+                continue
+            slot = self.pool.acquire(rid)
+            req.slot, req.state = slot, ACTIVE
+            self._cache, self._state = self._insert(
+                self._cache, self._state, row_cache, slot, tok[0],
+                len(req.prompt), req.max_new_tokens,
+                -1 if req.eos_id is None else req.eos_id)
+        return completed
+
+    # ------------------------------------------------------------------
+    # decode tick (k steps on device, one dispatch)
+    # ------------------------------------------------------------------
+
+    def _do_tick(self) -> List[Request]:
+        occupied = self.pool.occupied()
+        if not occupied:
+            return []
+        self.n_ticks += 1
+        key = jax.random.fold_in(self._tick_key, self.n_ticks)
+        self._cache, self._state, em = self._tick(
+            self.params, self._cache, self._state, key)
+        em = np.asarray(em)            # ONE transfer per tick: (k, n_slots)
+        completed = []
+        for slot, rid in occupied:
+            req = self.requests[rid]
+            req.ticks += 1
+            for s in range(self.sched.steps_per_tick):
+                t = int(em[s, slot])
+                if t < 0:              # done-masked earlier in this tick
+                    break
+                req.out.append(t)
+                if req.finished_by(t, len(req.out)):
+                    break              # device flagged done at this step
+            if req.finished_by(req.out[-1], len(req.out)):
+                req.state = DONE
+                self.pool.release(slot)
+                req.slot = None
+                completed.append(req)
+        return completed

@@ -1,0 +1,86 @@
+"""Host-side bookkeeping for continuous batching: requests + the slot pool.
+
+A *slot* is one row of the fixed-size decode batch (the compile-time
+constant that keeps the scheduler at O(1) compiled decode programs).  The
+pool hands out the lowest free index first — deterministic assignment, so
+a replayed request stream reproduces slot placement exactly.
+
+Everything here is plain Python state; the device-side mirrors (token /
+position / step-count / done-mask arrays) live in
+:class:`repro.serve.scheduler.Scheduler` and are updated functionally by
+its jitted insert/tick programs.  The two views stay consistent because
+both apply the SAME termination rule (``tokens_emitted >= max_new_tokens
+or last_token == eos_id``) to the same token stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+QUEUED, ACTIVE, DONE = "queued", "active", "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle record."""
+
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    state: str = QUEUED
+    slot: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    # structural accounting (ISSUE 4 acceptance: decode host->device
+    # launches per request <= ceil(max_new_tokens / steps_per_tick))
+    ticks: int = 0                  # decode ticks participated in
+    admit_seq: Optional[int] = None  # global admission counter (fairness)
+    # offered-load replay bookkeeping (virtual-clock seconds)
+    arrival: float = 0.0
+    t_admit: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.state == DONE
+
+    def finished_by(self, tok: int, emitted: int) -> bool:
+        """Termination rule — MUST match the device-side done-masking in
+        the decode tick: the request ends with its ``emitted``-th token or
+        on EOS (EOS is included in the output)."""
+        return emitted >= self.max_new_tokens or (
+            self.eos_id is not None and tok == self.eos_id)
+
+
+class SlotPool:
+    """Fixed pool of decode slots; lowest-free-index-first assignment."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self._free = list(range(n_slots))
+        self._occupant = {}          # slot -> rid
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def occupied(self):
+        """(slot, rid) pairs currently active, slot-ordered."""
+        return sorted(self._occupant.items())
+
+    def acquire(self, rid: int) -> int:
+        if not self._free:
+            raise RuntimeError("no free slot")
+        self._free.sort()
+        slot = self._free.pop(0)
+        self._occupant[slot] = rid
+        return slot
+
+    def release(self, slot: int) -> None:
+        rid = self._occupant.pop(slot, None)
+        if rid is None:
+            raise KeyError(f"slot {slot} not occupied")
+        self._free.append(slot)

@@ -31,6 +31,7 @@ from repro.core import QuantConfig, cast_params, forward_params, penalty
 from repro.models.lm import LMConfig, lm_forward
 from repro.optim import (UpdateTransform, as_transform, apply_updates, chain,
                          clip_global_norm, fused_lotion_adamw_core,
+                         fused_lotion_sgd_core,
                          global_norm, lotion_decoupled)
 from repro.train.compress import ef_transform
 
@@ -134,17 +135,28 @@ def make_optimizer(tcfg: TrainConfig, base) -> UpdateTransform:
             "scale; use penalty_placement='loss' with "
             "differentiate_scale=True")
 
-    # fused core selection: collapse clip -> [lotion] -> adamw into the
-    # single-pass step kernel.  The loss-side placement keeps the penalty
-    # in the loss, so the fused core then runs with lam=0 (plain
-    # clip+AdamW fusion).
+    # fused core selection: collapse clip -> [lotion] -> {adamw, sgd}
+    # into the single-pass step kernel.  The loss-side placement keeps
+    # the penalty in the loss, so the fused core then runs with lam=0
+    # (plain clip+core fusion).  LOTION-on-SGD fuses only when the core
+    # tracks a Fisher EMA (fisher_decay) — without one there is no f to
+    # weight the penalty, fused or not.
     meta = base_t.meta or {}
-    can_fuse = (q.kernel_enabled and meta.get("kind") == "adamw"
-                and not tcfg.ef_compress)
-    if can_fuse:
+    can_fuse = (q.kernel_enabled and not tcfg.ef_compress
+                and (meta.get("kind") == "adamw"
+                     or (meta.get("kind") == "sgd"
+                         and (not wants_lotion
+                              or meta.get("fisher_decay") is not None))))
+    if can_fuse and meta["kind"] == "adamw":
         return fused_lotion_adamw_core(
             meta["lr_fn"], b1=meta["b1"], b2=meta["b2"], eps=meta["eps"],
             weight_decay=meta["weight_decay"], fmt_name=q.fmt_name,
+            lam=(q.lam if wants_lotion else 0.0), block_size=q.block_size,
+            clip_norm=tcfg.clip_norm, policy=q.policy)
+    if can_fuse:
+        return fused_lotion_sgd_core(
+            meta["lr_fn"], momentum=meta["momentum"],
+            fisher_decay=meta["fisher_decay"], fmt_name=q.fmt_name,
             lam=(q.lam if wants_lotion else 0.0), block_size=q.block_size,
             clip_norm=tcfg.clip_norm, policy=q.policy)
 

@@ -254,6 +254,87 @@ def test_fused_core_config_mismatch_rejected():
     assert make_optimizer(lotion_tc, lotion_fused) is lotion_fused
 
 
+@pytest.mark.parametrize("momentum,fd,lam", [
+    (0.0, None, 0.0), (0.9, None, 0.0), (0.9, 0.99, 500.0),
+    (0.0, 0.95, 500.0)])
+def test_fused_sgd_core_bitmatches_unfused_chain(momentum, fd, lam):
+    """fused_lotion_sgd_core (jnp oracle path) is BIT-identical to the
+    unfused clip -> [lotion] -> sgd_core chain over several updates —
+    the SGD rule has no rounding-order freedom, so exact equality is the
+    contract (ROADMAP PR 2 follow-up: fused SGD for the synthetic
+    experiments)."""
+    from repro.optim import clip_global_norm, fused_lotion_sgd_core, \
+        lotion_decoupled, sgd_core
+    params = {"proj/wq": jax.random.normal(jax.random.PRNGKey(0), (64, 64)),
+              "norm_scale": jax.random.normal(jax.random.PRNGKey(1), (64,))}
+    grads = jax.tree.map(lambda x: x * 0.03, params)
+    fused = fused_lotion_sgd_core(constant(1e-2), momentum, fd, lam=lam,
+                                  clip_norm=float("inf"), policy=POLICY,
+                                  use_kernel=False)
+    links = [clip_global_norm(float("inf"))]
+    if lam:
+        links.append(lotion_decoupled("int4", lam, -1, policy=POLICY))
+    links.append(sgd_core(constant(1e-2), momentum=momentum,
+                          fisher_decay=fd))
+    unfused = chain(*links)
+    st_f, st_u = fused.init(params), unfused.init(params)
+    p_f = p_u = params
+    for i in range(3):
+        g = jax.tree.map(lambda x: x * (1.0 + 0.1 * i), grads)
+        p_f, st_f = fused.update(g, st_f, p_f)
+        upd, st_u = unfused.update(g, st_u, p_u,
+                                   fisher=unfused.fisher(st_u))
+        p_u = jax.tree.map(lambda p, u: p + u, p_u, upd)
+        for a, b in zip(jax.tree.leaves(p_f), jax.tree.leaves(p_u)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert set(st_f) == ({"mu", "nu", "count", "gnorm", "penalty"}
+                         if lam else {"mu", "nu", "count", "gnorm"})
+    if fd is not None:
+        np.testing.assert_array_equal(
+            np.asarray(st_f["nu"]["proj/wq"]),
+            np.asarray(unfused.fisher(st_u)["proj/wq"]))
+
+
+@pytest.mark.parametrize("fmt,bs", [("int4", -1), ("int8", 128)])
+def test_opt_step_kernel_sgd_matches_ref(fmt, bs):
+    """The Pallas kernel's SGD core vs the jnp oracle, away from grid
+    knife edges (same masking convention as the AdamW sweep)."""
+    w, g, mu, nu = _rand4((8, 256), seed=5)
+    kw = dict(lr=1e-2, bc1=1.0, bc2=1.0, clip_scale=0.7, lam=3000.0,
+              fmt_name=fmt, block_size=bs, b1=0.0, b2=0.0, eps=0.0,
+              weight_decay=0.0, core="sgd", momentum=0.9,
+              fisher_decay=0.99)
+    got = fused_opt_step_leaf(w, g, mu, nu, **kw)
+    want = opt_step_ref(w, g, mu, nu, **kw)
+    mask = _grid_mask(w, fmt, bs)
+    assert mask.mean() > 0.9
+    for a, b, name in zip(got[:3], want[:3], ("w", "mu", "nu")):
+        np.testing.assert_allclose(np.asarray(a)[mask], np.asarray(b)[mask],
+                                   atol=1e-5, rtol=1e-4, err_msg=name)
+    np.testing.assert_allclose(float(got[3]), float(want[3]),
+                               rtol=1e-4, atol=1e-7)
+
+
+def test_make_optimizer_fuses_sgd_core():
+    """use_kernel=True + sgd base -> the fused SGD core is selected;
+    LOTION-on-SGD without fisher_decay falls back to the unfused chain
+    (no Fisher estimate to fuse), matching the chain's own semantics."""
+    from repro.optim import sgd
+    q = QuantConfig(method="lotion", fmt_name="int4", lam=100.0,
+                    policy=POLICY, use_kernel=True)
+    tc = TrainConfig(quant=q, clip_norm=float("inf"))
+    tx = make_optimizer(tc, sgd(constant(1e-2), momentum=0.9,
+                                fisher_decay=0.99))
+    assert tx.applies_updates and tx.tag == "fused_lotion_sgd"
+    # no Fisher EMA -> unfused chain keeps LOTION semantics (fisher=None)
+    tx2 = make_optimizer(tc, sgd(constant(1e-2), momentum=0.9))
+    assert not tx2.applies_updates
+    # without LOTION, plain SGD fuses regardless
+    tx3 = make_optimizer(TrainConfig(quant=QuantConfig(use_kernel=True)),
+                         sgd(constant(1e-2)))
+    assert tx3.applies_updates and tx3.tag == "fused_lotion_sgd"
+
+
 def test_fused_state_shardings_mirror_params():
     """Fused-core state: mu/nu inherit the parameter sharding (ZeRO
     posture), count/penalty/gnorm replicate — same rules as chain state."""

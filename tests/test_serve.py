@@ -141,17 +141,91 @@ def test_engine_generate_single_transfer_semantics():
     assert long[0][:4] == short[0]  # greedy decode is prefix-stable
 
 
+@pytest.mark.parametrize("kv_quant", [True, "int4"])
 @pytest.mark.parametrize("arch", ["gemma2-2b", "zamba2-2.7b"])
-def test_kv_quant_cache_all_archs(arch):
+def test_kv_quant_cache_all_archs(arch, kv_quant):
     cfg = get_smoke_config(arch)
     params = lm_init(jax.random.PRNGKey(0), cfg)
     b, l = 2, 10
     toks = jax.random.randint(jax.random.PRNGKey(1), (b, l), 0, cfg.vocab)
     _, cache = lm_prefill(params, cfg, toks[:, :l - 1], cache_len=l,
-                          kv_quant=True)
+                          kv_quant=kv_quant)
     ld, cache2 = lm_decode(params, cfg, cache, toks[:, l - 1:],
                            jnp.full((b,), l - 1, jnp.int32))
     assert np.isfinite(np.asarray(ld, np.float32)).all()
-    # quantized entries preserved int8
+    # quantized entries preserved (int8 codes; packed uint8 for int4)
+    want_dtype = jnp.uint8 if kv_quant == "int4" else jnp.int8
     leaves = jax.tree_util.tree_leaves_with_path(cache2)
-    assert any(a.dtype == jnp.int8 for _, a in leaves)
+    assert any(a.dtype == want_dtype for _, a in leaves)
+
+
+@pytest.mark.parametrize("kv_quant,tol", [("int8", 0.08), ("int4", 0.45)])
+def test_kv_quant_decode_close_to_dense(kv_quant, tol):
+    """int8/int4 KV decode stays close to the dense-cache logits; int4
+    (packed nibbles, 1/4 the cache bytes) is the coarser of the pair —
+    ROADMAP PR 3 follow-up closing the weight/KV format gap."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    b, l = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, l), 0, CFG.vocab)
+    pos = jnp.full((b,), l - 1, jnp.int32)
+    _, cd = lm_prefill(params, CFG, toks[:, :l - 1], cache_len=l)
+    ld_d, _ = lm_decode(params, CFG, cd, toks[:, l - 1:], pos)
+    _, cq = lm_prefill(params, CFG, toks[:, :l - 1], cache_len=l,
+                       kv_quant=kv_quant)
+    ld_q, _ = lm_decode(params, CFG, cq, toks[:, l - 1:], pos)
+    err = np.abs(np.asarray(ld_q - ld_d)).max()
+    rel = err / max(np.abs(np.asarray(ld_d)).max(), 1e-6)
+    assert rel < tol, (kv_quant, rel)
+
+
+def test_int4_kv_pack_roundtrip():
+    """Pack/unpack of int4 nibbles is exact on the full code range and
+    ring decode writes preserve the packed layout."""
+    from repro.models.layers import _pack_int4, _unpack_int4, kv_quantize
+
+    codes = jnp.arange(-7, 8, dtype=jnp.int8).reshape(1, 1, 1, 15)
+    codes = jnp.pad(codes, ((0, 0),) * 3 + ((0, 1),))     # even head_dim
+    np.testing.assert_array_equal(np.asarray(_unpack_int4(_pack_int4(codes))),
+                                  np.asarray(codes))
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 2, 8))
+    q = kv_quantize(k, bits=4)
+    assert q["codes"].dtype == jnp.uint8 and q["codes"].shape[-1] == 4
+    deq = _unpack_int4(q["codes"]).astype(jnp.float32) * q["scale"]
+    assert float(jnp.abs(deq - k).max()) <= float(q["scale"].max()) * 0.51
+
+
+def test_engine_generate_through_int4_kv_cache():
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    eng = Engine(CFG, params, ServeConfig(max_new_tokens=6, kv_quant="int4"))
+    outs = eng.generate([[1, 2, 3], [9, 8]])
+    assert all(len(o) == 6 for o in outs)
+    assert all(0 <= t < CFG.vocab for o in outs for t in o)
+
+
+def test_engine_per_request_budgets_and_eos():
+    """Per-request max_new_tokens / eos_id: each row is truncated to its
+    own budget and stops at (and includes) its own EOS; greedy rows are
+    prefix-stable so shorter budgets are prefixes of longer ones."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    eng = Engine(CFG, params, ServeConfig(max_new_tokens=8))
+    base = eng.generate([[1, 2, 3], [9, 8, 7]])
+    ragged = eng.generate([[1, 2, 3], [9, 8, 7]], max_new_tokens=[3, 7])
+    assert ragged == [base[0][:3], base[1][:7]]
+    eos = base[0][2]
+    stopped = eng.generate([[1, 2, 3], [9, 8, 7]], max_new_tokens=8,
+                           eos_id=[eos, None])
+    assert stopped[0] == base[0][:3] and stopped[0][-1] == eos
+    assert stopped[1] == base[1]
+    with pytest.raises(ValueError, match="entries"):
+        eng.generate([[1]], max_new_tokens=[1, 2])
+
+
+def test_engine_ragged_batch_is_pad_invariant():
+    """Attention-only configs mask left pads (per-row prompt_lens): a
+    prompt's generation no longer depends on its batchmates' lengths —
+    the property that makes scheduler-vs-static parity possible at all."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    eng = Engine(CFG, params, ServeConfig(max_new_tokens=6))
+    alone = [eng.generate([p])[0] for p in [[1, 2, 3], [4, 5], [6]]]
+    batched = eng.generate([[1, 2, 3], [4, 5], [6]])
+    assert batched == alone
