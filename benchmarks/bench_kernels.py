@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import INT4, get_format, lotion_penalty_and_grad, quantize
+from repro.core import INT4, lotion_penalty_and_grad, quantize
 from .common import emit, time_call
 
 SHAPE = (1024, 1024)

@@ -19,7 +19,7 @@ from repro.models.lm import LMConfig, lm_init
 from repro.optim import adamw, cosine_with_warmup
 from repro.train import (TrainConfig, init_state, make_eval_fn,
                          make_optimizer, make_train_step, run_loop)
-from .common import emit, time_call
+from .common import emit
 
 CFG = LMConfig(name="bench-lm", n_layers=4, d_model=128, n_heads=4,
                n_kv_heads=2, d_ff=256, vocab=256, head_dim=32,

@@ -14,9 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import INT4, cast_rr, cast_rtn, lotion_penalty
-from repro.models.linear import (power_law_spectrum, twolayer_effective,
-                                 twolayer_ground_truth, twolayer_init,
-                                 twolayer_population_loss)
+from repro.models.linear import (power_law_spectrum, twolayer_ground_truth,
+                                 twolayer_init, twolayer_population_loss)
 from .common import emit, time_call
 
 D = 2000

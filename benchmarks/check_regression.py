@@ -1,0 +1,210 @@
+"""CI regression gate over the HARDWARE-INDEPENDENT structural bench
+columns (ISSUE 5).
+
+The perf story of this repo rests on structural contracts — stored
+weight-bytes per decode step, HBM passes per optimizer leaf, decode
+dispatch counts, prefill FLOPs saved by the prefix cache — that are
+asserted inside the benchmark scripts but were never *diffed against the
+committed baselines*, so a PR could quietly regress (say) the int4
+weight-bytes ratio from 0.27x to 0.9x while every assertion still held.
+This gate closes that hole: it loads freshly generated ``BENCH_*.json``
+files (CI runs the ``--tiny`` smokes into ``/tmp``) and compares a
+declared metric set against the committed baselines
+(``benchmarks/baselines/BENCH_*.json``, falling back to the repo-root
+records), failing the job on any regression.
+
+Metric semantics:
+
+* ``lower`` / ``higher`` — the good direction.  ``rel_tol`` absorbs the
+  metric's legitimate run-to-run jitter: 0 for deterministic structural
+  counts (bytes, passes, ratios, the stall bound); nonzero ONLY for
+  replay-derived counts whose admission grouping depends on host wall
+  time (decode launches, prefix-hit totals).
+* ``true`` — a boolean contract (e.g. ``outputs_identical``) that must
+  hold in the fresh run regardless of baseline.
+* paths ending in ``#len`` gate the LENGTH of a list (the
+  dense-materialization scan must stay empty).
+
+Wall-clock columns are deliberately NOT gated — they are
+machine-dependent and the JSONs record backend/dispatch precisely so
+humans can compare like with like.  Config sub-dicts are required to
+match exactly, so a tiny-vs-full or reshaped baseline fails loudly
+instead of green-lighting an apples-to-oranges diff.
+
+Usage::
+
+    python -m benchmarks.check_regression --fresh-dir /tmp
+
+Exit code 0 = no regressions (improvements are reported as baseline-
+refresh suggestions); 1 = regression or missing/mismatched files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Optional
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(HERE)
+BASELINE_DIR = os.path.join(HERE, "baselines")
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    path: str                 # dotted path into the bench JSON
+    direction: str            # "lower" | "higher" | "true"
+    rel_tol: float = 0.0      # allowed relative slack in the bad direction
+
+
+# per-bench gated metrics; see the module docstring for why each
+# tolerance is what it is
+METRICS = {
+    "serve": [
+        Metric("structural.weight_bytes_per_decode_step.fp32_dense", "lower"),
+        Metric("structural.weight_bytes_per_decode_step.bf16_dense", "lower"),
+        Metric("structural.weight_bytes_per_decode_step.rtn_int8", "lower"),
+        Metric("structural.weight_bytes_per_decode_step.rtn_int4", "lower"),
+        Metric("structural.int4_vs_bf16", "lower"),
+        Metric("structural.int8_vs_bf16", "lower"),
+        Metric("structural.n_qtensor_leaves", "higher"),
+        Metric("structural.dense_materializations_jaxpr#len", "lower"),
+        Metric("structural.dense_materializations_hlo#len", "lower"),
+        Metric("scheduler.outputs_identical", "true"),
+        Metric("scheduler.max_ticks_per_request", "lower"),
+        # replay admission grouping depends on host wall time: launch
+        # totals jitter run to run (a slow runner serializes admissions,
+        # up to sum(ceil(mnt/k)) ticks), so the slack is wide — the gate
+        # is for catastrophic regressions (losing multi-step decode is
+        # a ~10x jump to one launch per token)
+        Metric("scheduler.continuous.decode_launches", "lower", 1.0),
+        Metric("scheduler_chunked.outputs_identical", "true"),
+        Metric("scheduler_chunked.max_ticks_per_request", "lower"),
+        Metric("scheduler_chunked.continuous.prefill_stall_max_tokens",
+               "lower"),
+        Metric("scheduler_chunked.prefill_tokens_skipped", "higher", 0.5),
+        Metric("scheduler_chunked.prefill_frac_saved", "higher", 0.5),
+    ],
+    "opt_step": [
+        Metric("structural.fused_passes_per_leaf", "lower"),
+        Metric("structural.unfused_passes_per_leaf", "lower"),
+        Metric("structural.eliminated_passes_per_leaf", "higher"),
+        Metric("structural.fused_kernel_contract.kernel_calls", "lower"),
+        Metric("structural.fused_kernel_contract.kernel_reads", "lower"),
+        Metric("structural.fused_kernel_contract.kernel_writes", "lower"),
+        Metric("structural.fused_kernel_contract.extra_passes", "lower"),
+    ],
+}
+
+# sub-trees that must be byte-equal between fresh and baseline so the
+# numeric comparison is apples to apples
+CONFIG_KEYS = {
+    "serve": ["config"],
+    "opt_step": ["structural.leaf_shape", "structural.n_leaves"],
+}
+
+
+def resolve(record: dict, path: str):
+    want_len = path.endswith("#len")
+    if want_len:
+        path = path[:-len("#len")]
+    node = record
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return len(node) if want_len else node
+
+
+def check_bench(name: str, fresh: dict, base: dict) -> list:
+    """Returns a list of failure strings (empty = green)."""
+    failures = []
+    for cpath in CONFIG_KEYS.get(name, []):
+        f, b = resolve(fresh, cpath), resolve(base, cpath)
+        if f != b:
+            failures.append(
+                f"{name}: {cpath} mismatch (fresh {f!r} vs baseline {b!r})"
+                f" — regenerate the committed baseline with the SAME bench"
+                f" configuration before gating")
+    for m in METRICS.get(name, []):
+        f = resolve(fresh, m.path)
+        if m.direction == "true":
+            if f is not True:
+                failures.append(f"{name}: {m.path} must be true, got {f!r}")
+            continue
+        b = resolve(base, m.path)
+        if f is None or b is None:
+            failures.append(
+                f"{name}: {m.path} missing "
+                f"(fresh={f!r}, baseline={b!r})")
+            continue
+        f, b = float(f), float(b)
+        slack = abs(b) * m.rel_tol
+        if m.direction == "lower":
+            regressed, improved = f > b + slack, f < b
+        else:
+            regressed, improved = f < b - slack, f > b
+        if regressed:
+            failures.append(
+                f"{name}: {m.path} regressed ({m.direction} is better): "
+                f"fresh {f:g} vs baseline {b:g} (rel_tol {m.rel_tol})")
+        elif improved:
+            print(f"  improvement: {name}: {m.path} {b:g} -> {f:g} "
+                  f"(consider refreshing the committed baseline)")
+    return failures
+
+
+def find_baseline(name: str, baseline_dir: str) -> Optional[str]:
+    for d in (baseline_dir, REPO_ROOT):
+        p = os.path.join(d, f"BENCH_{name}.json")
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory holding freshly generated BENCH_*.json")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR,
+                    help="committed baselines (falls back to repo root)")
+    ap.add_argument("--bench", action="append", default=None,
+                    help="gate only these bench names (default: all with "
+                         "a declared metric set)")
+    args = ap.parse_args(argv)
+
+    names = args.bench or sorted(METRICS)
+    failures = []
+    for name in names:
+        fresh_path = os.path.join(args.fresh_dir, f"BENCH_{name}.json")
+        base_path = find_baseline(name, args.baseline_dir)
+        if not os.path.exists(fresh_path):
+            failures.append(f"{name}: fresh result {fresh_path} not found "
+                            f"(did the bench smoke run?)")
+            continue
+        if base_path is None:
+            failures.append(f"{name}: no committed baseline BENCH_"
+                            f"{name}.json under {args.baseline_dir} or "
+                            f"{REPO_ROOT}")
+            continue
+        with open(fresh_path) as fh:
+            fresh = json.load(fh)
+        with open(base_path) as fh:
+            base = json.load(fh)
+        print(f"checking {name}: {fresh_path} vs {base_path}")
+        failures += check_bench(name, fresh, base)
+
+    if failures:
+        print("\nSTRUCTURAL REGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        return 1
+    print(f"ok: {len(names)} bench(es) within structural baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

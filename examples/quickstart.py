@@ -29,7 +29,9 @@ def main():
                    dtype=jnp.float32, remat=False)
     policy = QuantPolicy(min_size=256)
     perm = permutation_table(0, cfg.vocab)
-    batch_fn = lambda s: lm_batch(0, s, 16, 64, cfg.vocab, perm)
+
+    def batch_fn(s):
+        return lm_batch(0, s, 16, 64, cfg.vocab, perm)
     val = lm_batch(99, 10_000, 64, 64, cfg.vocab, perm)
     floor = markov_ce_floor(cfg.vocab, 0.2)
 

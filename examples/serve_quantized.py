@@ -9,11 +9,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.data import lm_batch, permutation_table
 from repro.models.lm import lm_init
 from repro.serve import Engine, ServeConfig
 

@@ -12,10 +12,8 @@ mesh settings):
 """
 
 import argparse
-import os
 
 import jax
-import jax.numpy as jnp
 
 from repro import checkpoint as ckpt
 from repro.configs import get_config, get_smoke_config

@@ -30,7 +30,7 @@ import os
 import re
 import shutil
 import zlib
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -8,9 +8,8 @@ by the CPU smoke tests.  ``SHAPES`` defines the assigned input-shape grid.
 
 from __future__ import annotations
 
-import dataclasses
 import importlib
-from typing import Dict, List
+from typing import List
 
 from repro.models.lm import LMConfig
 

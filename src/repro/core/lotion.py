@@ -23,13 +23,12 @@ The per-tensor penalty used in the train loop is ``lambda * penalty``
 
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import quantize
-from .formats import IntFormat
 
 Array = jnp.ndarray
 
@@ -60,7 +59,9 @@ def lotion_penalty(
         # (flattening forces a full all-gather at scale — §Perf log).
         blocked, f_blocked = w, fisher
         absmax = quantize._absmax_pertensor(w)
-        unblock = lambda x: x
+
+        def unblock(x):
+            return x
     else:
         blocked, shape, n_pad = quantize._block_view(w, block_size)
         f_blocked, _, _ = quantize._block_view(fisher, block_size)

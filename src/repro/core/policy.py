@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 

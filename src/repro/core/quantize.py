@@ -12,12 +12,11 @@ which simply calls into this module as the oracle).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .formats import IntFormat, get_format
 
 Array = jnp.ndarray
 

@@ -17,7 +17,7 @@ trivially across hosts (each host computes its slice).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

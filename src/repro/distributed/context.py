@@ -10,7 +10,7 @@ Roles: ``residual`` (b, l, d) carried through the layer scan;
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 

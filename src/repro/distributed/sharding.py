@@ -18,7 +18,6 @@ under ``stage/`` is stacked with a leading repeats axis (never sharded).
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import numpy as np

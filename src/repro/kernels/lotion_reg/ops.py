@@ -63,7 +63,6 @@ def _fused(w, fisher, fmt_name: str, block_size: int):
                 flat = flat[:-n_pad]
             return jnp.sum(pen), flat.reshape(shape)
         # stacked leaf: vmap the per-matrix kernel over leading dims
-        lead = shape[:-2]
         wm = w.reshape((-1,) + shape[-2:])
         fm = fisher.reshape((-1,) + shape[-2:])
 

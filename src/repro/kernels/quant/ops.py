@@ -11,9 +11,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.formats import CodebookFormat, IntFormat, get_format
+from repro.core.formats import CodebookFormat, get_format
 
 from .quant_blockwise import quant_pallas
 

@@ -134,8 +134,6 @@ def quant_pallas(w2d: jnp.ndarray, *, qmax: float, block_size: int,
     else:
         kern = functools.partial(_quant_kernel_pretensor, qmax=qmax, fp4=fp4,
                                  stochastic=stochastic)
-        sspec = pl.BlockSpec((1, 1), lambda i, j: (0, 0),
-                             memory_space=pl.ANY if False else None)
         in_specs = [tile, pl.BlockSpec((1, 1), lambda i, j: (0, 0))]
         in_specs += [tile] if stochastic else []
         args = (w2d, scale.reshape(1, 1)) + ((noise,) if stochastic else ())

@@ -5,7 +5,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from .ref import quantize_weights_ref
 from .wq_matmul import wq_matmul_pallas, wqt_matmul_pallas

@@ -23,11 +23,10 @@ import time         # noqa: E402
 import traceback    # noqa: E402
 
 import jax          # noqa: E402
-import jax.numpy as jnp   # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs import ARCHS, SHAPES, cells, get_config  # noqa: E402
+from repro.configs import SHAPES, cells, get_config  # noqa: E402
 from repro.core import QuantConfig  # noqa: E402
 from repro.distributed import (cache_shardings, data_batch_spec,  # noqa: E402
                                params_shardings, state_shardings,

@@ -17,11 +17,9 @@ with g = replica-group size parsed from the op's ``replica_groups``.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional
+from typing import Dict
 
-import numpy as np
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
@@ -77,7 +75,6 @@ def analyze_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
     counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
     wire: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
     raw = 0.0
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _OP_RE.search(line)
         if not m:

@@ -16,7 +16,9 @@ legacy dequantized-at-load behavior.
 replay (Poisson arrivals) of the continuous-batching scheduler vs the
 static barrier server at equal slot count (``--n-slots``,
 ``--steps-per-tick``, ``--arrival-rate``, ``--n-requests``); ``--kv-quant
-[int8|int4]`` selects the quantized KV cache.
+[int8|int4]`` selects the quantized KV cache; ``--prefill-chunk N``
+(+ ``--prefix-cache``) enables chunked admission and shared-prefix KV
+reuse (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -56,7 +58,9 @@ def _replay(cfg, params, args, use_kernel, kv_quant, stored_bytes,
     engine = Engine(cfg, params, scfg)
     sch = Scheduler(cfg, params, scfg, SchedulerConfig(
         n_slots=args.n_slots, steps_per_tick=args.steps_per_tick,
-        cache_len=args.prompt_len + args.new_tokens))
+        cache_len=args.prompt_len + args.new_tokens,
+        prefill_chunk=args.prefill_chunk,
+        prefix_cache=args.prefix_cache))
     nt = args.new_tokens
     workload = poisson_workload(
         0, args.n_requests, cfg.vocab, rate=args.arrival_rate,
@@ -104,6 +108,12 @@ def main():
                          "(vs the static barrier server)")
     ap.add_argument("--n-slots", type=int, default=8)
     ap.add_argument("--steps-per-tick", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill width: admit long prompts one "
+                         "chunk per tick (attention-only patterns)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix KV reuse via the chunk-granular "
+                         "radix trie (requires --prefill-chunk)")
     ap.add_argument("--n-requests", type=int, default=32)
     ap.add_argument("--arrival-rate", type=float, default=100.0,
                     help="Poisson arrivals per virtual-clock second")

@@ -23,8 +23,6 @@ if os.environ.get("REPRO_FORCE_DEVICES"):
         + os.environ.get("XLA_FLAGS", ""))
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import checkpoint as ckpt  # noqa: E402

@@ -430,6 +430,146 @@ def attn_decode(
     return matmul(o, params["wo"]), cache_k, cache_v
 
 
+def attn_chunk_apply(
+    params,
+    spec: AttnSpec,
+    x: Array,                      # (b, cw, d_model) — one prompt chunk
+    positions: Array,              # (b, cw) absolute positions (start + col)
+    chunk_lens: Array,             # (b,) real tokens this chunk (rest pad)
+    cache_k,                       # (b, L, kvh, hd) or quantized dict
+    cache_v,
+):
+    """Chunked-prefill attention: a block of new prompt tokens against a
+    partial KV cache (DESIGN.md §8).
+
+    Chunk queries attend the UNION of (a) the pre-chunk cache — slot
+    validity derived from ``start - 1`` exactly as decode derives it from
+    ``pos`` — and (b) the in-chunk fresh keys under the causal/window
+    mask.  Scoring against the *pre-write* cache plus fresh arrays (not
+    the post-write ring) is what keeps sliding-window layers exact: a
+    late chunk token may ring-evict a slot an earlier query still needs,
+    but that key is still present as a fresh array here.  The chunk's K/V
+    are scatter-written afterwards at ``pos % L`` (only each slot's
+    newest in-chunk position — duplicates masked to a dump row), so the
+    resulting cache is byte-identical to what per-token decode writes
+    would have left.
+
+    Rows are right-padded to the fixed chunk width: pad columns are
+    masked as keys, dumped as writes, and their (garbage) outputs are
+    ignored by the caller.  Returns (out (b, cw, d_model), new_cache_k,
+    new_cache_v).
+    """
+    b, cw, _ = x.shape
+    g = spec.n_kv_heads
+    rep = spec.n_heads // g
+    hd = spec.head_dim
+
+    if spec.is_cross:
+        # cross-attn KV is position-free encoder context: plain
+        # (non-causal) attention over the cached keys, no cache update
+        q = matmul(x, params["wq"]).reshape(b, cw, spec.n_heads, hd)
+        if spec.qk_norm:
+            q = rms_norm(q, params["q_norm_scale"])
+        ke = _expand_kv(cache_k.astype(x.dtype), spec.n_heads)
+        ve = _expand_kv(cache_v.astype(x.dtype), spec.n_heads)
+        bias = jnp.zeros((1, 1, 1, ke.shape[1]), jnp.float32)
+        o = _sdpa(q, ke, ve, bias, spec.softcap)
+        return (matmul(o.reshape(b, cw, spec.q_dim), params["wo"]),
+                cache_k, cache_v)
+
+    q, k, v = _qkv(params, spec, x)
+    q = apply_rope(q, positions, spec.rope_theta)
+    k = apply_rope(k, positions, spec.rope_theta)
+    L = (cache_k["codes"] if _is_quantized_cache(cache_k)
+         else cache_k).shape[1]
+    q4 = q.reshape(b, cw, g, rep, hd)
+    scale = 1.0 / np.sqrt(hd)
+
+    # (a) scores against the pre-chunk cache: slot j holds absolute
+    # position p_j = the largest p <= start-1 with p % L == j (decode's
+    # ring-validity rule anchored at the last pre-chunk position)
+    prev_last = positions[:, 0] - 1                                # (b,)
+    j = jnp.arange(L)
+    p_j = prev_last[:, None] - ((prev_last[:, None] - j[None, :]) % L)
+
+    def cache_scores(ck):
+        if _is_quantized_cache(ck):
+            s = jnp.einsum("bqgrd,blgd->bgrql", q4,
+                           _cache_codes(ck).astype(q4.dtype))
+            return s.astype(jnp.float32) * ck["scale"][..., 0].transpose(
+                0, 2, 1)[:, :, None, None, :]
+        return jnp.einsum("bqgrd,blgd->bgrql", q4,
+                          ck.astype(q4.dtype)).astype(jnp.float32)
+
+    def cache_out(probs, cv):
+        if _is_quantized_cache(cv):
+            p = probs * cv["scale"][..., 0].transpose(
+                0, 2, 1)[:, :, None, None, :]
+            return jnp.einsum("bgrql,blgd->bqgrd", p.astype(x.dtype),
+                              _cache_codes(cv).astype(x.dtype))
+        return jnp.einsum("bgrql,blgd->bqgrd", probs.astype(x.dtype),
+                          cv.astype(x.dtype))
+
+    ok_c = (p_j >= 0)[:, None, :]                                  # (b, 1, L)
+    if spec.window is not None:
+        ok_c = ok_c & (positions[:, :, None] - p_j[:, None, :] < spec.window)
+    bias_c = jnp.where(ok_c, 0.0, NEG_INF).astype(jnp.float32)
+
+    # (b) causal scores against the in-chunk fresh keys
+    kcol_ok = (jnp.arange(cw)[None, :] < chunk_lens[:, None])      # (b, cw)
+    d = positions[:, :, None] - positions[:, None, :]
+    ok_f = (d >= 0) & kcol_ok[:, None, :]
+    if spec.window is not None:
+        ok_f = ok_f & (d < spec.window)
+    bias_f = jnp.where(ok_f, 0.0, NEG_INF).astype(jnp.float32)
+    k4 = k.reshape(b, cw, g, hd)
+    logits_f = jnp.einsum("bqgrd,bkgd->bgrqk", q4,
+                          k4).astype(jnp.float32)
+
+    logits = jnp.concatenate([cache_scores(cache_k), logits_f], -1) * scale
+    if spec.softcap is not None:
+        logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+    bias = jnp.concatenate(
+        [jnp.broadcast_to(bias_c[:, None, None], logits.shape[:-1] + (L,)),
+         jnp.broadcast_to(bias_f[:, None, None], logits.shape[:-1] + (cw,))],
+        -1)
+    probs = jax.nn.softmax(logits + bias, axis=-1)
+    o = cache_out(probs[..., :L], cache_v) + jnp.einsum(
+        "bgrqk,bkgd->bqgrd", probs[..., L:].astype(x.dtype),
+        v.reshape(b, cw, g, hd))
+    out = matmul(o.reshape(b, cw, spec.q_dim), params["wo"])
+
+    # scatter-write the chunk's K/V at ring slots; per slot only the
+    # chunk's NEWEST position lands (older ring-period duplicates and pad
+    # columns go to the dump row, which is sliced off)
+    last_real = positions[:, 0] + chunk_lens - 1                   # (b,)
+    keep = kcol_ok & (positions >= (last_real - L + 1)[:, None])
+    slots = jnp.where(keep, positions % L, L).astype(jnp.int32)
+    bidx = jnp.arange(b)[:, None]
+
+    def write(cache, vals):
+        if _is_quantized_cache(cache):
+            bits = 4 if cache["codes"].dtype == jnp.uint8 else 8
+            qv = kv_quantize(vals, bits)
+            return {
+                "codes": jnp.concatenate(
+                    [cache["codes"],
+                     jnp.zeros((b, 1) + cache["codes"].shape[2:],
+                               cache["codes"].dtype)], 1)
+                .at[bidx, slots].set(qv["codes"])[:, :L],
+                "scale": jnp.concatenate(
+                    [cache["scale"],
+                     jnp.ones((b, 1) + cache["scale"].shape[2:],
+                              jnp.float32)], 1)
+                .at[bidx, slots].set(qv["scale"])[:, :L],
+            }
+        return jnp.concatenate(
+            [cache, jnp.zeros((b, 1) + cache.shape[2:], cache.dtype)], 1
+        ).at[bidx, slots].set(vals.astype(cache.dtype))[:, :L]
+
+    return out, write(cache_k, k4), write(cache_v, v.reshape(b, cw, g, hd))
+
+
 # --------------------------------------------------------------------------
 # MLP
 # --------------------------------------------------------------------------

@@ -12,7 +12,7 @@ required on the quadratic).
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

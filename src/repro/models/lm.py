@@ -657,6 +657,143 @@ def lm_prefill(params, cfg: LMConfig, tokens: Array,
     return logits, cache
 
 
+def quantize_cache(cfg: LMConfig, cache, kv_quant):
+    """Convert a DENSE cache (``init_cache(..., kv_quant=False)`` layout)
+    to the quantized layout ``init_cache(..., kv_quant=...)`` builds.
+
+    Chunked prefill accumulates its partial cache densely (so chunk
+    attention reads earlier chunks at exactly the precision monolithic
+    prefill reads its in-flight K/V — the token-parity argument) and the
+    quantization happens once here, at slot-insert time.  Per-vector
+    absmax over the scattered values is bitwise the same as quantizing
+    before the scatter, and all-zero (unwritten) slots produce
+    codes=0/scale=1 — the ``init_cache`` fill — so the layout matches a
+    monolithic ``lm_prefill(kv_quant=...)`` cache exactly (values agree
+    to fp summation-order tolerance, same as the dense chunked path).
+    """
+    bits = layers.kv_bits(kv_quant)
+    if not bits:
+        return cache
+
+    def q(leaf):
+        return {"k": layers.kv_quantize(leaf["k"], bits),
+                "v": layers.kv_quantize(leaf["v"], bits)}
+
+    unit = dict(cache["unit"])
+    for i, kind in enumerate(cfg.pattern):
+        name = f"b{i}_{kind}"
+        if kind in ("attn", "local"):
+            unit[name] = q(unit[name])
+    out = {"unit": unit}
+    if cfg.shared_attn_every:
+        out["shared"] = q(cache["shared"])
+    return out
+
+
+def lm_prefill_chunk(params, cfg: LMConfig, cache, tokens: Array,
+                     start_pos: Array, chunk_lens: Optional[Array] = None):
+    """Advance a partial prefill by ONE chunk of prompt tokens.
+
+    tokens: (b, cw) — the next chunk per row, right-padded to the fixed
+    chunk width.  start_pos: (b,) absolute position of column 0 (i.e.
+    tokens already in the cache per row).  chunk_lens: (b,) real token
+    count this chunk (None -> full width).  ``cache`` must be a DENSE
+    partial cache holding every position < start_pos; the chunk's K/V
+    are ring-scattered into it (see ``quantize_cache`` for the deferred
+    kv-quant step).
+
+    Attention-family blocks only: recurrent (mamba/rwkv) blocks would
+    need their state threaded per-chunk — callers gate on
+    ``serve.engine.attn_only`` (which also excludes capacity-based MoE,
+    whose per-group routing makes chunked != monolithic).  Returns
+    (logits of each row's LAST REAL token (b, 1, [codebooks,] vocab),
+    new_cache).
+    """
+    b, cw = tokens.shape[0], tokens.shape[1]
+    if chunk_lens is None:
+        chunk_lens = jnp.full((b,), cw, jnp.int32)
+    positions = start_pos[:, None] + jnp.arange(cw)[None, :]       # (b, cw)
+    x = _embed(params, cfg, tokens)
+
+    def unit_body(x, scanned):
+        unit_p, unit_c = scanned
+        new_c = {}
+        for i, kind in enumerate(cfg.pattern):
+            name = f"b{i}_{kind}"
+            p = unit_p[name]
+            if kind in ATTN_KINDS:
+                h = rms_norm(x, p["pre_norm_scale"])
+                o, ck, cv = layers.attn_chunk_apply(
+                    p["attn"], cfg.attn_spec(kind), h, positions,
+                    chunk_lens, unit_c[name]["k"], unit_c[name]["v"])
+                if kind == "xattn":
+                    o = jnp.tanh(p["xattn_gate"]).astype(x.dtype) * o
+                new_c[name] = {"k": ck, "v": cv}
+                if cfg.use_post_norm:
+                    o = rms_norm(o, p["post_norm_scale"])
+                x = x + o
+                h = rms_norm(x, p["ffn_norm_scale"])
+                if cfg.ffn == "moe":
+                    hm, _ = moe_apply(p["moe"], cfg.moe_spec(), h)
+                    if cfg.n_shared_experts:
+                        shared_spec = MLPSpec(cfg.d_model,
+                                              cfg.d_ff * cfg.n_shared_experts,
+                                              cfg.mlp_kind)
+                        hm = hm + mlp_apply(p["shared_mlp"], shared_spec, h)
+                    h = hm
+                else:
+                    h = mlp_apply(p["mlp"], cfg.mlp_spec(), h)
+                if cfg.use_post_norm:
+                    h = rms_norm(h, p["ffn_post_norm_scale"])
+                x = x + h
+            else:
+                raise NotImplementedError(
+                    f"chunked prefill needs attention-family blocks; "
+                    f"{cfg.name} has {kind!r} (recurrent state is not "
+                    f"threaded across chunks — use monolithic prefill)")
+        if cfg.shared_attn_every:
+            hs = rms_norm(x, params["shared"]["pre_norm_scale"])
+            o, ck, cv = layers.attn_chunk_apply(
+                params["shared"]["attn"], cfg.attn_spec("attn"), hs,
+                positions, chunk_lens, unit_c["__shared__"]["k"],
+                unit_c["__shared__"]["v"])
+            new_c["__shared__"] = {"k": ck, "v": cv}
+            x = x + o
+            h = rms_norm(x, params["shared"]["ffn_norm_scale"])
+            x = x + mlp_apply(params["shared"]["mlp"], cfg.mlp_spec(), h)
+        return x, new_c
+
+    scanned_cache = dict(cache["unit"])
+    if cfg.shared_attn_every:
+        scanned_cache["__shared__"] = cache["shared"]
+
+    # same carry-DUS dataflow as lm_decode: the cache is updated in place
+    # per repeat instead of double-buffered as stacked scan ys
+    def carry_body(carry, unit_p):
+        x, full_cache, r = carry
+        unit_c = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, r, 0, keepdims=False),
+            full_cache)
+        x, new_c = unit_body(x, (unit_p, unit_c))
+        full_cache = jax.tree.map(
+            lambda full, upd: jax.lax.dynamic_update_index_in_dim(
+                full, upd.astype(full.dtype), r, 0),
+            full_cache, new_c)
+        return (x, full_cache, r + 1), None
+
+    (x, new_stacked, _), _ = jax.lax.scan(
+        carry_body, (x, scanned_cache, jnp.int32(0)), params["stage"],
+        unroll=scan_unroll(cfg.n_repeats))
+    shared_cache = new_stacked.pop("__shared__", None)
+    new_cache = {"unit": new_stacked}
+    if shared_cache is not None:
+        new_cache["shared"] = shared_cache
+    # head over each row's last real column only (pad outputs are garbage)
+    last = jnp.clip(chunk_lens - 1, 0)[:, None, None]
+    x_last = jnp.take_along_axis(x, last, axis=1)                  # (b, 1, d)
+    return _head(params, cfg, x_last), new_cache
+
+
 def lm_decode(params, cfg: LMConfig, cache, tokens: Array, pos: Array,
               token_mask: Optional[Array] = None):
     """One-token decode.  tokens: (b, 1[, codebooks]); pos: (b,) int32.

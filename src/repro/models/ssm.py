@@ -18,7 +18,7 @@ below e^-5 per step annihilates within a subchunk anyway — see DESIGN.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -296,7 +296,6 @@ def rwkv6_time_mix_init(key, spec: RWKV6Spec) -> Dict[str, Any]:
 
 def _ddlerp(params, x: Array, xx: Array):
     """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
-    d = x.shape[-1]
     r5 = params["mu_lora_a"].shape[1] // 5
     delta = xx - x
     base = params["mu_base"].astype(x.dtype)                     # (5, d)

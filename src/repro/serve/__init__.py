@@ -3,8 +3,10 @@
 (persistent decode slots + on-device multi-step decode)."""
 
 from .engine import Engine, ServeConfig, attn_only, prepare_params
+from .prefix_cache import PrefixCache
 from .scheduler import Scheduler, SchedulerConfig
 from .slots import Request, SlotPool
 
 __all__ = ["Engine", "ServeConfig", "Scheduler", "SchedulerConfig",
-           "Request", "SlotPool", "attn_only", "prepare_params"]
+           "Request", "SlotPool", "PrefixCache", "attn_only",
+           "prepare_params"]

@@ -37,9 +37,12 @@ Engine mechanics:
   masked out of every attention score, so a request's generation is
   *pad-invariant* — independent of its batchmates, and token-identical to
   the continuous scheduler's per-slot prefill-insert (the parity the
-  acceptance tests pin).  Recurrent blocks (mamba/rwkv) consume pads
-  positionally, so hybrid-arch batches keep the legacy pads-attended
-  semantics (batch equal-length prompts for exact parity there).
+  acceptance tests pin).  The same contract extends to the scheduler's
+  chunked prefill and prefix-cache splices (DESIGN.md §8): this engine
+  is the parity oracle for ALL of the scheduler's admission modes.
+  Recurrent blocks (mamba/rwkv) consume pads positionally, so
+  hybrid-arch batches keep the legacy pads-attended semantics (batch
+  equal-length prompts for exact parity there).
 * ``cache_len`` is bucketed up to the next power of two, so the decode
   step — the serving hot loop, whose static shapes are (batch,
   cache_len) — compiles O(log max_seq) times instead of once per

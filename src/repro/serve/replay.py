@@ -52,6 +52,36 @@ def poisson_workload(seed: int, n_requests: int, vocab: int,
     return out
 
 
+def shared_prefix_workload(seed: int, n_requests: int, vocab: int,
+                           rate: float = 50.0,
+                           sys_len: int = 16,
+                           tail_lens=(2, 8),
+                           straggler_every: int = 6,
+                           straggler_len: int = 48,
+                           budgets=(2, 4, 8, 16)) -> List[ReplayRequest]:
+    """Chat-shaped Poisson stream: every prompt opens with the SAME
+    ``sys_len``-token system prompt (the dominant real-traffic pattern
+    the prefix cache exists for) followed by a short unique tail, and
+    every ``straggler_every``-th request is a long-prompt straggler
+    (unique ``straggler_len``-token prompt) — the head-of-line blocker
+    chunked prefill exists for."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    sys_prompt = rng.integers(0, vocab, sys_len).tolist()
+    out = []
+    for i in range(n_requests):
+        if straggler_every and (i + 1) % straggler_every == 0:
+            prompt = rng.integers(0, vocab, straggler_len).tolist()
+        else:
+            tail = int(rng.integers(tail_lens[0], tail_lens[1] + 1))
+            prompt = sys_prompt + rng.integers(0, vocab, tail).tolist()
+        out.append(ReplayRequest(
+            prompt=prompt,
+            max_new_tokens=int(rng.choice(budgets)),
+            arrival=float(arrivals[i])))
+    return out
+
+
 def _metrics(latency: Dict[int, float], tokens: Dict[int, List[int]],
              makespan: float, slo: float) -> dict:
     lats = np.asarray([latency[i] for i in sorted(latency)])
@@ -108,6 +138,9 @@ def replay_continuous(scheduler, workload: List[ReplayRequest]) -> dict:
                                 arrival=w.arrival)] = i
     clock = 0.0
     start_ticks = scheduler.n_ticks   # scheduler may be warm (reused)
+    start_stall = len(scheduler.stall_log)
+    start_computed = scheduler.prefill_tokens_computed
+    start_skipped = scheduler.prefill_tokens_skipped
     done_at: Dict[int, float] = {}
     while scheduler.has_work():
         if not scheduler.pool.occupied():
@@ -124,7 +157,16 @@ def replay_continuous(scheduler, workload: List[ReplayRequest]) -> dict:
     ticks = {rid_of[r]: scheduler.requests[r].ticks for r in rid_of}
     return {"outputs": outputs, "latency": latency, "makespan": clock,
             "decode_launches": scheduler.n_ticks - start_ticks,
-            "ticks": ticks}
+            "ticks": ticks,
+            # structural decode-stall signal (ISSUE 5): prefill tokens
+            # each step() interposed before its decode scan — bounded by
+            # prefill_chunk under chunked admission, by the longest
+            # prompt under monolithic prefill-insert
+            "prefill_tokens_per_tick": scheduler.stall_log[start_stall:],
+            "prefill_tokens_computed":
+                scheduler.prefill_tokens_computed - start_computed,
+            "prefill_tokens_skipped":
+                scheduler.prefill_tokens_skipped - start_skipped}
 
 
 def compare(static: dict, continuous: dict) -> dict:
@@ -138,6 +180,14 @@ def compare(static: dict, continuous: dict) -> dict:
                  continuous["makespan"], slo)
     s["decode_launches"] = static["decode_launches"]
     c["decode_launches"] = continuous["decode_launches"]
+    stall = continuous.get("prefill_tokens_per_tick")
+    if stall is not None:
+        busy = [t for t in stall if t > 0]
+        c["prefill_stall_max_tokens"] = int(max(busy, default=0))
+        c["prefill_stall_nonzero_p95_tokens"] = (
+            float(np.percentile(busy, 95)) if busy else 0.0)
+        c["prefill_tokens_computed"] = continuous["prefill_tokens_computed"]
+        c["prefill_tokens_skipped"] = continuous["prefill_tokens_skipped"]
     return {
         "static": s,
         "continuous": c,

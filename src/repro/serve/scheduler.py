@@ -31,6 +31,19 @@ loop inside out:
   queued requests in submit order (lowest free slot first, so a replayed
   request stream is deterministic).
 
+* **Chunked prefill** (``prefill_chunk``, DESIGN.md §8) — a long prompt
+  no longer stalls the tick it is admitted in: the request takes a slot
+  in state PREFILLING and its prompt advances ONE fixed-width chunk per
+  tick (``lm_prefill_chunk`` resumes positions against the request's
+  dense partial cache), interleaved with the decode scan — so the
+  prefill work any tick can impose on decoding requests is bounded by
+  the chunk width, not the longest prompt in the queue.
+* **Prefix-cache sharing** (``prefix_cache``) — whole-chunk prompt-
+  prefix hits against a refcounted LRU radix trie are spliced into the
+  partial cache as plain row copies, skipping the shared prefix's
+  prefill FLOPs entirely (exact-match token-ID keys + deterministic
+  chunked prefill keep greedy outputs token-identical).
+
 Greedy generations are token-identical to the static engine for the same
 request set (the engine's per-row ``prompt_lens`` masking makes static
 batching pad-invariant; capacity-based MoE routing is the documented
@@ -43,7 +56,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -51,11 +64,12 @@ import numpy as np
 
 from repro.core.qtensor import qtensor_use_kernel
 from repro.models.lm import (LMConfig, cache_insert, init_cache, lm_decode,
-                             lm_prefill)
+                             lm_prefill, lm_prefill_chunk, quantize_cache)
 
 from .engine import (ServeConfig, attn_only, bucket_cache_len,
                      prepare_params, sample_token)
-from .slots import ACTIVE, DONE, Request, SlotPool
+from .prefix_cache import PrefixCache
+from .slots import ACTIVE, DONE, PREFILLING, Request, SlotPool
 
 
 @dataclasses.dataclass
@@ -67,6 +81,27 @@ class SchedulerConfig:
     # where pad masking makes it output-invariant): bounds prefill re-jits
     # to O(log cache_len) instead of one per distinct prompt length
     bucket_prompts: bool = True
+    # chunked prefill (DESIGN.md §8): admit a prompt across ticks in
+    # fixed-size chunks — one chunk per tick interleaved with the decode
+    # scan, so decode stall per tick is bounded by the chunk width, not
+    # the longest prompt.  None = monolithic prefill-insert (PR 4).
+    # Attention-only patterns (see serve.engine.attn_only).
+    prefill_chunk: Optional[int] = None
+    # shared-prefix KV reuse: splice whole-chunk prefix hits from a
+    # refcounted LRU radix trie instead of re-prefilling them (requires
+    # prefill_chunk; exact-match, so greedy outputs are unchanged)
+    prefix_cache: bool = False
+    prefix_cache_blocks: int = 256   # LRU capacity, in prefill_chunk blocks
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """Host-side progress of one chunked prompt admission."""
+
+    rid: int
+    cache: Any                   # dense partial cache, batch=1 (device)
+    next: int                    # next prompt index to prefill
+    pinned: list                 # prefix-trie nodes pinned by the lookup
 
 
 class Scheduler:
@@ -89,6 +124,46 @@ class Scheduler:
         # structural dispatch accounting (ISSUE 4 acceptance)
         self.n_ticks = 0
         self.n_prefills = 0
+        # chunked-prefill / prefix-cache accounting (ISSUE 5): prefill
+        # tokens computed per step() (the decode-stall signal — bounded
+        # by prefill_chunk when chunking is on, by the longest prompt
+        # when it is not) and tokens skipped via prefix-cache splices
+        self.stall_log: List[int] = []
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_skipped = 0
+        self._stall_tokens = 0
+
+        self._chunked = sched.prefill_chunk is not None
+        if self._chunked:
+            if sched.prefill_chunk < 1:
+                raise ValueError(
+                    f"prefill_chunk must be >= 1, got {sched.prefill_chunk}")
+            if not self._mask_pads or "xattn" in cfg.pattern:
+                raise ValueError(
+                    f"chunked prefill requires a self-attention-only "
+                    f"dense-FFN pattern (recurrent blocks do not thread "
+                    f"state across chunks; capacity-based MoE routing is "
+                    f"chunk-dependent; xattn has no encoder context on "
+                    f"the serving path); {cfg.name} has "
+                    f"pattern={cfg.pattern}, ffn={cfg.ffn}")
+        self.prefix: Optional[PrefixCache] = None
+        if sched.prefix_cache:
+            if not self._chunked:
+                raise ValueError("prefix_cache requires prefill_chunk "
+                                 "(blocks are chunk-granular)")
+            for kind in cfg.pattern:
+                ring = (min(cfg.window or sched.cache_len, sched.cache_len)
+                        if kind == "local" else sched.cache_len)
+                if kind not in ("attn", "local") or ring != sched.cache_len:
+                    raise ValueError(
+                        f"prefix_cache needs every layer's ring to cover "
+                        f"cache_len (slot == position, so prefix blocks "
+                        f"are extractable); {cfg.name} block {kind!r} has "
+                        f"ring {ring} < cache_len {sched.cache_len}")
+            self.prefix = PrefixCache(sched.prefill_chunk,
+                                      sched.prefix_cache_blocks)
+        self._prefills: Dict[int, _PrefillJob] = {}
+        self._prefill_q: collections.deque = collections.deque()
 
         n, k, cl = sched.n_slots, sched.steps_per_tick, sched.cache_len
         dt = cfg.dtype
@@ -149,9 +224,35 @@ class Scheduler:
                          "mnt": mnt, "eos": eos, "active": active}
             return cache, new_state, em          # em: (k, n_slots)
 
+        def _chunk_fn(p, row_cache, toks, start, lens, key):
+            with qtensor_use_kernel(scfg.use_kernel):
+                logits, row_cache = lm_prefill_chunk(p, cfg, row_cache,
+                                                     toks, start, lens)
+            return _sample(logits[:, 0], key), row_cache
+
+        def _insert_dense_fn(cache, state, row_cache, slot, tok, plen,
+                             mnt, eos):
+            # chunked partial caches stay dense until this insert (chunk
+            # attention must read earlier chunks at monolithic precision)
+            row_cache = quantize_cache(cfg, row_cache, scfg.kv_quant)
+            return _insert_fn(cache, state, row_cache, slot, tok, plen,
+                              mnt, eos)
+
         self._prefill = jax.jit(_prefill_fn)
         self._insert = jax.jit(_insert_fn, donate_argnums=(0, 1))
         self._tick = jax.jit(_tick_fn, donate_argnums=(1, 2))
+        if self._chunked:
+            self._chunk = jax.jit(_chunk_fn, donate_argnums=(1,))
+            self._insert_dense = jax.jit(_insert_dense_fn,
+                                         donate_argnums=(0, 1))
+            # fresh partial caches: device-side zeros (no host upload on
+            # the common prefix-miss admission)
+            self._fresh_row = jax.jit(
+                lambda: init_cache(cfg, 1, cl, dtype=dt, kv_quant=False))
+            # host-side zero template for prefix-spliced partial caches
+            shapes = jax.eval_shape(self._fresh_row)
+            self._row_template = jax.tree.map(
+                lambda s: np.zeros(s.shape, s.dtype), shapes)
 
     # ------------------------------------------------------------------
     # request API
@@ -184,11 +285,16 @@ class Scheduler:
         return bool(self.queue) or bool(self.pool.occupied())
 
     def step(self, now: Optional[float] = None) -> List[Request]:
-        """Admit what fits (arrival-gated when ``now`` is given), run one
-        decode tick, retire finished slots.  Returns requests completed
-        by this step."""
+        """Admit what fits (arrival-gated when ``now`` is given), advance
+        at most one prefill chunk (chunked mode), run one decode tick,
+        retire finished slots.  Returns requests completed by this
+        step."""
+        self._stall_tokens = 0
         completed = self._admit(now)
+        if self._chunked:
+            completed += self._prefill_tick()
         completed += self._do_tick()
+        self.stall_log.append(self._stall_tokens)
         return completed
 
     def run(self) -> Dict[int, List[int]]:
@@ -216,6 +322,9 @@ class Scheduler:
     # ------------------------------------------------------------------
 
     def _admit(self, now: Optional[float] = None) -> List[Request]:
+        if self._chunked:
+            self._admit_chunked(now)
+            return []
         completed = []
         while self.pool.n_free and self.queue:
             rid = self.queue[0]
@@ -225,6 +334,8 @@ class Scheduler:
             self.queue.popleft()
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
+            self._stall_tokens += len(req.prompt)
+            self.prefill_tokens_computed += len(req.prompt)
 
             toks = np.asarray([req.prompt], np.int32)
             lens = None
@@ -253,12 +364,134 @@ class Scheduler:
         return completed
 
     # ------------------------------------------------------------------
+    # chunked admission (one prefill chunk per tick; DESIGN.md §8)
+    # ------------------------------------------------------------------
+
+    def _admit_chunked(self, now: Optional[float] = None) -> None:
+        """Reserve a slot per queued request (state PREFILLING) and queue
+        its prefill job; no compute happens here — chunks advance one per
+        tick in :meth:`_prefill_tick`, so a long prompt can never stall a
+        decode tick for more than one chunk's worth of work.  The prefix
+        lookup is deliberately NOT done here: it happens when the job
+        starts prefilling, so a burst of requests sharing a system
+        prompt admitted together still hits the chunks the first sharer
+        publishes (admission-time lookup would miss every in-flight
+        sharer — the dominant pattern the trie exists for)."""
+        while self.pool.n_free and self.queue:
+            rid = self.queue[0]
+            req = self.requests[rid]
+            if now is not None and req.arrival > now:
+                break
+            self.queue.popleft()
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            req.slot = self.pool.acquire(rid)
+            req.state = PREFILLING
+            self._prefills[rid] = _PrefillJob(rid=rid, cache=None, next=0,
+                                              pinned=[])
+            self._prefill_q.append(rid)
+
+    def _start_prefill(self, req: Request, job: _PrefillJob) -> None:
+        """First chunk of a job: prefix lookup + partial-cache creation.
+        Misses get device-side zeros (no host traffic); hits assemble the
+        spliced rows on host and upload once."""
+        matched, pinned = (self.prefix.lookup(req.prompt)
+                           if self.prefix is not None else (0, []))
+        req.prefix_hit_tokens = matched
+        self.prefill_tokens_skipped += matched
+        job.pinned = pinned
+        job.next = matched
+        job.cache = (self._spliced_row_cache(pinned) if pinned
+                     else self._fresh_row())
+
+    def _spliced_row_cache(self, pinned):
+        """Fresh dense batch=1 partial cache with prefix-trie blocks
+        copied in at their absolute positions (slot == position: the
+        prefix gate requires every ring to cover cache_len)."""
+        host = jax.tree.map(np.copy, self._row_template)
+        c = self.sched.prefill_chunk
+        for i, node in enumerate(pinned):
+            jax.tree.map(
+                lambda dst, src, i=i: dst.__setitem__(
+                    (slice(None), slice(None),
+                     slice(i * c, (i + 1) * c)), src),
+                host, node.payload)
+        return jax.tree.map(jnp.asarray, host)
+
+    def _prefill_tick(self) -> List[Request]:
+        """Advance the OLDEST prefilling request by one chunk; on its
+        final chunk, sample the first token, publish full chunks to the
+        prefix trie, and splice the (kv-quantized) row into the pool."""
+        if not self._prefill_q:
+            return []
+        rid = self._prefill_q[0]
+        job = self._prefills[rid]
+        req = self.requests[rid]
+        if job.cache is None:
+            self._start_prefill(req, job)
+        cw = self.sched.prefill_chunk
+        n = len(req.prompt)
+        take = min(cw, n - job.next)
+        toks = np.zeros((1, cw), np.int32)
+        toks[0, :take] = req.prompt[job.next:job.next + take]
+        key = jax.random.fold_in(self._key, rid)
+        self.n_prefills += 1
+        req.prefill_chunks += 1
+        tok, job.cache = self._chunk(
+            self.params, job.cache, jnp.asarray(toks),
+            jnp.asarray([job.next], jnp.int32),
+            jnp.asarray([take], jnp.int32), key)
+        job.next += take
+        self._stall_tokens += take
+        self.prefill_tokens_computed += take
+        if job.next < n:
+            return []
+
+        # final chunk: the request leaves PREFILLING
+        self._prefill_q.popleft()
+        del self._prefills[rid]
+        if self.prefix is not None:
+            self._publish_prefix(req, job)
+            self.prefix.release(job.pinned)
+        first = int(tok[0])
+        req.out.append(first)
+        if req.finished_by(first, 1):
+            req.state = DONE           # budget of 1 / instant EOS
+            self.pool.release(req.slot)
+            req.slot = None
+            return [req]
+        req.state = ACTIVE
+        self._cache, self._state = self._insert_dense(
+            self._cache, self._state, job.cache, req.slot, tok[0], n,
+            req.max_new_tokens, -1 if req.eos_id is None else req.eos_id)
+        return []
+
+    def _publish_prefix(self, req: Request, job: _PrefillJob) -> None:
+        """Insert the prompt's full chunks into the trie.  Block i is a
+        pure function of prompt[:(i+1)*c] (deterministic chunked prefill
+        with absolute chunk boundaries), so re-computed and cached blocks
+        are interchangeable — the trie keeps whichever arrived first."""
+        c = self.sched.prefill_chunk
+        k_full = len(req.prompt) // c
+        if k_full == 0:
+            return
+        # slice on device, transfer only the prompt's full chunks — not
+        # the whole cache_len row (prefix gate: slot == position)
+        host = jax.tree.map(
+            lambda a: np.asarray(a[:, :, :k_full * c]), job.cache)
+        blocks = [jax.tree.map(
+            lambda a, i=i: a[:, :, i * c:(i + 1) * c].copy(), host)
+            for i in range(k_full)]
+        self.prefix.insert(req.prompt, blocks)
+
+    # ------------------------------------------------------------------
     # decode tick (k steps on device, one dispatch)
     # ------------------------------------------------------------------
 
     def _do_tick(self) -> List[Request]:
-        occupied = self.pool.occupied()
-        if not occupied:
+        occupied = [(slot, rid) for slot, rid in self.pool.occupied()
+                    if self.requests[rid].state == ACTIVE]
+        if not occupied:               # only PREFILLING slots: no decode
             return []
         self.n_ticks += 1
         key = jax.random.fold_in(self._tick_key, self.n_ticks)

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-QUEUED, ACTIVE, DONE = "queued", "active", "done"
+QUEUED, PREFILLING, ACTIVE, DONE = "queued", "prefilling", "active", "done"
 
 
 @dataclasses.dataclass
@@ -36,6 +36,12 @@ class Request:
     # launches per request <= ceil(max_new_tokens / steps_per_tick))
     ticks: int = 0                  # decode ticks participated in
     admit_seq: Optional[int] = None  # global admission counter (fairness)
+    # chunked-prefill / prefix-cache bookkeeping (DESIGN.md §8): a
+    # PREFILLING request holds its slot while its prompt is admitted one
+    # chunk per tick; prefix_hit_tokens were spliced from the trie and
+    # never prefilled at all
+    prefill_chunks: int = 0         # chunk launches spent on this prompt
+    prefix_hit_tokens: int = 0
     # offered-load replay bookkeeping (virtual-clock seconds)
     arrival: float = 0.0
     t_admit: Optional[float] = None

@@ -180,7 +180,6 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     all-reduce under GSPMD instead of an all-gather of the logits.
     """
     logz = jax.nn.logsumexp(logits, axis=-1)
-    vocab = logits.shape[-1]
     iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
     gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
     return jnp.mean(logz - gold)

@@ -10,7 +10,6 @@ import pytest
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.core import QuantConfig
-from repro.data import lm_batch, permutation_table
 from repro.models.lm import lm_decode, lm_forward, lm_init, lm_prefill
 from repro.optim import adamw, constant
 from repro.train import TrainConfig, init_state, make_optimizer, make_train_step

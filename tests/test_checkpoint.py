@@ -1,9 +1,7 @@
 """Checkpoint fault-tolerance tests: atomicity, rotation, corruption
 detection, resume, elastic restore."""
 
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -5,10 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (INT4, INT8, FP4_E2M1, cast_rr, cast_rtn, get_format,
-                        lotion_penalty, lotion_penalty_and_grad,
-                        quadratic_smoothed, rr_neighbors, rr_variance,
-                        smoothed_loss_mc)
+from repro.core import (INT4, INT8, FP4_E2M1, cast_rr, cast_rtn,
+                        lotion_penalty, quadratic_smoothed, rr_neighbors,
+                        rr_variance, smoothed_loss_mc)
 from repro.models.linear import (power_law_spectrum, twolayer_ground_truth,
                                  twolayer_population_loss)
 
@@ -45,7 +44,9 @@ def test_lemma1_continuity(fmt):
     quantized loss L(cast(w)) jumps)."""
     H = jnp.diag(jnp.linspace(1.0, 0.1, 16))
     w_star = jnp.zeros((16,))
-    loss = lambda q: 0.5 * q @ (H @ q)
+
+    def loss(q):
+        return 0.5 * q @ (H @ q)
 
     w = jax.random.normal(jax.random.PRNGKey(3), (16,))
     lo, hi = rr_neighbors(w, fmt)
@@ -67,7 +68,9 @@ def test_lemma2_global_minima_preserved(fmt):
     # target = a representable point
     w0 = jnp.asarray([0.5])
     target = cast_rtn(w0, fmt)
-    loss = lambda q: jnp.sum((q - target) ** 2)
+
+    def loss(q):
+        return jnp.sum((q - target) ** 2)
     # smoothed loss at the representable minimizer is exactly 0 (axiom 3)
     mc = smoothed_loss_mc(loss, target, fmt, jax.random.PRNGKey(4), 64)
     assert float(mc) < 1e-10
@@ -101,7 +104,9 @@ def test_eq1_quadratic_closed_form_vs_mc():
     H = jnp.diag(jnp.abs(jax.random.normal(jax.random.PRNGKey(10), (d,))))
     w_star = jax.random.normal(jax.random.PRNGKey(11), (d,))
     w = jax.random.normal(jax.random.PRNGKey(12), (d,))
-    loss = lambda q: 0.5 * (q - w_star) @ (H @ (q - w_star))
+
+    def loss(q):
+        return 0.5 * (q - w_star) @ (H @ (q - w_star))
     mc = float(smoothed_loss_mc(loss, w, INT4, jax.random.PRNGKey(13), 8000))
     cf = float(quadratic_smoothed(w, w_star, H, INT4))
     assert abs(mc - cf) / cf < 0.02, (mc, cf)

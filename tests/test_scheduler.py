@@ -1,7 +1,9 @@
 """Continuous-batching scheduler invariants: greedy parity vs static
 batching, scan-vs-per-step decode bit-parity, slot-reuse KV isolation,
 FIFO admission fairness, the structural dispatch bound, MoE capacity
-masking of dead slots, and slot-pool cache sharding."""
+masking of dead slots, slot-pool cache sharding, and the chunked+prefix
+offered-load replay (stall bound + prefix-skip; chunked-prefill edge
+cases live in tests/test_chunked_prefill.py)."""
 
 import math
 
@@ -211,6 +213,35 @@ def test_offered_load_replay_continuous_beats_static():
     rec = compare(replay_static(engine, wl, 3), replay_continuous(sch, wl))
     assert rec["outputs_identical"]
     assert rec["throughput_ratio"] >= 1.0, rec
+
+
+def test_offered_load_replay_chunked_prefix_parity_and_stall_bound():
+    """The ISSUE 5 bench assertion, in-suite: on a chat-shaped stream
+    (shared system prompt + a long-prompt straggler) the chunked+prefix
+    scheduler matches static outputs exactly, never interposes more than
+    one chunk of prefill per tick, and actually skips prefix work."""
+    from repro.serve.replay import shared_prefix_workload
+
+    params = _params()
+    scfg = ServeConfig(max_new_tokens=16)
+    engine = Engine(CFG, params, scfg)
+    sch = Scheduler(CFG, params, scfg,
+                    SchedulerConfig(n_slots=3, steps_per_tick=4,
+                                    cache_len=64, prefill_chunk=4,
+                                    prefix_cache=True))
+    wl = shared_prefix_workload(5, 10, CFG.vocab, rate=150.0, sys_len=8,
+                                straggler_every=5, straggler_len=32,
+                                budgets=(2, 4, 8, 16))
+    replay_static(engine, wl, 3)
+    replay_continuous(sch, wl)
+    stat = replay_static(engine, wl, 3)
+    cont = replay_continuous(sch, wl)
+    rec = compare(stat, cont)
+    assert rec["outputs_identical"], rec
+    assert rec["continuous"]["prefill_stall_max_tokens"] <= 4
+    assert cont["prefill_tokens_skipped"] > 0
+    for i, t in cont["ticks"].items():
+        assert t <= math.ceil(wl[i].max_new_tokens / 4), (i, t)
 
 
 def test_scheduler_rejects_oversized_requests():

@@ -7,9 +7,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import QTensor, has_qtensor
-from repro.models.lm import (LMConfig, init_cache, lm_decode, lm_forward,
-                             lm_init, lm_prefill)
+from repro.core import has_qtensor
+from repro.models.lm import (LMConfig, lm_decode, lm_forward, lm_init,
+                             lm_prefill)
 from repro.serve import Engine, ServeConfig
 from repro.serve.engine import bucket_cache_len
 

@@ -4,9 +4,8 @@ EF compression, optimizer correctness, schedules, data determinism."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import INT8, QuantConfig, QuantPolicy, cast_rtn
+from repro.core import INT8, QuantConfig, QuantPolicy
 from repro.data import DataPipeline, lm_batch, markov_tokens, permutation_table
 from repro.models.lm import LMConfig, lm_init
 from repro.optim import adamw, clip_by_global_norm, constant, cosine_with_warmup, sgd

@@ -13,7 +13,7 @@ from repro.core import (FP4_E2M1, INT4, QuantConfig, QuantPolicy,
 from repro.data import lm_batch, permutation_table
 from repro.models.lm import LMConfig, lm_init
 from repro.optim import (UpdateTransform, adamw, adamw_core, apply_updates,
-                         chain, constant, lotion_decoupled, sgd_core)
+                         chain, constant, sgd_core)
 from repro.train import TrainConfig, init_state, make_optimizer, make_train_step
 
 CFG = LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
