@@ -73,6 +73,21 @@ METRICS = {
         Metric("structural.n_qtensor_leaves", "higher"),
         Metric("structural.dense_materializations_jaxpr#len", "lower"),
         Metric("structural.dense_materializations_hlo#len", "lower"),
+        # KV twin of the weight contract (ISSUE 6): decode cache bytes
+        # per step and no dense-cache rematerialization in the fused
+        # decode-attention program — all deterministic, zero tolerance
+        Metric("kv_structural.kv_bytes_per_decode_step.bf16_dense", "lower"),
+        Metric("kv_structural.kv_bytes_per_decode_step.int8", "lower"),
+        Metric("kv_structural.kv_bytes_per_decode_step.int4", "lower"),
+        Metric("kv_structural.kv_int4_vs_bf16", "lower"),
+        Metric("kv_structural.kv_int8_vs_bf16", "lower"),
+        Metric("kv_structural.dense_materializations_jaxpr_int8#len",
+               "lower"),
+        Metric("kv_structural.dense_materializations_jaxpr_int4#len",
+               "lower"),
+        Metric("kv_structural.dense_materializations_hlo_int8#len", "lower"),
+        Metric("kv_structural.dense_materializations_hlo_int4#len", "lower"),
+        Metric("kv_structural.hlo_int_kv_params", "higher"),
         Metric("scheduler.outputs_identical", "true"),
         Metric("scheduler.max_ticks_per_request", "lower"),
         # replay admission grouping depends on host wall time: launch

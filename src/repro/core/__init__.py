@@ -17,9 +17,11 @@ from .qtensor import (
     from_matmul_weight,
     has_qtensor,
     param_nbytes,
+    qtensor_act_fmt,
     qtensor_use_kernel,
     quantize_params,
     quantize_qtensor,
+    set_qtensor_act_fmt,
     set_qtensor_kernel,
 )
 from .quantize import (
@@ -43,4 +45,5 @@ __all__ = [
     "QTensor", "quantize_qtensor", "from_matmul_weight", "quantize_params",
     "dequantize_params", "has_qtensor", "param_nbytes",
     "qtensor_use_kernel", "set_qtensor_kernel",
+    "qtensor_act_fmt", "set_qtensor_act_fmt",
 ]

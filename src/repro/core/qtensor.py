@@ -80,6 +80,45 @@ def kernel_enabled() -> bool:
 
 
 # --------------------------------------------------------------------------
+# Activation format (W4A8 serving): when set to "int8", every QTensor
+# matmul row-quantizes its activations to int8 codes + fp32 row scales
+# first, so the contraction runs int8 x int[4|8] (MXU integer path /
+# integer jnp oracle) instead of fp x dequantized.  Read at TRACE time,
+# same contract as the kernel switch above.
+# --------------------------------------------------------------------------
+
+_ACT_FMT: list = [None]             # None = dense activations (default)
+
+
+def set_qtensor_act_fmt(fmt: Optional[str]) -> None:
+    """Set ("int8") or clear (None) activation quantization for QTensor
+    matmuls.  Read at TRACE time — wrap the traced region."""
+    _check_act_fmt(fmt)
+    _ACT_FMT[0] = fmt
+
+
+@contextlib.contextmanager
+def qtensor_act_fmt(fmt: Optional[str]):
+    _check_act_fmt(fmt)
+    prev = _ACT_FMT[0]
+    _ACT_FMT[0] = fmt
+    try:
+        yield
+    finally:
+        _ACT_FMT[0] = prev
+
+
+def act_fmt_enabled() -> Optional[str]:
+    return _ACT_FMT[0]
+
+
+def _check_act_fmt(fmt) -> None:
+    if fmt not in (None, "int8"):
+        raise ValueError(
+            f"act_fmt supports None (dense) or 'int8', got {fmt!r}")
+
+
+# --------------------------------------------------------------------------
 # The container
 # --------------------------------------------------------------------------
 
@@ -227,10 +266,23 @@ def matmul(x: Array, qt: QTensor) -> Array:
     of the expert count).  The jnp fallback is the bit-compatible
     ``wqt_matmul_ref`` oracle.
     """
+    act = act_fmt_enabled()
     if qt.codes.ndim == 2:
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
-        if kernel_enabled():
+        if act == "int8":
+            from repro.kernels.wq_matmul.ref import quantize_acts_ref
+            xq, xs = quantize_acts_ref(x2)
+            if kernel_enabled():
+                from repro.kernels.wq_matmul import wqt_matmul_a8
+                out = wqt_matmul_a8(xq, xs, qt.codes, qt.scales,
+                                    block_k=qt.block_k, bits=qt.bits)
+            else:
+                from repro.kernels.wq_matmul.ref import wqt_matmul_a8_ref
+                out = wqt_matmul_a8_ref(xq, xs, qt.codes, qt.scales,
+                                        qt.block_k, qt.packed)
+            out = out.astype(x.dtype)
+        elif kernel_enabled():
             from repro.kernels.wq_matmul import wqt_matmul
             out = wqt_matmul(x2, qt.codes, qt.scales, block_k=qt.block_k,
                              bits=qt.bits)
@@ -244,6 +296,27 @@ def matmul(x: Array, qt: QTensor) -> Array:
             raise ValueError(
                 f"batched QTensor (E={qt.codes.shape[0]}) needs x of shape "
                 f"(E, M, K), got {x.shape}")
+        scales = qt.scales
+        if qt.block_k == -1 and scales.shape[0] != qt.codes.shape[0]:
+            scales = jnp.broadcast_to(
+                scales, (qt.codes.shape[0],) + scales.shape[-2:])
+        if act == "int8":
+            from repro.kernels.wq_matmul.ref import quantize_acts_ref
+            xq, xs = quantize_acts_ref(x)
+            if kernel_enabled():
+                from repro.kernels.wq_matmul import wqt_matmul_a8
+
+                def one_a8(args):
+                    xe, xse, ce, se = args
+                    return wqt_matmul_a8(xe, xse, ce, se,
+                                         block_k=qt.block_k, bits=qt.bits)
+
+                out = jax.lax.map(one_a8, (xq, xs, qt.codes, scales))
+            else:
+                from repro.kernels.wq_matmul.ref import wqt_matmul_a8_ref
+                out = wqt_matmul_a8_ref(xq, xs, qt.codes, qt.scales,
+                                        qt.block_k, qt.packed)
+            return out.astype(x.dtype)
         if kernel_enabled():
             from repro.kernels.wq_matmul import wqt_matmul
 
@@ -252,10 +325,6 @@ def matmul(x: Array, qt: QTensor) -> Array:
                 return wqt_matmul(xe, ce, se, block_k=qt.block_k,
                                   bits=qt.bits)
 
-            scales = qt.scales
-            if qt.block_k == -1 and scales.shape[0] != qt.codes.shape[0]:
-                scales = jnp.broadcast_to(
-                    scales, (qt.codes.shape[0],) + scales.shape[-2:])
             return jax.lax.map(one, (x, qt.codes, scales))
         from repro.kernels.wq_matmul.ref import wqt_matmul_ref
         return wqt_matmul_ref(x, qt.codes, qt.scales, qt.block_k, qt.packed)

@@ -1,0 +1,11 @@
+"""Fused quantized decode-attention kernel (one HBM pass over the
+packed KV codes per decode step).
+
+``ops.decode_attn`` is the public entry point; ``ref.py`` is the
+pure-jnp dense-softmax oracle pinning the layer semantics.
+"""
+
+from .ops import decode_attn
+from .ref import decode_attn_ref
+
+__all__ = ["decode_attn", "decode_attn_ref"]

@@ -1,0 +1,174 @@
+"""Fused quantized decode-attention Pallas TPU kernel.
+
+One decode step against an int8 / packed-int4 ring-buffer KV cache,
+reading the code bytes from HBM exactly once: nibble-unpack (int4),
+per-(slot, kv-head) dequant, QK^T, ring-validity masking (+ sliding
+window, + logit softcap), ONLINE softmax and PV accumulation all happen
+on the VMEM-resident tile — the flash-attention dataflow of
+``_streaming_sdpa`` collapsed into a single kernel, so decode's HBM
+traffic per step per layer is the *quantized* byte count
+(L*g*(hd/2 + 4) bytes for int4 instead of L*g*hd*2 for a bf16 cache).
+
+Grid: ``(batch, kv_heads, cache_len // tile_l)`` with the cache-slot
+axis innermost and "arbitrary" (sequential) — the online-softmax state
+(running max m, denom s, output acc) lives in VMEM scratch and carries
+across slot tiles; batch and kv-head tiles are independent.  Each step
+loads one (tile_l, hd-or-hd/2) K tile + V tile + their (tile_l, 1)
+scales; the query block (rep, hd) and the scalar position (SMEM) are
+revisited per tile.
+
+Numerics follow the jnp fallback in ``attn_decode``: codes contract
+raw, the fp32 absmax scale folds into the (rep, tile_l) score tile /
+prob tile, softcap applies before the validity bias, and a fully-masked
+tile's garbage contribution is annihilated by the next valid tile's
+``alpha = exp(-1e30 - m)`` rescale (decode always has >= 1 valid slot —
+the just-written token).  Online vs. dense softmax differ only in fp
+summation order, so outputs match the oracle to fp32 roundoff.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+
+Array = jnp.ndarray
+NEG_INF = -1e30
+
+
+def _unpack_int4(packed):
+    """uint8 (tl, hd/2) -> int8-valued int32 (tl, hd) in VMEM; low
+    nibble = even index (the kv_quantize pack order)."""
+    x = packed.astype(jnp.int32)
+    lo = x & 0xF
+    hi = (x >> 4) & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    tl, hk = packed.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(tl, 2 * hk)
+
+
+def _decode_attn_kernel(pos_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                        o_ref, m_ref, s_ref, acc_ref, *,
+                        n_l: int, tile_l: int, cache_len: int,
+                        window: Optional[int], softcap: Optional[float],
+                        int4: bool):
+    li = pl.program_id(2)
+
+    @pl.when(li == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    hd = q_ref.shape[-1]
+    q = q_ref[0, 0].astype(jnp.float32)                    # (rep, hd)
+    kc = kc_ref[0, :, 0]                                   # (tl, hd[/2])
+    k = _unpack_int4(kc) if int4 else kc
+    ks = ks_ref[0, :, 0]                                   # (tl, 1) f32
+
+    # raw-code contraction, then fold the per-slot scale (fallback order)
+    s = jax.lax.dot_general(q, k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    logits = (s * ks[:, 0][None, :]) / np.sqrt(hd)         # (rep, tl)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    # ring-slot validity for this tile's slots j = li*tile_l + iota
+    pos = pos_ref[0, 0]
+    j = li * tile_l + jax.lax.broadcasted_iota(jnp.int32, (1, tile_l), 1)
+    p_j = pos - ((pos - j) % cache_len)
+    valid = p_j >= 0
+    if window is not None:
+        valid &= (pos - p_j) < window
+    logits = logits + jnp.where(valid, 0.0, NEG_INF)
+
+    # online-softmax update (flash dataflow carried in VMEM scratch)
+    m_prev = m_ref[...]                                    # (rep, 1)
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                            # (rep, tl)
+    s_ref[...] = s_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+
+    vc = vc_ref[0, :, 0]
+    v = _unpack_int4(vc) if int4 else vc
+    vs = vs_ref[0, :, 0]                                   # (tl, 1) f32
+    pv = jax.lax.dot_general(p * vs[:, 0][None, :], v.astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(li == n_l - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(s_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def _pick_tile_l(cache_len: int, pref: int) -> int:
+    for cand in (pref, 512, 256, 128, 64, 32, 16, 8):
+        if cand <= cache_len and cache_len % cand == 0:
+            return cand
+    return cache_len
+
+
+def decode_attn_pallas(q: Array, k_codes: Array, k_scale: Array,
+                       v_codes: Array, v_scale: Array, pos: Array, *,
+                       bits: int = 8, window: Optional[int] = None,
+                       softcap: Optional[float] = None,
+                       block_l: int = 256,
+                       interpret: bool = True) -> Array:
+    """q (b, g, rep, hd) x quantized ring cache -> (b, g, rep, hd).
+
+    ``k_codes``/``v_codes``: int8 (b, L, g, hd) or packed-int4 uint8
+    (b, L, g, hd/2); scales (b, L, g, 1) fp32; ``pos`` (b,) int32.
+    """
+    b, g, rep, hd = q.shape
+    int4 = bits == 4
+    hd_c = hd // 2 if int4 else hd
+    L = k_codes.shape[1]
+    if k_codes.shape != (b, L, g, hd_c):
+        raise ValueError(f"k_codes shape {k_codes.shape} != "
+                         f"{(b, L, g, hd_c)} for bits={bits}")
+    if k_scale.shape != (b, L, g, 1):
+        raise ValueError(f"k_scale shape {k_scale.shape} != {(b, L, g, 1)}")
+    tile_l = _pick_tile_l(L, block_l)
+    n_l = L // tile_l
+
+    pos2 = pos.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _decode_attn_kernel, n_l=n_l, tile_l=tile_l, cache_len=L,
+        window=window, softcap=softcap, int4=int4)
+
+    q_spec = pl.BlockSpec((1, 1, rep, hd), lambda bi, gi, li: (bi, gi, 0, 0))
+    code_spec = pl.BlockSpec((1, tile_l, 1, hd_c),
+                             lambda bi, gi, li: (bi, li, gi, 0))
+    scale_spec = pl.BlockSpec((1, tile_l, 1, 1),
+                              lambda bi, gi, li: (bi, li, gi, 0))
+    pos_spec = pl.BlockSpec((1, 1), lambda bi, gi, li: (bi, 0),
+                            memory_space=pltpu.SMEM)
+    out_spec = pl.BlockSpec((1, 1, rep, hd), lambda bi, gi, li: (bi, gi, 0, 0))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, g, n_l),
+        in_specs=[pos_spec, q_spec, code_spec, scale_spec,
+                  code_spec, scale_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, g, rep, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((rep, 1), jnp.float32),
+                        pltpu.VMEM((rep, 1), jnp.float32),
+                        pltpu.VMEM((rep, hd), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos2, q, k_codes, k_scale, v_codes, v_scale)

@@ -1,3 +1,3 @@
-from .ops import pack_weight, wq_matmul, wqt_matmul
+from .ops import pack_weight, wq_matmul, wqt_matmul, wqt_matmul_a8
 
-__all__ = ["wq_matmul", "wqt_matmul", "pack_weight"]
+__all__ = ["wq_matmul", "wqt_matmul", "wqt_matmul_a8", "pack_weight"]

@@ -7,7 +7,8 @@ import functools
 import jax
 
 from .ref import quantize_weights_ref
-from .wq_matmul import wq_matmul_pallas, wqt_matmul_pallas
+from .wq_matmul import (wq_matmul_pallas, wqt_matmul_a8_pallas,
+                        wqt_matmul_pallas)
 
 
 def _interpret() -> bool:
@@ -41,3 +42,16 @@ def wqt_matmul(x, codes, scales, block_k: int = -1, bits: int = 8,
     return wqt_matmul_pallas(x, codes, scales, block_k=block_k,
                              int4=(bits == 4), tile_m=tile_m, tile_n=tile_n,
                              interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "bits",
+                                             "tile_m", "tile_n"))
+def wqt_matmul_a8(xq, xs, codes, scales, block_k: int = -1, bits: int = 8,
+                  tile_m: int = 128, tile_n: int = 128):
+    """W4A8/W8A8 entry point: per-row int8 activation codes ``xq``
+    (M, K) + fp32 row scales ``xs`` (M, 1) against out-major quantized
+    weights — the MXU contraction runs int8 x int[4|8] -> int32 with a
+    dequant-free fp32 scale epilogue.  Returns fp32 (M, N)."""
+    return wqt_matmul_a8_pallas(xq, xs, codes, scales, block_k=block_k,
+                                int4=(bits == 4), tile_m=tile_m,
+                                tile_n=tile_n, interpret=_interpret())

@@ -56,6 +56,46 @@ def wqt_matmul_ref(x, codes, scales, block_k: int, int4: bool):
                       x.astype(jnp.float32), w).astype(x.dtype)
 
 
+def quantize_acts_ref(x):
+    """Per-row symmetric int8 activation quantization — the A8 half of
+    W4A8 serving.  x (..., M, K) -> (codes int8, scale fp32 (..., M, 1));
+    a zero row gets scale 1 (codes are all zero anyway)."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, jnp.ones_like(absmax))
+    codes = jnp.clip(jnp.rint(xf / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def wqt_matmul_a8_ref(xq, xs, codes, scales, block_k: int, int4: bool):
+    """Integer-activation (W4A8 / W8A8) oracle against out-major storage.
+
+    xq (..., M, K) int8 row-quantized activations, xs (..., M, 1) fp32
+    row scales.  The contraction runs in int32 and both scales fold into
+    the fp32 epilogue — exact per K-block because the row scale does not
+    depend on K.  Blockwise weight scales are applied per K-block (the
+    kernel's K-tile grouping); returns fp32 (..., M, N).
+    """
+    if int4:
+        lo = (codes & 0xF).astype(jnp.int8)
+        hi = ((codes >> 4) & 0xF).astype(jnp.int8)
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        w = jnp.stack([lo, hi], axis=-1).reshape(
+            codes.shape[:-1] + (codes.shape[-1] * 2,))
+    else:
+        w = codes
+    if block_k == -1:
+        acc = jnp.einsum("...mk,...nk->...mn", xq.astype(jnp.int32),
+                         w.astype(jnp.int32))
+        return acc.astype(jnp.float32) * xs * scales
+    kb = scales.shape[-1]
+    xb = xq.reshape(xq.shape[:-1] + (kb, block_k)).astype(jnp.int32)
+    wb = w.reshape(w.shape[:-1] + (kb, block_k)).astype(jnp.int32)
+    acc = jnp.einsum("...mbk,...nbk->...mnb", xb, wb).astype(jnp.float32)
+    return jnp.einsum("...mnb,...nb->...mn", acc, scales) * xs
+
+
 def quantize_weights_ref(w, block_k: int, bits: int):
     """Blockwise (along K) symmetric quantization of a (K, N) weight for
     the serving path.  Returns (codes, scales); codes packed for int4."""

@@ -177,6 +177,105 @@ def _wqt_kernel(x_ref, c_ref, s_ref, o_ref, acc_ref, *, n_k, int4,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _wqt_a8_kernel(x_ref, xs_ref, c_ref, s_ref, o_ref, acc_ref, *, n_k,
+                   int4, per_tensor):
+    """W4A8/W8A8 epilogue variant of ``_wqt_kernel``: activations arrive
+    as per-row int8 codes + fp32 row scales, the contraction runs
+    int8 x int8 -> int32 on the MXU, and BOTH scales fold into the fp32
+    accumulate — no dequantized operand is ever materialized.  Exact per
+    K-tile because the row scale does not depend on K."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xq = x_ref[...]                      # (TM, TK) int8
+    codes = c_ref[...]                   # (TN, TK) int8 | (TN, TK//2) uint8
+    if int4:
+        lo = (codes & 0xF).astype(jnp.int8)
+        hi = ((codes >> 4) & 0xF).astype(jnp.int8)
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        tn, tk2 = codes.shape
+        w = jnp.stack([lo, hi], axis=-1).reshape(tn, tk2 * 2)
+    else:
+        w = codes
+    prod = jax.lax.dot_general(
+        xq, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)            # (TM, TN) int32
+    xs = xs_ref[...]                     # (TM, 1) fp32 row scales
+    s = s_ref[...]                       # (TN, 1) blockwise | (1, 1) scalar
+    ws = s[0, 0] if per_tensor else s[:, 0][None, :]
+    acc_ref[...] += prod.astype(jnp.float32) * (xs * ws)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def wqt_matmul_a8_pallas(xq, xs, codes, scales, *, block_k: int, int4: bool,
+                         tile_m: int = 128, tile_n: int = 128,
+                         interpret: bool = True):
+    """int8 xq (M, K) + row scales xs (M, 1) against out-major quantized
+    weights -> fp32 (M, N).  Same tiling/edge-padding rules as
+    ``wqt_matmul_pallas`` (padded activation rows get zero codes and
+    scale 1, and are sliced back off)."""
+    M, K = xq.shape
+    N = codes.shape[0]
+    per_tensor = block_k == -1
+    if per_tensor:
+        assert scales.shape[-2:] == (1, 1), scales.shape
+        tile_k = _pick_tile_k(K)
+    else:
+        tile_k = block_k
+        assert K % tile_k == 0, (K, tile_k)
+        assert scales.shape == (N, K // block_k), scales.shape
+    if int4:
+        assert tile_k % 2 == 0 and codes.shape == (N, K // 2), codes.shape
+    else:
+        assert codes.shape == (N, K), codes.shape
+    assert xs.shape == (M, 1), xs.shape
+
+    tile_m = min(tile_m, _round_up(M, 8))
+    m_pad = _round_up(M, tile_m)
+    if m_pad != M:
+        xq = jnp.pad(xq, ((0, m_pad - M), (0, 0)))
+        xs = jnp.pad(xs, ((0, m_pad - M), (0, 0)), constant_values=1.0)
+    tile_n = min(tile_n, _round_up(N, 8))
+    n_pad = _round_up(N, tile_n)
+    if n_pad != N:
+        codes = jnp.pad(codes, ((0, n_pad - N), (0, 0)))
+        if not per_tensor:
+            scales = jnp.pad(scales, ((0, n_pad - N), (0, 0)))
+    n_k = K // tile_k
+    grid = (m_pad // tile_m, n_pad // tile_n, n_k)
+
+    x_spec = pl.BlockSpec((tile_m, tile_k), lambda i, j, k: (i, k))
+    xs_spec = pl.BlockSpec((tile_m, 1), lambda i, j, k: (i, 0))
+    kdiv = 2 if int4 else 1
+    c_spec = pl.BlockSpec((tile_n, tile_k // kdiv), lambda i, j, k: (j, k))
+    if per_tensor:
+        s_spec = pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
+    else:
+        s_spec = pl.BlockSpec((tile_n, 1), lambda i, j, k: (j, k))
+    o_spec = pl.BlockSpec((tile_m, tile_n), lambda i, j, k: (i, j))
+
+    out = pl.pallas_call(
+        functools.partial(_wqt_a8_kernel, n_k=n_k, int4=int4,
+                          per_tensor=per_tensor),
+        grid=grid,
+        in_specs=[x_spec, xs_spec, c_spec, s_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xq, xs, codes, scales)
+    if m_pad != M or n_pad != N:
+        out = out[:M, :N]
+    return out
+
+
 def wqt_matmul_pallas(x, codes, scales, *, block_k: int, int4: bool,
                       tile_m: int = 128, tile_n: int = 128,
                       interpret: bool = True):

@@ -38,7 +38,8 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import get_config, get_smoke_config  # noqa: E402
 from repro.core import (QuantPolicy, cast_params, get_format,  # noqa: E402
-                        param_nbytes, quantize_params, qtensor_use_kernel)
+                        param_nbytes, quantize_params, qtensor_act_fmt,
+                        qtensor_use_kernel)
 from repro.core.formats import IntFormat  # noqa: E402
 from repro.distributed import params_shardings  # noqa: E402
 from repro.models.lm import lm_decode, lm_init, lm_prefill  # noqa: E402
@@ -54,7 +55,8 @@ def _replay(cfg, params, args, use_kernel, kv_quant, stored_bytes,
                                     replay_continuous, replay_static)
 
     scfg = ServeConfig(weights="fp32", use_kernel=use_kernel,
-                       kv_quant=kv_quant, max_new_tokens=args.new_tokens)
+                       kv_quant=kv_quant, act_fmt=args.act_fmt,
+                       max_new_tokens=args.new_tokens)
     engine = Engine(cfg, params, scfg)
     sch = Scheduler(cfg, params, scfg, SchedulerConfig(
         n_slots=args.n_slots, steps_per_tick=args.steps_per_tick,
@@ -100,6 +102,9 @@ def main():
     ap.add_argument("--use-kernel", choices=("auto", "on", "off"),
                     default="auto",
                     help="wq_matmul dispatch (auto: TPU kernel, else jnp)")
+    ap.add_argument("--act-fmt", choices=("int8",), default=None,
+                    help="W4A8 serving: row-quantize activations to int8 "
+                         "before every quantized weight matmul")
     ap.add_argument("--kv-quant", nargs="?", const="int8", default=None,
                     choices=("int8", "int4"),
                     help="quantized KV cache (bare flag = int8)")
@@ -159,12 +164,12 @@ def main():
                                   (args.batch, args.prompt_len), 0, cfg.vocab)
 
         def prefill_fn(p, t):
-            with qtensor_use_kernel(use_kernel):
+            with qtensor_use_kernel(use_kernel), qtensor_act_fmt(args.act_fmt):
                 return lm_prefill(p, cfg, t, cache_len=cache_len,
                                   kv_quant=kv_quant)
 
         def decode_fn(p, c, t, pos):
-            with qtensor_use_kernel(use_kernel):
+            with qtensor_use_kernel(use_kernel), qtensor_act_fmt(args.act_fmt):
                 return lm_decode(p, cfg, c, t, pos)
 
         prefill = jax.jit(prefill_fn)

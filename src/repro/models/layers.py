@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qtensor import QTensor
+from repro.core.qtensor import QTensor, kernel_enabled
 from repro.core.qtensor import matmul as _qt_matmul
 
 Array = jnp.ndarray
@@ -370,22 +370,25 @@ def attn_decode(
     rep = spec.n_heads // g
     hd = spec.head_dim
 
-    def scores_from(q4, ck):
-        """q4: (b, g, rep, hd); ck raw (b,l,g,hd) or quantized."""
+    def scores_from(q4, ck, ck_dense=None):
+        """q4: (b, g, rep, hd); ck raw (b,l,g,hd) or quantized.
+        ``ck_dense`` is the hoisted one-per-step unpack of a quantized
+        cache (int4 nibble unpacking must not be re-traced per use)."""
         if _is_quantized_cache(ck):
-            s = jnp.einsum("bgrd,blgd->bgrl", q4,
-                           _cache_codes(ck).astype(q4.dtype))
+            codes = ck_dense if ck_dense is not None else _cache_codes(ck)
+            s = jnp.einsum("bgrd,blgd->bgrl", q4, codes.astype(q4.dtype))
             return s.astype(jnp.float32) * ck["scale"][..., 0].transpose(
                 0, 2, 1)[:, :, None, :]
         return jnp.einsum("bgrd,blgd->bgrl", q4,
                           ck.astype(q4.dtype)).astype(jnp.float32)
 
-    def out_from(probs, cv):
+    def out_from(probs, cv, cv_dense=None):
         """probs: (b, g, rep, l) fp32; cv raw or quantized -> (b,g,rep,hd)."""
         if _is_quantized_cache(cv):
+            codes = cv_dense if cv_dense is not None else _cache_codes(cv)
             p = probs * cv["scale"][..., 0].transpose(0, 2, 1)[:, :, None, :]
             return jnp.einsum("bgrl,blgd->bgrd", p.astype(x.dtype),
-                              _cache_codes(cv).astype(x.dtype))
+                              codes.astype(x.dtype))
         return jnp.einsum("bgrl,blgd->bgrd", probs.astype(x.dtype),
                           cv.astype(x.dtype))
 
@@ -413,7 +416,26 @@ def attn_decode(
     cache_v = _cache_write(cache_v, v[:, 0], slot, bidx)
 
     q4 = q.reshape(b, g, rep, hd)
-    logits = scores_from(q4, cache_k) / np.sqrt(hd)
+    if _is_quantized_cache(cache_k) and kernel_enabled():
+        # fused path: the Pallas kernel reads the packed codes from HBM
+        # once and does unpack + dequant + QK^T + online softmax + PV in
+        # VMEM — the decode program never materializes a dense cache
+        from repro.kernels.decode_attn import decode_attn
+        bits = 4 if cache_k["codes"].dtype == jnp.uint8 else 8
+        o = decode_attn(q4, cache_k["codes"], cache_k["scale"],
+                        cache_v["codes"], cache_v["scale"], pos,
+                        bits=bits, window=spec.window, softcap=spec.softcap)
+        o = o.reshape(b, 1, spec.q_dim)
+        return matmul(o, params["wo"]), cache_k, cache_v
+
+    # jnp fallback: for quantized caches, unpack int4 nibbles ONCE per
+    # step per layer here (k and v each), never per score/prob chunk —
+    # tests pin the unpack count at the jaxpr level
+    k_dense = _cache_codes(cache_k) if _is_quantized_cache(cache_k) \
+        else cache_k
+    v_dense = _cache_codes(cache_v) if _is_quantized_cache(cache_v) \
+        else cache_v
+    logits = scores_from(q4, cache_k, k_dense) / np.sqrt(hd)
     if spec.softcap is not None:
         logits = spec.softcap * jnp.tanh(logits / spec.softcap)
     # ring-slot validity: slot j holds absolute position p_j = the largest
@@ -426,7 +448,7 @@ def attn_decode(
         valid &= (pos[:, None] - p_j) < spec.window
     bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]  # (b,1,1,l)
     probs = jax.nn.softmax(logits + bias, axis=-1)
-    o = out_from(probs, cache_v).reshape(b, 1, spec.q_dim)
+    o = out_from(probs, cache_v, v_dense).reshape(b, 1, spec.q_dim)
     return matmul(o, params["wo"]), cache_k, cache_v
 
 

@@ -64,7 +64,7 @@ import numpy as np
 
 from repro.core import QuantPolicy, cast_params, quantize_params
 from repro.core.formats import IntFormat, get_format
-from repro.core.qtensor import qtensor_use_kernel
+from repro.core.qtensor import qtensor_act_fmt, qtensor_use_kernel
 from repro.models.lm import ATTN_KINDS, LMConfig, lm_decode, lm_prefill
 
 
@@ -86,6 +86,9 @@ class ServeConfig:
     # KV cache storage: False = dense (model dtype), "int8"/"int4" =
     # per-vector absmax codes (int4 packs two nibbles per byte)
     kv_quant: Union[bool, str] = False
+    # W4A8: "int8" row-quantizes activations before every QTensor matmul
+    # so the contraction runs int8 x int[4|8]; None = dense activations
+    act_fmt: Optional[str] = None
     policy: Optional[QuantPolicy] = None
 
 
@@ -174,11 +177,13 @@ class Engine:
         # with-block into the jitted callables pins this engine's choice
         # regardless of what other engines/tests set globally
         def _decode_fn(p, c, t, pos):
-            with qtensor_use_kernel(scfg.use_kernel):
+            with qtensor_use_kernel(scfg.use_kernel), \
+                    qtensor_act_fmt(scfg.act_fmt):
                 return lm_decode(p, cfg, c, t, pos)
 
         def _prefill_fn(p, t, cl, lens):
-            with qtensor_use_kernel(scfg.use_kernel):
+            with qtensor_use_kernel(scfg.use_kernel), \
+                    qtensor_act_fmt(scfg.act_fmt):
                 return lm_prefill(p, cfg, t, cache_len=cl,
                                   kv_quant=scfg.kv_quant, prompt_lens=lens)
 

@@ -138,10 +138,13 @@ def replay_continuous(scheduler, workload: List[ReplayRequest]) -> dict:
                                 arrival=w.arrival)] = i
     clock = 0.0
     start_ticks = scheduler.n_ticks   # scheduler may be warm (reused)
-    start_stall = len(scheduler.stall_log)
     start_computed = scheduler.prefill_tokens_computed
     start_skipped = scheduler.prefill_tokens_skipped
     done_at: Dict[int, float] = {}
+    # per-step stall capture: scheduler.stall_log is a bounded deque (a
+    # long-lived server must not grow host memory), so the replay keeps
+    # its own complete list by reading the newest entry after each step
+    stall_ticks: List[int] = []
     while scheduler.has_work():
         if not scheduler.pool.occupied():
             # idle: jump to the next arrival still in the queue
@@ -150,6 +153,7 @@ def replay_continuous(scheduler, workload: List[ReplayRequest]) -> dict:
         t0 = time.perf_counter()
         completed = scheduler.step(now=clock)
         clock += time.perf_counter() - t0
+        stall_ticks.append(scheduler.stall_log[-1])
         for req in completed:
             done_at[rid_of[req.rid]] = clock
     outputs = {rid_of[r]: scheduler.requests[r].out for r in rid_of}
@@ -162,7 +166,7 @@ def replay_continuous(scheduler, workload: List[ReplayRequest]) -> dict:
             # each step() interposed before its decode scan — bounded by
             # prefill_chunk under chunked admission, by the longest
             # prompt under monolithic prefill-insert
-            "prefill_tokens_per_tick": scheduler.stall_log[start_stall:],
+            "prefill_tokens_per_tick": stall_ticks,
             "prefill_tokens_computed":
                 scheduler.prefill_tokens_computed - start_computed,
             "prefill_tokens_skipped":

@@ -62,7 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qtensor import qtensor_use_kernel
+from repro.core.qtensor import qtensor_act_fmt, qtensor_use_kernel
 from repro.models.lm import (LMConfig, cache_insert, init_cache, lm_decode,
                              lm_prefill, lm_prefill_chunk, quantize_cache)
 
@@ -70,6 +70,11 @@ from .engine import (ServeConfig, attn_only, bucket_cache_len,
                      prepare_params, sample_token)
 from .prefix_cache import PrefixCache
 from .slots import ACTIVE, DONE, PREFILLING, Request, SlotPool
+
+
+# host-memory bound on the per-step accounting logs of a long-lived
+# server (a few ticks/second for days would otherwise grow without limit)
+STALL_LOG_MAXLEN = 4096
 
 
 @dataclasses.dataclass
@@ -127,8 +132,12 @@ class Scheduler:
         # chunked-prefill / prefix-cache accounting (ISSUE 5): prefill
         # tokens computed per step() (the decode-stall signal — bounded
         # by prefill_chunk when chunking is on, by the longest prompt
-        # when it is not) and tokens skipped via prefix-cache splices
-        self.stall_log: List[int] = []
+        # when it is not) and tokens skipped via prefix-cache splices.
+        # Bounded: a long-lived server steps forever, so the log keeps
+        # only the most recent STALL_LOG_MAXLEN entries (consumers that
+        # need every entry — replay — read stall_log[-1] after each step)
+        self.stall_log: collections.deque = collections.deque(
+            maxlen=STALL_LOG_MAXLEN)
         self.prefill_tokens_computed = 0
         self.prefill_tokens_skipped = 0
         self._stall_tokens = 0
@@ -181,7 +190,8 @@ class Scheduler:
             return sample_token(logits, key, scfg.temperature)
 
         def _prefill_fn(p, toks, lens, key):
-            with qtensor_use_kernel(scfg.use_kernel):
+            with qtensor_use_kernel(scfg.use_kernel), \
+                    qtensor_act_fmt(scfg.act_fmt):
                 logits, row_cache = lm_prefill(
                     p, cfg, toks, cache_len=cl, kv_quant=scfg.kv_quant,
                     prompt_lens=lens)
@@ -205,7 +215,8 @@ class Scheduler:
             def body(carry, kk):
                 cache, tok, pos, steps, active = carry
                 pos2 = jnp.where(active, pos + 1, pos)
-                with qtensor_use_kernel(scfg.use_kernel):
+                with qtensor_use_kernel(scfg.use_kernel), \
+                        qtensor_act_fmt(scfg.act_fmt):
                     logits, cache = lm_decode(p, cfg, cache, tok[:, None],
                                               pos2, token_mask=active)
                 new_tok = jnp.where(active, _sample(logits[:, 0], kk),
@@ -225,7 +236,8 @@ class Scheduler:
             return cache, new_state, em          # em: (k, n_slots)
 
         def _chunk_fn(p, row_cache, toks, start, lens, key):
-            with qtensor_use_kernel(scfg.use_kernel):
+            with qtensor_use_kernel(scfg.use_kernel), \
+                    qtensor_act_fmt(scfg.act_fmt):
                 logits, row_cache = lm_prefill_chunk(p, cfg, row_cache,
                                                      toks, start, lens)
             return _sample(logits[:, 0], key), row_cache

@@ -1,0 +1,206 @@
+"""Fused quantized decode-attention kernel tests (interpret mode on CPU):
+kernel vs the dense-softmax oracle vs the jnp fallback across formats,
+GQA group sizes, ragged ring positions, sliding windows and softcap;
+greedy token-identity through Engine and Scheduler; and the
+unpack-once-per-step jaxpr guard for the int4 fallback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qtensor_use_kernel
+from repro.kernels.decode_attn import decode_attn, decode_attn_ref
+from repro.kernels.decode_attn.ref import ring_validity, unpack_int4_ref
+from repro.models.layers import kv_quantize
+from repro.models.lm import LMConfig, lm_decode, lm_init, lm_prefill
+from repro.serve import Engine, Scheduler, SchedulerConfig, ServeConfig
+
+B, L, G, HD = 3, 64, 2, 64
+# partially filled, exactly full, and ring-wrapped caches in one batch
+POS = (5, 63, 150)
+
+CFG = LMConfig(name="da", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+               d_ff=128, vocab=128, dtype=jnp.float32, remat=False)
+PROMPTS = [[5, 9, 3], [7, 1, 2, 11, 4], [8]]
+MNTS = [6, 4, 8]
+
+
+def _quantized_kv(seed, bits, b=B, l=L, g=G, hd=HD):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, l, g, hd),
+                          jnp.float32)
+    q = kv_quantize(x, bits)
+    return x, q["codes"], q["scale"]
+
+
+# --------------------------------------------------------------------------
+# kernel vs oracle: format x GQA x window x softcap sweep
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("rep", [1, 2, 4])
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_decode_attn_kernel_matches_ref(bits, rep, window, softcap):
+    _, kc, ks = _quantized_kv(1, bits)
+    _, vc, vs = _quantized_kv(2, bits)
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, G, rep, HD),
+                          jnp.float32)
+    pos = jnp.asarray(POS, jnp.int32)
+    got = decode_attn(q, kc, ks, vc, vs, pos, bits=bits, window=window,
+                      softcap=softcap, block_l=16)
+    want = decode_attn_ref(q, kc, ks, vc, vs, pos, bits=bits, window=window,
+                          softcap=softcap)
+    assert got.shape == (B, G, rep, HD)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_decode_attn_single_tile_and_odd_block():
+    """block_l >= cache_len collapses to one grid step; a non-divisor
+    block_l preference falls back to a divisor tile."""
+    _, kc, ks = _quantized_kv(4, 8)
+    _, vc, vs = _quantized_kv(5, 8)
+    q = jax.random.normal(jax.random.PRNGKey(6), (B, G, 2, HD), jnp.float32)
+    pos = jnp.asarray(POS, jnp.int32)
+    want = decode_attn_ref(q, kc, ks, vc, vs, pos, bits=8)
+    for bl in (L, 2 * L, 48):
+        got = decode_attn(q, kc, ks, vc, vs, pos, bits=8, block_l=bl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_decode_attn_bf16_query():
+    _, kc, ks = _quantized_kv(7, 4)
+    _, vc, vs = _quantized_kv(8, 4)
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, G, 2, HD),
+                          jnp.bfloat16)
+    pos = jnp.asarray(POS, jnp.int32)
+    got = decode_attn(q, kc, ks, vc, vs, pos, bits=4)
+    want = decode_attn_ref(q, kc, ks, vc, vs, pos, bits=4)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+# --------------------------------------------------------------------------
+# oracle internals: nibble unpack + ring validity
+# --------------------------------------------------------------------------
+
+def test_unpack_int4_ref_roundtrip():
+    x, codes, scale = _quantized_kv(10, 4)
+    unpacked = unpack_int4_ref(codes)
+    assert unpacked.dtype == jnp.int8
+    assert unpacked.shape == x.shape
+    assert int(jnp.max(jnp.abs(unpacked))) <= 7
+    # dequantized cache within half a quantization step of the source
+    err = jnp.abs(x - unpacked.astype(jnp.float32) * scale)
+    assert float(jnp.max(err - 0.5 * scale)) <= 1e-5
+
+
+def test_ring_validity_matches_direct_enumeration():
+    cache_len = 8
+    for pos in (0, 3, 7, 8, 13, 29):
+        for window in (None, 4):
+            valid = ring_validity(
+                jnp.asarray([pos], jnp.int32), cache_len, window)
+            # slot j holds the newest position p <= pos with p % L == j
+            want_pos = [pos - ((pos - j) % cache_len)
+                        for j in range(cache_len)]
+            want_valid = [p >= 0 and (window is None or pos - p < window)
+                          for p in want_pos]
+            assert valid[0].tolist() == want_valid
+
+
+# --------------------------------------------------------------------------
+# routing: greedy token-identity, kernel vs jnp fallback
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kvq", ["int8", "int4"])
+def test_engine_tokens_identical_kernel_vs_fallback(kvq):
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    outs = {}
+    for uk in (True, False):
+        eng = Engine(CFG, params, ServeConfig(
+            weights="fp32", kv_quant=kvq, use_kernel=uk, max_new_tokens=8))
+        outs[uk] = eng.generate(PROMPTS, max_new_tokens=MNTS)
+    assert outs[True] == outs[False]
+    assert [len(o) for o in outs[True]] == MNTS
+
+
+@pytest.mark.parametrize("kvq", ["int8", "int4"])
+def test_scheduler_tokens_identical_kernel_vs_fallback(kvq):
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    res = {}
+    for uk in (True, False):
+        sch = Scheduler(CFG, params, ServeConfig(
+            weights="fp32", kv_quant=kvq, use_kernel=uk),
+            SchedulerConfig(n_slots=2, steps_per_tick=2, cache_len=32))
+        rids = [sch.submit(p, m) for p, m in zip(PROMPTS, MNTS)]
+        while sch.has_work():
+            sch.step()
+        res[uk] = [sch.requests[r].out for r in rids]
+    assert res[True] == res[False]
+    assert [len(o) for o in res[True]] == MNTS
+
+
+def test_decode_logits_match_kernel_vs_fallback():
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    b = 2
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, 6), 0, CFG.vocab)
+    logits = {}
+    for uk in (True, False):
+        with qtensor_use_kernel(uk):
+            _, cache = lm_prefill(params, CFG, toks, cache_len=16,
+                                  kv_quant="int4")
+            ld, _ = lm_decode(params, CFG, cache, toks[:, -1:],
+                              jnp.full((b,), 5, jnp.int32))
+        logits[uk] = np.asarray(ld)
+    np.testing.assert_allclose(logits[True], logits[False],
+                               atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# unpack-once guard: the int4 fallback hoists nibble unpacking to one
+# unpack per cache tensor per decode step; the kernel program has none
+# outside the pallas_call
+# --------------------------------------------------------------------------
+
+def _eqns(jaxpr, out):
+    for eq in jaxpr.eqns:
+        if eq.primitive.name == "pallas_call":
+            continue
+        out.append(eq)
+        for v in eq.params.values():
+            if hasattr(v, "jaxpr"):
+                _eqns(v.jaxpr, out)
+            elif isinstance(v, (list, tuple)):
+                for w in v:
+                    if hasattr(w, "jaxpr"):
+                        _eqns(w.jaxpr, out)
+    return out
+
+
+def _count_unpack_shifts(use_kernel):
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, CFG.vocab)
+    with qtensor_use_kernel(use_kernel):
+        _, cache = lm_prefill(params, CFG, toks, cache_len=16,
+                              kv_quant="int4")
+        jx = jax.make_jaxpr(
+            lambda p, c, t, pos: lm_decode(p, CFG, c, t, pos))(
+            params, cache, toks[:, :1], jnp.full((2,), 3, jnp.int32))
+    return sum(1 for e in _eqns(jx.jaxpr, [])
+               if e.primitive.name == "shift_right_logical")
+
+
+def test_int4_fallback_unpacks_once_per_step():
+    # the repeated layers trace as ONE scan body, so the whole decode
+    # step contains exactly one k-unpack and one v-unpack (each a single
+    # shift_right_logical); per-use unpacking would double it
+    assert _count_unpack_shifts(use_kernel=False) == 2
+
+
+def test_int4_kernel_program_has_no_host_unpack():
+    assert _count_unpack_shifts(use_kernel=True) == 0

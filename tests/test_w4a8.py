@@ -1,0 +1,192 @@
+"""W4A8 serving tests: per-row int8 activation quantization feeding the
+int8 x int4/int8 integer matmul — kernel vs oracle parity (per-tensor and
+blockwise scales, ragged M), quantization-error bounds vs the W4-only
+path, the act-fmt context plumbing through ``matmul``, and end-to-end
+greedy token parity through the Engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import get_format, qtensor_act_fmt, set_qtensor_act_fmt
+from repro.core.qtensor import matmul, quantize_qtensor, qtensor_use_kernel
+from repro.kernels.wq_matmul import wqt_matmul_a8
+from repro.kernels.wq_matmul.ref import (quantize_acts_ref,
+                                         quantize_weights_ref,
+                                         wqt_matmul_a8_ref, wqt_matmul_ref)
+from repro.models.lm import LMConfig, lm_init
+from repro.serve import Engine, ServeConfig
+
+CFG = LMConfig(name="a8", n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+               d_ff=256, vocab=512, dtype=jnp.float32, remat=False)
+
+
+def _rand(shape, seed=0, scale=0.5):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+def _pack_out_major(w, block_k, bits):
+    """(K, N) weight -> out-major (N, K[/2]) codes + (N, K/bk) scales;
+    per-tensor (block_k == -1) scales collapse to (1, 1)."""
+    K, N = w.shape
+    if block_k == -1:
+        qmax = 2.0 ** (bits - 1) - 1
+        s = jnp.max(jnp.abs(w)) / qmax
+        codes = jnp.clip(jnp.rint(w / s), -qmax, qmax).astype(jnp.int8)
+        if bits == 4:
+            lo, hi = codes[0::2], codes[1::2]
+            codes = ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.uint8)
+        return codes.T, jnp.full((1, 1), s, jnp.float32)
+    codes, scales = quantize_weights_ref(w, block_k, bits)
+    return codes.T, scales.T
+
+
+# --------------------------------------------------------------------------
+# the A8 half: per-row symmetric int8 activation quantization
+# --------------------------------------------------------------------------
+
+def test_quantize_acts_ref_properties():
+    x = _rand((8, 256), seed=1, scale=3.0)
+    codes, scale = quantize_acts_ref(x)
+    assert codes.dtype == jnp.int8 and scale.dtype == jnp.float32
+    assert scale.shape == (8, 1)
+    assert int(jnp.max(jnp.abs(codes))) <= 127
+    # within half a quantization step, per row
+    err = jnp.abs(x - codes.astype(jnp.float32) * scale)
+    assert float(jnp.max(err - 0.5 * scale)) <= 1e-5
+
+
+def test_quantize_acts_ref_zero_row():
+    x = jnp.zeros((3, 64))
+    codes, scale = quantize_acts_ref(x)
+    assert np.all(np.asarray(codes) == 0)
+    np.testing.assert_array_equal(np.asarray(scale), np.ones((3, 1)))
+
+
+# --------------------------------------------------------------------------
+# integer-matmul parity: kernel vs oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("block_k", [-1, 64])
+@pytest.mark.parametrize("m", [1, 5, 128])
+def test_wqt_matmul_a8_kernel_matches_ref(bits, block_k, m):
+    k, n = 256, 128
+    xq, xs = quantize_acts_ref(_rand((m, k), seed=2))
+    codes, scales = _pack_out_major(_rand((k, n), seed=3), block_k, bits)
+    got = wqt_matmul_a8(xq, xs, codes, scales, block_k=block_k, bits=bits)
+    want = wqt_matmul_a8_ref(xq, xs, codes, scales, block_k,
+                             int4=(bits == 4))
+    assert got.shape == (m, n)
+    # int32 contraction is exact; the only divergence is fp32 epilogue
+    # summation order (per-tensor mode folds scales after the full-K dot)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_wqt_matmul_a8_blockwise_epilogue_is_exact():
+    """Blockwise scales group the epilogue per K-tile in both kernel and
+    oracle — same summation tree, bitwise-equal accumulation up to fp32
+    rounding of identical operations."""
+    k, n = 256, 128
+    xq, xs = quantize_acts_ref(_rand((16, k), seed=4))
+    codes, scales = _pack_out_major(_rand((k, n), seed=5), 128, 4)
+    got = wqt_matmul_a8(xq, xs, codes, scales, block_k=128, bits=4)
+    want = wqt_matmul_a8_ref(xq, xs, codes, scales, 128, int4=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_a8_close_to_weight_only(bits):
+    """Row-quantizing activations adds bounded error on top of the
+    weight-only quantized matmul."""
+    m, k, n = 16, 256, 128
+    x = _rand((m, k), seed=6)
+    codes, scales = _pack_out_major(_rand((k, n), seed=7), 64, bits)
+    w_only = wqt_matmul_ref(x, codes, scales, 64, int4=(bits == 4))
+    xq, xs = quantize_acts_ref(x)
+    a8 = wqt_matmul_a8_ref(xq, xs, codes, scales, 64, int4=(bits == 4))
+    rel = (np.abs(np.asarray(a8 - w_only)).max()
+           / np.abs(np.asarray(w_only)).max())
+    assert rel < 0.05, rel
+
+
+# --------------------------------------------------------------------------
+# matmul() plumbing: the act-fmt context
+# --------------------------------------------------------------------------
+
+def test_act_fmt_rejects_unknown_formats():
+    with pytest.raises(ValueError):
+        set_qtensor_act_fmt("int2")
+    with pytest.raises(ValueError):
+        with qtensor_act_fmt("fp8"):
+            pass
+
+
+@pytest.mark.parametrize("fmt", ["int8", "int4"])
+@pytest.mark.parametrize("block_k", [-1, 128])
+def test_matmul_act_fmt_kernel_matches_ref_path(fmt, block_k):
+    qt = quantize_qtensor(_rand((128, 256), seed=8), get_format(fmt),
+                          block_k)
+    x = _rand((4, 256), seed=9)
+    outs = {}
+    for uk in (True, False):
+        with qtensor_use_kernel(uk), qtensor_act_fmt("int8"):
+            outs[uk] = matmul(x, qt)
+    np.testing.assert_allclose(np.asarray(outs[True]),
+                               np.asarray(outs[False]),
+                               atol=1e-5, rtol=1e-5)
+    # and the W4A8 result stays close to the weight-only matmul
+    with qtensor_use_kernel(False):
+        w_only = matmul(x, qt)
+    rel = (np.abs(np.asarray(outs[False] - w_only)).max()
+           / np.abs(np.asarray(w_only)).max())
+    assert rel < 0.05, rel
+
+
+def test_matmul_act_fmt_batched_operand():
+    """3-D (MoE-shaped) operands route through the batched a8 path."""
+    qt = quantize_qtensor(_rand((3, 64, 128), seed=10), get_format("int4"),
+                          -1)
+    x = _rand((3, 8, 128), seed=11)
+    outs = {}
+    for uk in (True, False):
+        with qtensor_use_kernel(uk), qtensor_act_fmt("int8"):
+            outs[uk] = matmul(x, qt)
+    assert outs[True].shape == (3, 8, 64)
+    np.testing.assert_allclose(np.asarray(outs[True]),
+                               np.asarray(outs[False]),
+                               atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# end-to-end: W4A8 serving
+# --------------------------------------------------------------------------
+
+def test_engine_w4a8_tokens_identical_kernel_vs_ref():
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    prompts = [[5, 9, 3], [7, 1, 2, 11, 4]]
+    outs = {}
+    for uk in (True, False):
+        eng = Engine(CFG, params, ServeConfig(
+            weights="rtn:int4", act_fmt="int8", use_kernel=uk,
+            max_new_tokens=6))
+        outs[uk] = eng.generate(prompts)
+    assert outs[True] == outs[False]
+    assert all(len(o) == 6 for o in outs[True])
+
+
+def test_engine_w4a8_mostly_agrees_with_w4():
+    """A8 activations perturb greedy decoding only mildly on top of W4."""
+    params = lm_init(jax.random.PRNGKey(0), CFG)
+    prompts = [[1, 2, 3], [9, 8, 7]]
+    w4 = Engine(CFG, params, ServeConfig(
+        weights="rtn:int4", max_new_tokens=10)).generate(prompts)
+    a8 = Engine(CFG, params, ServeConfig(
+        weights="rtn:int4", act_fmt="int8",
+        max_new_tokens=10)).generate(prompts)
+    agree = np.mean([ai == bi for ra, rb in zip(w4, a8)
+                     for ai, bi in zip(ra, rb)])
+    assert agree > 0.5, agree
