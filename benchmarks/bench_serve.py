@@ -48,6 +48,16 @@ Two measurements over the same model:
    fraction and stall percentiles — the new structural columns gated by
    ``benchmarks/check_regression.py``.
 
+5. **Robustness chaos replay** (ISSUE 7): a seeded fault plan (NaN
+   injections, straggler ticks, eviction storms, malformed submissions,
+   queue-overflow bursts) replayed on a deterministic virtual clock must
+   drain with zero invariant violations and every request terminal;
+   faults-off must be bit-identical to a plain FIFO drain; a priority
+   burst must preempt and resume mostly via trie splices; and SLO
+   shedding must raise the deadline-hit rate at 2x overload without
+   collapsing goodput.  All columns are machine-independent structural
+   counts, zero-tolerance gated.
+
 Emits ``BENCH_serve.json`` (``--json-dir DIR``); ``--tiny`` is the CI
 smoke configuration (structural + batch 1/8 timing + replay).
 """
@@ -518,6 +528,142 @@ def scheduler_chunked_replay(cfg: LMConfig, n_slots: int = 4, k: int = 4,
     return rec
 
 
+# --------------------------------------------------------------------------
+# fault-tolerant lifecycle: chaos replay + SLO degradation (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+def scheduler_robustness(cfg: LMConfig, n_slots: int = 4, k: int = 4,
+                         chunk: int = 8, n_requests: int = 24,
+                         rate: float = 60.0, seed: int = 13,
+                         tick_s: float = 0.05,
+                         est_tok_per_s: float = 200.0) -> dict:
+    """Chaos-replay the fault-tolerant scheduler (ISSUE 7 acceptance).
+
+    Everything here runs on the DETERMINISTIC virtual clock (fixed
+    ``tick_s`` per tick + seeded fault plan), and no workload uses EOS —
+    so every column below is a machine-independent structural count,
+    zero-tolerance gateable in CI:
+
+    * **chaos**: a seeded fault plan (NaN injections, stragglers,
+      eviction storms, malformed submissions, queue-overflow bursts)
+      must drain with ZERO invariant violations and every request in
+      exactly one terminal state;
+    * **bit-parity**: the same replay with faults disabled produces
+      outputs token-identical to a plain FIFO drain of the same request
+      set on a fresh scheduler (the pre-lifecycle behavior);
+    * **preemption**: a priority-1 burst preempts running priority-0
+      requests; the victims' resumes splice most of their re-prefill
+      from the trie (the measured preemption cost);
+    * **overload**: the same 2x-overload deadlined stream with shedding
+      on vs off — shedding must raise the deadline-hit rate (it drops
+      requests that were going to miss anyway, freeing slots for ones
+      that can still hit) without collapsing goodput.
+    """
+    from repro.serve import chaos_plan
+    from repro.serve.replay import replay_chaos, sla_workload
+
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(weights="fp32", max_new_tokens=16)
+    base = dict(n_slots=n_slots, steps_per_tick=k, cache_len=64,
+                prefill_chunk=chunk, prefix_cache=True,
+                est_tok_per_s=est_tok_per_s)
+
+    def mk(**kw):
+        return Scheduler(cfg, params, scfg,
+                         SchedulerConfig(**{**base, **kw}))
+
+    # ---- chaos leg: seeded faults, zero tolerance ----
+    wl = sla_workload(seed, n_requests, cfg.vocab, rate=rate,
+                      deadline_frac=0.5, slack=(2.0, 10.0),
+                      hi_priority_frac=0.2)
+    plan = chaos_plan(seed=seed, n_ticks=128, vocab=cfg.vocab,
+                      cache_len=64, nan_rate=0.25, straggler_rate=0.05)
+    chaos = replay_chaos(mk(max_queue=16), wl, plan=plan, tick_s=tick_s)
+
+    # ---- bit-parity leg: faults off == plain FIFO drain ----
+    calm = replay_chaos(mk(), wl, plan=None, tick_s=tick_s)
+    plain = mk()
+    rids = [plain.submit(w.prompt, w.max_new_tokens) for w in wl]
+    plain.run()
+    plain_out = {i: plain.requests[r].out for i, r in enumerate(rids)}
+    bit_parity = all(calm["outputs"][i] == plain_out[i]
+                     for i in calm["outputs"])
+
+    # ---- preemption leg: a hi-priority burst mid-stream ----
+    pre = mk()
+    lows = [pre.submit([(seed + j) % cfg.vocab] * 12, 16)
+            for j in range(n_slots)]
+    for _ in range(4):
+        pre.step()                     # lows through prefill into decode
+    his = [pre.submit([(seed + 7 + j) % cfg.vocab] * 4, 8, priority=1)
+           for j in range(n_slots)]
+    pre.run()
+    assert all(pre.requests[r].done for r in lows + his)
+    splice = pre.resume_splice_tokens
+    recompute = pre.resume_recompute_tokens
+    resume_frac = splice / max(splice + recompute, 1)
+
+    # ---- overload leg: 2x offered load, shed on vs off ----
+    owl = sla_workload(seed + 1, n_requests, cfg.vocab,
+                       rate=2.0 * est_tok_per_s / 16,
+                       deadline_frac=1.0, slack=(0.15, 0.8),
+                       hi_priority_frac=0.0)
+    shed_on = replay_chaos(mk(slo_shed=True), owl, plan=None,
+                           tick_s=tick_s)
+    shed_off = replay_chaos(mk(slo_shed=False), owl, plan=None,
+                            tick_s=tick_s)
+
+    rec = {
+        "n_slots": n_slots, "steps_per_tick": k, "prefill_chunk": chunk,
+        "n_requests": n_requests, "tick_s": tick_s,
+        "est_tok_per_s": est_tok_per_s, "chaos_plan": plan.describe(),
+        # zero-tolerance structural columns
+        "invariant_violations": len(chaos["violations"]),
+        "chaos_all_terminal": int(sum(chaos["by_state"].values())
+                                  == n_requests),
+        "chaos_off_bit_parity": int(bit_parity),
+        "chaos_off_violations": len(calm["violations"]),
+        # terminal-state accounting (counts are virtual-clock exact)
+        "chaos_by_state": chaos["by_state"],
+        "chaos_counters": chaos["counters"],
+        "chaos_deadline_hit_rate": chaos["deadline_hit_rate"],
+        "preempt_resume_splice_tokens": splice,
+        "preempt_resume_recompute_tokens": recompute,
+        "preempt_resume_splice_frac": resume_frac,
+        "preemptions": pre.counters["preempted"],
+        "overload_shed_on": {
+            "goodput_tok": shed_on["goodput_tok"],
+            "deadline_hit_rate": shed_on["deadline_hit_rate"],
+            "shed": shed_on["counters"]["shed"],
+            "timed_out": shed_on["counters"]["timed_out"]},
+        "overload_shed_off": {
+            "goodput_tok": shed_off["goodput_tok"],
+            "deadline_hit_rate": shed_off["deadline_hit_rate"],
+            "shed": shed_off["counters"]["shed"],
+            "timed_out": shed_off["counters"]["timed_out"]},
+        "shed_frac": shed_on["counters"]["shed"] / n_requests,
+    }
+
+    # ISSUE 7 acceptance: zero invariant violations under chaos, every
+    # request terminal, and faults-off is bit-identical to the plain
+    # scheduler; preemption must actually preempt AND resumes must reuse
+    # trie work; shedding must not lose goodput under overload
+    assert rec["invariant_violations"] == 0, chaos["violations"][:10]
+    assert rec["chaos_all_terminal"] == 1, chaos["by_state"]
+    assert rec["chaos_off_violations"] == 0, calm["violations"][:10]
+    assert rec["chaos_off_bit_parity"] == 1
+    assert rec["preemptions"] >= 1, "hi-priority burst never preempted"
+    assert splice > 0, "preemption resume never spliced from the trie"
+    # shedding's win is the deadline-hit rate (it drops requests that
+    # were going to miss, instead of letting them crowd out ones that
+    # can still hit); goodput must not collapse in exchange
+    assert rec["overload_shed_on"]["deadline_hit_rate"] >= \
+        rec["overload_shed_off"]["deadline_hit_rate"], rec
+    assert rec["overload_shed_on"]["goodput_tok"] >= \
+        0.9 * rec["overload_shed_off"]["goodput_tok"], rec
+    return rec
+
+
 def main(tiny: bool = False, json_dir: str = None):
     cfg = CFG_TINY if tiny else CFG
     batches = (1, 8) if tiny else (1, 8, 32)
@@ -536,6 +682,8 @@ def main(tiny: bool = False, json_dir: str = None):
             cfg, n_requests=16 if tiny else 24),
         "scheduler_chunked": scheduler_chunked_replay(
             cfg, n_requests=12 if tiny else 18),
+        "scheduler_robustness": scheduler_robustness(
+            cfg, n_requests=16 if tiny else 24),
         "note": ("weight bytes/step are stored-leaf bytes, verified "
                  "dense-materialization-free at jaxpr+HLO level "
                  "(hardware-independent); off-TPU wall clock uses the "
@@ -572,6 +720,20 @@ def main(tiny: bool = False, json_dir: str = None):
     emit("serve_sched_prefix_saved", 0.0,
          f"tokens={ck['prefill_tokens_skipped']} "
          f"frac={ck['prefill_frac_saved']:.2f}")
+    rb = rec["scheduler_robustness"]
+    emit("serve_chaos_invariants", 0.0,
+         f"violations={rb['invariant_violations']} "
+         f"terminal={rb['chaos_all_terminal']} "
+         f"parity={rb['chaos_off_bit_parity']}")
+    emit("serve_chaos_deadline_hit", 0.0,
+         f"rate={rb['chaos_deadline_hit_rate']:.2f} "
+         f"shed_frac={rb['shed_frac']:.2f}")
+    emit("serve_preempt_resume", 0.0,
+         f"splice_frac={rb['preempt_resume_splice_frac']:.2f} "
+         f"preemptions={rb['preemptions']}")
+    emit("serve_overload_goodput", 0.0,
+         f"shed_on={rb['overload_shed_on']['goodput_tok']} "
+         f"shed_off={rb['overload_shed_off']['goodput_tok']}")
     if json_dir is not None:
         print(f"wrote {write_bench_json('serve', rec, json_dir)}")
     return rec

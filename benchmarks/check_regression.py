@@ -102,6 +102,22 @@ METRICS = {
                "lower"),
         Metric("scheduler_chunked.prefill_tokens_skipped", "higher", 0.5),
         Metric("scheduler_chunked.prefill_frac_saved", "higher", 0.5),
+        # robustness chaos replay (ISSUE 7): every column below runs on
+        # the deterministic virtual clock with a seeded fault plan and
+        # no EOS-dependent termination, so the counts are machine-
+        # independent — zero tolerance.  The invariant columns are the
+        # acceptance bar itself: any violation, any non-terminal
+        # request, or a bit-parity break fails CI outright.
+        Metric("scheduler_robustness.invariant_violations", "lower"),
+        Metric("scheduler_robustness.chaos_off_violations", "lower"),
+        Metric("scheduler_robustness.chaos_all_terminal", "higher"),
+        Metric("scheduler_robustness.chaos_off_bit_parity", "higher"),
+        Metric("scheduler_robustness.chaos_deadline_hit_rate", "higher"),
+        Metric("scheduler_robustness.preemptions", "higher"),
+        Metric("scheduler_robustness.preempt_resume_splice_frac",
+               "higher"),
+        Metric("scheduler_robustness.overload_shed_on.deadline_hit_rate",
+               "higher"),
     ],
     "opt_step": [
         Metric("structural.fused_passes_per_leaf", "lower"),
@@ -117,7 +133,9 @@ METRICS = {
 # sub-trees that must be byte-equal between fresh and baseline so the
 # numeric comparison is apples to apples
 CONFIG_KEYS = {
-    "serve": ["config"],
+    "serve": ["config", "scheduler_robustness.tick_s",
+              "scheduler_robustness.est_tok_per_s",
+              "scheduler_robustness.n_requests"],
     "opt_step": ["structural.leaf_shape", "structural.n_leaves"],
 }
 

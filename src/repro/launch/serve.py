@@ -19,6 +19,12 @@ static barrier server at equal slot count (``--n-slots``,
 [int8|int4]`` selects the quantized KV cache; ``--prefill-chunk N``
 (+ ``--prefix-cache``) enables chunked admission and shared-prefix KV
 reuse (DESIGN.md §8).
+
+``--chaos`` replays a seeded fault-injection schedule (logit-NaN slots,
+straggler ticks, prefix-cache eviction storms, malformed and burst
+submissions) against the fault-tolerant scheduler on a deterministic
+virtual clock, auditing the lifecycle invariants after every tick and
+exiting nonzero on any violation (DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -84,6 +90,48 @@ def _replay(cfg, params, args, use_kernel, kv_quant, stored_bytes,
               f"{m['decode_launches']} launches")
     print(f"continuous/static throughput: {rec['throughput_ratio']:.2f}x "
           f"(outputs identical: {rec['outputs_identical']})")
+    live = {k: v for k, v in sch.counters.items() if v}
+    print(f"lifecycle counters: {live}")
+
+
+def _chaos(cfg, params, args, use_kernel, kv_quant):
+    """Seeded chaos replay (DESIGN.md §10): fault-inject the scheduler on
+    a deterministic virtual clock and audit the lifecycle invariants
+    after every tick."""
+    from repro.serve import (Scheduler, SchedulerConfig, ServeConfig,
+                             chaos_plan)
+    from repro.serve.replay import replay_chaos, sla_workload
+
+    scfg = ServeConfig(weights="fp32", use_kernel=use_kernel,
+                       kv_quant=kv_quant, act_fmt=args.act_fmt,
+                       max_new_tokens=args.new_tokens)
+    cache_len = args.prompt_len + args.new_tokens
+    sch = Scheduler(cfg, params, scfg, SchedulerConfig(
+        n_slots=args.n_slots, steps_per_tick=args.steps_per_tick,
+        cache_len=cache_len, prefill_chunk=args.prefill_chunk,
+        prefix_cache=args.prefix_cache, max_queue=4 * args.n_requests,
+        est_tok_per_s=200.0))
+    wl = sla_workload(args.chaos_seed, args.n_requests, cfg.vocab,
+                      rate=args.arrival_rate,
+                      prompt_lens=(2, args.prompt_len),
+                      budgets=(max(2, args.new_tokens // 2),
+                               args.new_tokens))
+    plan = chaos_plan(seed=args.chaos_seed, n_ticks=128, vocab=cfg.vocab,
+                      cache_len=cache_len)
+    print(f"chaos replay: {args.n_requests} reqs + {plan.describe()}")
+    res = replay_chaos(sch, wl, plan=plan)
+    print(f"terminal states: {res['by_state']} in {res['ticks']} ticks")
+    print(f"counters: { {k: v for k, v in res['counters'].items() if v} }")
+    print(f"deadline hit rate: {res['deadline_hit_rate']:.2f} | "
+          f"goodput {res['goodput_tok']} tok | resume splice "
+          f"{res['resume_splice_tokens']}/"
+          f"{res['resume_splice_tokens'] + res['resume_recompute_tokens']}"
+          f" tokens")
+    if res["violations"]:
+        for v in res["violations"][:20]:
+            print(f"  VIOLATION {v}")
+        raise SystemExit(f"{len(res['violations'])} invariant violations")
+    print("invariants: 0 violations, all requests terminal")
 
 
 def main():
@@ -122,6 +170,11 @@ def main():
     ap.add_argument("--n-requests", type=int, default=32)
     ap.add_argument("--arrival-rate", type=float, default=100.0,
                     help="Poisson arrivals per virtual-clock second")
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded fault-injection replay (NaN slots, "
+                         "stragglers, eviction storms, malformed/burst "
+                         "submissions) with per-tick invariant audit")
+    ap.add_argument("--chaos-seed", type=int, default=13)
     args = ap.parse_args()
 
     if args.mesh:
@@ -156,6 +209,9 @@ def main():
         p_sh = params_shardings(mesh, jax.eval_shape(lambda: params))
         params = jax.device_put(params, p_sh)
 
+        if args.chaos:
+            _chaos(cfg, params, args, use_kernel, kv_quant)
+            return
         if args.scheduler:
             _replay(cfg, params, args, use_kernel, kv_quant,
                     stored_bytes, dense_bytes)

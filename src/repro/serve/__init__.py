@@ -1,12 +1,20 @@
 """Serving of (quantized) checkpoints: the static batched :class:`Engine`
-(parity oracle) and the continuous-batching :class:`Scheduler`
-(persistent decode slots + on-device multi-step decode)."""
+(parity oracle), the continuous-batching :class:`Scheduler` (persistent
+decode slots + on-device multi-step decode), and the fault-injection
+chaos harness (:mod:`repro.serve.faults`, DESIGN.md §10)."""
 
 from .engine import Engine, ServeConfig, attn_only, prepare_params
+from .faults import (FaultPlan, chaos_plan, check_drained,
+                     check_invariants)
 from .prefix_cache import PrefixCache
 from .scheduler import Scheduler, SchedulerConfig
-from .slots import Request, SlotPool
+from .slots import (COMPLETED, DECODING, FAILED, PREEMPTED, PREFILLING,
+                    QUEUED, REJECTED, TERMINAL, TIMED_OUT, RejectedError,
+                    Request, SlotPool, request_problem)
 
 __all__ = ["Engine", "ServeConfig", "Scheduler", "SchedulerConfig",
            "Request", "SlotPool", "PrefixCache", "attn_only",
-           "prepare_params"]
+           "prepare_params", "RejectedError", "request_problem",
+           "FaultPlan", "chaos_plan", "check_invariants", "check_drained",
+           "QUEUED", "PREFILLING", "DECODING", "PREEMPTED", "COMPLETED",
+           "TIMED_OUT", "REJECTED", "FAILED", "TERMINAL"]

@@ -67,6 +67,8 @@ from repro.core.formats import IntFormat, get_format
 from repro.core.qtensor import qtensor_act_fmt, qtensor_use_kernel
 from repro.models.lm import ATTN_KINDS, LMConfig, lm_decode, lm_prefill
 
+from .slots import RejectedError, request_problem
+
 
 @dataclasses.dataclass
 class ServeConfig:
@@ -203,6 +205,15 @@ class Engine:
         b = len(prompts)
         mnts = _per_request(max_new_tokens, self.scfg.max_new_tokens, b)
         eoss = _per_request(eos_id, None, b)
+        # validate AT THE DOOR (DESIGN.md §10): a malformed prompt raises
+        # a typed RejectedError here instead of a shape error (empty) or
+        # a silently-clamped embedding gather (out-of-vocab) mid-prefill.
+        # The engine buckets cache_len per batch, so there is no fixed
+        # capacity bound to check (cache_len=None).
+        for p, m in zip(prompts, mnts):
+            problem = request_problem(p, m, None, self.cfg.vocab)
+            if problem is not None:
+                raise RejectedError(*problem)
         mnt = max(mnts)
         if mnt <= 0:
             return [[] for _ in prompts]

@@ -133,6 +133,65 @@ class PrefixCache:
         self._evict_over_capacity()
         return added
 
+    def flush(self) -> int:
+        """Evict EVERY unpinned block (the chaos harness's eviction
+        storm): repeatedly strip unpinned leaves until only pinned paths
+        (and their ancestors) remain.  Returns blocks evicted."""
+        before = self.n_blocks
+        changed = True
+        while changed:
+            changed = False
+            for n in list(self.nodes()):
+                if not n.children and n.refcount == 0:
+                    del n.parent.children[n.key]
+                    self.n_blocks -= 1
+                    self.evictions += 1
+                    changed = True
+        return before - self.n_blocks
+
+    # ------------------------------------------------------------------
+    # invariant audit (serve/faults.py leans on these)
+    # ------------------------------------------------------------------
+
+    def nodes(self):
+        """Every live node (pre-order)."""
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    def total_refcount(self) -> int:
+        return sum(n.refcount for n in self.nodes())
+
+    def refcount_imbalance(self, pinned_paths) -> List[str]:
+        """Audit refcount balance against the caller's outstanding pins
+        (``pinned_paths``: one ``lookup``-returned node list per in-flight
+        consumer).  Every node's refcount must equal the number of live
+        paths holding it — a mismatch is a pin leak (a consumer died
+        without ``release``) or a double release.  Also re-counts
+        ``n_blocks`` against the live trie."""
+        expected: Dict[int, int] = {}
+        for path in pinned_paths:
+            for n in path:
+                expected[id(n)] = expected.get(id(n), 0) + 1
+        problems, walked = [], 0
+        for n in self.nodes():
+            walked += 1
+            want = expected.pop(id(n), 0)
+            if n.refcount != want:
+                problems.append(
+                    f"node {n.key}: refcount {n.refcount} != {want} "
+                    f"outstanding pins")
+        for _ in expected:
+            problems.append("pinned node no longer reachable in the trie "
+                            "(evicted while pinned)")
+        if walked != self.n_blocks:
+            problems.append(
+                f"n_blocks accounting drift: counter {self.n_blocks} vs "
+                f"{walked} live nodes")
+        return problems
+
     def _evict_over_capacity(self) -> None:
         while self.n_blocks > self.capacity_blocks:
             victim = None

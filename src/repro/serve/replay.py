@@ -20,9 +20,10 @@ Used by ``benchmarks/bench_serve.py`` (JSON + assertions) and
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -32,6 +33,11 @@ class ReplayRequest:
     prompt: List[int]
     max_new_tokens: int
     arrival: float                # seconds on the virtual clock
+    # SLO fields (DESIGN.md §10): ``deadline`` is ABSOLUTE virtual-clock
+    # time (None = best-effort); higher ``priority`` admits first and may
+    # preempt lower-priority running slots
+    deadline: Optional[float] = None
+    priority: int = 0
 
 
 def poisson_workload(seed: int, n_requests: int, vocab: int,
@@ -79,6 +85,36 @@ def shared_prefix_workload(seed: int, n_requests: int, vocab: int,
             prompt=prompt,
             max_new_tokens=int(rng.choice(budgets)),
             arrival=float(arrivals[i])))
+    return out
+
+
+def sla_workload(seed: int, n_requests: int, vocab: int,
+                 rate: float = 50.0,
+                 prompt_lens=(2, 12),
+                 budgets=(2, 2, 4, 8, 16, 24),
+                 deadline_frac: float = 0.5,
+                 slack=(0.2, 3.0),
+                 hi_priority_frac: float = 0.2) -> List[ReplayRequest]:
+    """Poisson stream with SLOs attached: ``deadline_frac`` of requests
+    carry an absolute deadline (arrival + a slack drawn from ``slack``),
+    and ``hi_priority_frac`` arrive at priority 1 (the preemptors).  The
+    base stream matches :func:`poisson_workload`'s shape so SLO behaviour
+    is the only variable."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    out = []
+    for i in range(n_requests):
+        plen = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        deadline = None
+        if rng.random() < deadline_frac:
+            deadline = float(arrivals[i]) + float(
+                rng.uniform(slack[0], slack[1]))
+        out.append(ReplayRequest(
+            prompt=rng.integers(0, vocab, plen).tolist(),
+            max_new_tokens=int(rng.choice(budgets)),
+            arrival=float(arrivals[i]),
+            deadline=deadline,
+            priority=1 if rng.random() < hi_priority_frac else 0))
     return out
 
 
@@ -197,4 +233,98 @@ def compare(static: dict, continuous: dict) -> dict:
         "continuous": c,
         "throughput_ratio": c["tok_per_s"] / max(s["tok_per_s"], 1e-9),
         "outputs_identical": static["outputs"] == continuous["outputs"],
+    }
+
+
+def replay_chaos(scheduler, workload: List[ReplayRequest],
+                 plan=None, tick_s: float = 0.05,
+                 max_ticks: int = 100_000) -> dict:
+    """Fault-injecting replay on a FULLY DETERMINISTIC virtual clock
+    (DESIGN.md §10).
+
+    Unlike :func:`replay_continuous` (which charges measured wall time to
+    the clock — right for throughput numbers, wrong for reproducible
+    fault schedules), every tick here costs a fixed ``tick_s`` virtual
+    seconds plus any straggler stall the plan injects — so deadline
+    expiries, shed decisions and preemptions land on the SAME tick on
+    every machine, and the robustness counters are zero-tolerance
+    gateable in CI.
+
+    Requests are submitted AT their arrival tick (not upfront), so the
+    bounded queue and the SLO shed estimate see the real backlog.  After
+    every tick the global invariant audit runs
+    (:func:`repro.serve.faults.check_invariants`); at drain the terminal
+    contract is checked (:func:`~repro.serve.faults.check_drained`).
+    ``plan=None`` replays the same loop with zero faults — the bit-parity
+    leg of the chaos gate.
+    """
+    from .faults import apply_tick_faults, check_drained, check_invariants
+    rng = np.random.default_rng((plan.seed if plan is not None else 0) + 1)
+    vocab = scheduler.cfg.vocab
+    pending = collections.deque(sorted(range(len(workload)),
+                                       key=lambda i: workload[i].arrival))
+    rid_of: Dict[int, int] = {}
+    done_at: Dict[int, float] = {}
+    violations: List[str] = []
+    clock, tick = 0.0, 0
+    while pending or scheduler.has_work():
+        if tick >= max_ticks:
+            violations.append(
+                f"livelock: replay did not drain within {max_ticks} ticks")
+            break
+        if not scheduler.has_work() and pending:
+            # idle: jump the clock to the next arrival
+            clock = max(clock, workload[pending[0]].arrival)
+        while pending and workload[pending[0]].arrival <= clock:
+            i = pending.popleft()
+            w = workload[i]
+            rid = scheduler.submit(w.prompt, w.max_new_tokens,
+                                   arrival=w.arrival, deadline=w.deadline,
+                                   priority=w.priority, strict=False)
+            rid_of[rid] = i
+        stall = apply_tick_faults(scheduler, plan, tick, rng, vocab)
+        terminal = scheduler.step(now=clock)
+        clock += tick_s + stall
+        for req in terminal:
+            req.t_done = clock
+            if req.rid in rid_of:
+                done_at[rid_of[req.rid]] = clock
+        violations += [f"tick {tick}: {v}"
+                       for v in check_invariants(scheduler)]
+        tick += 1
+    violations += [f"drain: {v}" for v in check_drained(scheduler)]
+
+    # terminal-state accounting over the WORKLOAD's requests (the plan's
+    # own malformed/burst submissions are counted separately)
+    by_state: Dict[str, int] = {}
+    deadlined = hit = 0
+    outputs: Dict[int, List[int]] = {}
+    for rid, i in rid_of.items():
+        req = scheduler.requests[rid]
+        by_state[req.state] = by_state.get(req.state, 0) + 1
+        if req.done:
+            outputs[i] = req.out
+        if req.deadline is not None:
+            deadlined += 1
+            if req.done and req.t_done is not None \
+                    and req.t_done <= req.deadline:
+                hit += 1
+    good = sum(len(outputs[i]) for i in outputs
+               if workload[i].deadline is None
+               or done_at.get(i, float("inf")) <= workload[i].deadline)
+    return {
+        "outputs": outputs,
+        "by_state": by_state,
+        "violations": violations,
+        "counters": dict(scheduler.counters),
+        "ticks": tick,
+        "makespan": clock,
+        "deadlined": deadlined,
+        "deadline_hit_rate": hit / deadlined if deadlined else 1.0,
+        # goodput: tokens of workload requests that completed within
+        # their deadline (best-effort requests always count)
+        "goodput_tok": good,
+        "goodput_tok_per_s": good / max(clock, 1e-9),
+        "resume_splice_tokens": scheduler.resume_splice_tokens,
+        "resume_recompute_tokens": scheduler.resume_recompute_tokens,
     }

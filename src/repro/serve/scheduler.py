@@ -1,5 +1,5 @@
 """Continuous-batching scheduler: persistent decode slots + on-device
-multi-step decode.
+multi-step decode, with a fault-tolerant request lifecycle.
 
 The static :class:`~repro.serve.engine.Engine` barrier-synchronizes one
 batch per ``generate`` call: every request pays the batch-max prompt
@@ -25,11 +25,12 @@ loop inside out:
   Finished and free slots stop advancing (frozen position, re-writing the
   same KV — idempotent) and are masked out of MoE capacity via
   ``token_mask``.
-* **Retirement + FIFO admission** — after each tick the host reads the
+* **Retirement + admission** — after each tick the host reads the
   (k, n_slots) emitted-token block (one transfer), applies the SAME
   termination rule the device used, releases finished slots, and admits
-  queued requests in submit order (lowest free slot first, so a replayed
-  request stream is deterministic).
+  queued requests highest-priority-first (submit order within a priority
+  class, lowest free slot first — a replayed request stream is
+  deterministic).
 
 * **Chunked prefill** (``prefill_chunk``, DESIGN.md §8) — a long prompt
   no longer stalls the tick it is admitted in: the request takes a slot
@@ -44,6 +45,36 @@ loop inside out:
   prefill FLOPs entirely (exact-match token-ID keys + deterministic
   chunked prefill keep greedy outputs token-identical).
 
+Fault tolerance (DESIGN.md §10) — every submitted request terminally
+resolves; overload degrades instead of collapsing:
+
+* **Lifecycle enforcement** — requests move through the explicit state
+  machine in :mod:`repro.serve.slots`; illegal edges raise, and the
+  chaos harness (:mod:`repro.serve.faults`) audits global invariants
+  (no slot leak, no pin leak, all-terminal at drain) after every tick.
+* **Deadlines** — an expired request is timed out at admission, mid-
+  prefill (its trie pins released — the pin-leak fix), or mid-decode
+  (its slot is done-masked out of the tick scan and freed).
+* **Priority preemption** — a higher-priority arrival evicts the lowest-
+  priority PREFILLING/DECODING slot back to the queue (strictly-lower
+  priority only, so preemption cannot livelock).  The victim's computed
+  KV chunks are published to the prefix trie first (always exact for
+  PREFILLING partial caches, which stay dense; for DECODING rows when
+  the pool KV is dense), so its later resume — a chunked re-prefill of
+  ``prompt + out[:-1]`` — is mostly trie splices: preemption cost is a
+  measured number (``resume_splice_tokens``), not a vibe.
+* **SLO-aware admission** — the queue is bounded (``max_queue``), and a
+  deadlined request whose estimated queue-wait + service time already
+  overruns its deadline is shed at submit with a typed reason instead of
+  queueing forever.
+* **Non-finite quarantine** — the decode scan done-masks any slot whose
+  logits go non-finite (int4 weights + int8 activations make this a real
+  fault class) and reports a per-(step, slot) poison mask alongside the
+  emitted tokens; the host quarantines the slot and retries the request
+  ONCE on the jnp fallback path (``use_kernel=False`` engine) — kernel
+  bugs degrade to slow-but-correct.  FAILED only if the fallback also
+  faults.
+
 Greedy generations are token-identical to the static engine for the same
 request set (the engine's per-row ``prompt_lens`` masking makes static
 batching pad-invariant; capacity-based MoE routing is the documented
@@ -56,7 +87,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence, Set, Union
 
 import jax
 import jax.numpy as jnp
@@ -66,15 +97,20 @@ from repro.core.qtensor import qtensor_act_fmt, qtensor_use_kernel
 from repro.models.lm import (LMConfig, cache_insert, init_cache, lm_decode,
                              lm_prefill, lm_prefill_chunk, quantize_cache)
 
-from .engine import (ServeConfig, attn_only, bucket_cache_len,
+from .engine import (Engine, ServeConfig, attn_only, bucket_cache_len,
                      prepare_params, sample_token)
 from .prefix_cache import PrefixCache
-from .slots import ACTIVE, DONE, PREFILLING, Request, SlotPool
-
+from .slots import (COMPLETED, DECODING, FAILED, PREEMPTED, PREFILLING,
+                    QUEUED, REJECTED, TIMED_OUT, RejectedError, Request,
+                    SlotPool, request_problem)
 
 # host-memory bound on the per-step accounting logs of a long-lived
 # server (a few ticks/second for days would otherwise grow without limit)
 STALL_LOG_MAXLEN = 4096
+
+COUNTER_KEYS = ("submitted", "admitted", "completed", "timed_out",
+                "rejected", "shed", "preempted", "resumed", "failed",
+                "nan_events", "nan_retries")
 
 
 @dataclasses.dataclass
@@ -97,6 +133,20 @@ class SchedulerConfig:
     # prefill_chunk; exact-match, so greedy outputs are unchanged)
     prefix_cache: bool = False
     prefix_cache_blocks: int = 256   # LRU capacity, in prefill_chunk blocks
+    # ---- fault tolerance / SLO knobs (DESIGN.md §10) ----
+    # bounded submit queue: a submission past this depth is REJECTED
+    # ("queue_full") instead of queueing without bound
+    max_queue: int = 4096
+    # priority preemption: a strictly-higher-priority arrival may evict
+    # the lowest-priority running slot back to the queue
+    preempt: bool = True
+    # SLO-aware load shedding: shed a deadlined submission whose
+    # estimated wait + service already overruns its deadline
+    slo_shed: bool = True
+    # service-rate estimate (tokens per virtual-clock second) for the
+    # shed decision; None = learn an EMA from observed step() progress
+    # (no shedding until the first estimate exists)
+    est_tok_per_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -104,8 +154,9 @@ class _PrefillJob:
     """Host-side progress of one chunked prompt admission."""
 
     rid: int
+    seq: List[int]               # tokens to prefill (resume: prompt+out[:-1])
     cache: Any                   # dense partial cache, batch=1 (device)
-    next: int                    # next prompt index to prefill
+    next: int                    # next seq index to prefill
     pinned: list                 # prefix-trie nodes pinned by the lookup
 
 
@@ -129,6 +180,24 @@ class Scheduler:
         # structural dispatch accounting (ISSUE 4 acceptance)
         self.n_ticks = 0
         self.n_prefills = 0
+        # lifecycle counters (ISSUE 7): the replay harness and launch
+        # logging read these; faults.py checks they balance at drain
+        self.counters: Dict[str, int] = {k: 0 for k in COUNTER_KEYS}
+        # fault-injection hooks (serve/faults.py): slots to treat as
+        # non-finite at the next tick, and rids whose one fallback retry
+        # must also fault (simulating a fallback-path numeric fault)
+        self._inject_bad_slots: Set[int] = set()
+        self._fail_fallback_rids: Set[int] = set()
+        self._fallback: Optional[Engine] = None
+        # learned service-rate EMA for SLO shedding (virtual-clock based)
+        self._ema_tok_per_s: Optional[float] = None
+        self._last_now: Optional[float] = None
+        self._emitted_tokens = 0
+        self._emitted_at_last_now = 0
+        # preemption-resume accounting: tokens a resume re-prefill
+        # spliced from the trie vs recomputed (the preemption cost)
+        self.resume_splice_tokens = 0
+        self.resume_recompute_tokens = 0
         # chunked-prefill / prefix-cache accounting (ISSUE 5): prefill
         # tokens computed per step() (the decode-stall signal — bounded
         # by prefill_chunk when chunking is on, by the longest prompt
@@ -197,12 +266,16 @@ class Scheduler:
                     prompt_lens=lens)
             return _sample(logits[:, 0], key), row_cache
 
-        def _insert_fn(cache, state, row_cache, slot, tok, plen, mnt, eos):
+        def _insert_fn(cache, state, row_cache, slot, tok, plen, mnt, eos,
+                       steps):
+            # ``steps`` is the tokens already emitted (1 on a fresh
+            # admission; len(out) on a preemption resume, so the device
+            # budget rule ``steps >= mnt`` stays aligned with the host's)
             cache = cache_insert(cache, row_cache, slot)
             state = {
                 "tok": state["tok"].at[slot].set(tok),
                 "pos": state["pos"].at[slot].set(plen - 1),
-                "steps": state["steps"].at[slot].set(1),
+                "steps": state["steps"].at[slot].set(steps),
                 "mnt": state["mnt"].at[slot].set(mnt),
                 "eos": state["eos"].at[slot].set(eos),
                 "active": state["active"].at[slot].set(True),
@@ -219,21 +292,30 @@ class Scheduler:
                         qtensor_act_fmt(scfg.act_fmt):
                     logits, cache = lm_decode(p, cfg, cache, tok[:, None],
                                               pos2, token_mask=active)
-                new_tok = jnp.where(active, _sample(logits[:, 0], kk),
+                # non-finite guard (DESIGN.md §10): a poisoned slot is
+                # done-masked INSIDE the scan — it stops sampling, stops
+                # writing KV, and emits nothing from the bad step on; the
+                # (k, n_slots) poison mask rides the existing per-tick
+                # transfer so the guard costs one reduction, not a sync
+                ok = jnp.isfinite(logits[:, 0]).all(axis=-1)
+                bad = active & ~ok
+                live = active & ok
+                new_tok = jnp.where(live, _sample(logits[:, 0], kk),
                                     tok).astype(jnp.int32)
-                steps2 = jnp.where(active, steps + 1, steps)
-                emitted = jnp.where(active, new_tok, -1)
-                done = (steps2 >= mnt) | (new_tok == eos)
-                return (cache, new_tok, pos2, steps2, active & ~done), emitted
+                steps2 = jnp.where(live, steps + 1, steps)
+                emitted = jnp.where(live, new_tok, -1)
+                done = (steps2 >= mnt) | (new_tok == eos) | bad
+                return ((cache, new_tok, pos2, steps2, active & ~done),
+                        (emitted, bad))
 
             keys = jax.random.split(key, k)
             carry = (cache, state["tok"], state["pos"], state["steps"],
                      state["active"])
-            (cache, tok, pos, steps, active), em = jax.lax.scan(
+            (cache, tok, pos, steps, active), (em, bad) = jax.lax.scan(
                 body, carry, keys)
             new_state = {"tok": tok, "pos": pos, "steps": steps,
                          "mnt": mnt, "eos": eos, "active": active}
-            return cache, new_state, em          # em: (k, n_slots)
+            return cache, new_state, em, bad     # em/bad: (k, n_slots)
 
         def _chunk_fn(p, row_cache, toks, start, lens, key):
             with qtensor_use_kernel(scfg.use_kernel), \
@@ -243,12 +325,12 @@ class Scheduler:
             return _sample(logits[:, 0], key), row_cache
 
         def _insert_dense_fn(cache, state, row_cache, slot, tok, plen,
-                             mnt, eos):
+                             mnt, eos, steps):
             # chunked partial caches stay dense until this insert (chunk
             # attention must read earlier chunks at monolithic precision)
             row_cache = quantize_cache(cfg, row_cache, scfg.kv_quant)
             return _insert_fn(cache, state, row_cache, slot, tok, plen,
-                              mnt, eos)
+                              mnt, eos, steps)
 
         self._prefill = jax.jit(_prefill_fn)
         self._insert = jax.jit(_insert_fn, donate_argnums=(0, 1))
@@ -273,44 +355,98 @@ class Scheduler:
     def submit(self, prompt: Sequence[int],
                max_new_tokens: Optional[int] = None,
                eos_id: Optional[int] = None,
-               arrival: float = 0.0) -> int:
+               arrival: float = 0.0,
+               deadline: Optional[float] = None,
+               priority: int = 0,
+               strict: bool = True) -> int:
         """Queue one request; returns its request id.  Admission happens
-        on subsequent :meth:`step` calls, in submit order (FIFO)."""
+        on subsequent :meth:`step` calls, highest priority first (submit
+        order within a class).
+
+        Admission control runs HERE, not deep inside prefill: malformed
+        prompts (empty / out-of-vocab / over ``cache_len``) raise a typed
+        :class:`RejectedError` (``strict=False`` records a REJECTED
+        terminal request instead), a full queue rejects with
+        ``"queue_full"``, and a deadline that the current backlog already
+        makes unmeetable is shed with ``"slo_shed"`` (``slo_shed=True``).
+        """
         mnt = (max_new_tokens if max_new_tokens is not None
                else self.scfg.max_new_tokens)
-        if len(prompt) + mnt > self.sched.cache_len:
-            raise ValueError(
-                f"request needs {len(prompt)} + {mnt} cache slots but the "
-                f"pool was built with cache_len={self.sched.cache_len}")
+        self.counters["submitted"] += 1
+        problem = request_problem(prompt, mnt, self.sched.cache_len,
+                                  self.cfg.vocab)
+        if problem is not None:
+            reason, msg = problem
+            if strict:
+                # the submission never happened: raise without recording
+                self.counters["submitted"] -= 1
+                raise RejectedError(reason, msg)
+            self.counters["rejected"] += 1
+            return self._terminal_submission(prompt, mnt, eos_id, arrival,
+                                             REJECTED, reason)
+        if len(self.queue) >= self.sched.max_queue:
+            # bounded queue: shed at the door instead of queueing forever
+            if strict:
+                self.counters["submitted"] -= 1
+                raise RejectedError(
+                    "queue_full",
+                    f"submit queue at max_queue={self.sched.max_queue}")
+            self.counters["rejected"] += 1
+            return self._terminal_submission(prompt, mnt, eos_id, arrival,
+                                             REJECTED, "queue_full")
+        if (deadline is not None and self.sched.slo_shed
+                and self._deadline_unmeetable(prompt, mnt, arrival,
+                                              deadline)):
+            self.counters["shed"] += 1
+            return self._terminal_submission(prompt, mnt, eos_id, arrival,
+                                             REJECTED, "slo_shed")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=list(prompt), max_new_tokens=mnt,
+                      eos_id=eos_id, arrival=arrival, deadline=deadline,
+                      priority=priority)
+        self.requests[rid] = req
+        if mnt <= 0:
+            req.transition(COMPLETED, "empty_budget")
+            self.counters["completed"] += 1
+        else:
+            self.queue.append(rid)
+        return rid
+
+    def _terminal_submission(self, prompt, mnt, eos_id, arrival,
+                             state: str, reason: str) -> int:
+        """Record a request that terminates at the door (still tracked,
+        so accounting sees every submission exactly once)."""
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=list(prompt), max_new_tokens=mnt,
                       eos_id=eos_id, arrival=arrival)
+        req.transition(state, reason)
         self.requests[rid] = req
-        if mnt <= 0:
-            req.state = DONE
-        else:
-            self.queue.append(rid)
         return rid
 
     def has_work(self) -> bool:
         return bool(self.queue) or bool(self.pool.occupied())
 
     def step(self, now: Optional[float] = None) -> List[Request]:
-        """Admit what fits (arrival-gated when ``now`` is given), advance
-        at most one prefill chunk (chunked mode), run one decode tick,
-        retire finished slots.  Returns requests completed by this
-        step."""
+        """Enforce deadlines (when ``now`` is given), admit what fits
+        (arrival-gated, priority-first, preempting if configured),
+        advance at most one prefill chunk (chunked mode), run one decode
+        tick, retire finished slots.  Returns every request that reached
+        a terminal state during this step."""
         self._stall_tokens = 0
-        completed = self._admit(now)
+        self._update_rate_estimate(now)
+        terminal = self._expire(now) if now is not None else []
+        terminal += self._admit(now)
         if self._chunked:
-            completed += self._prefill_tick()
-        completed += self._do_tick()
+            terminal += self._prefill_tick()
+        terminal += self._do_tick()
         self.stall_log.append(self._stall_tokens)
-        return completed
+        return terminal
 
     def run(self) -> Dict[int, List[int]]:
-        """Drain the queue and all active slots; returns {rid: tokens}."""
+        """Drain the queue and all active slots; returns {rid: tokens}
+        for COMPLETED requests."""
         while self.has_work():
             self.step()
         return {rid: r.out for rid, r in self.requests.items() if r.done}
@@ -330,6 +466,211 @@ class Scheduler:
         return [self.requests[r].out for r in rids]
 
     # ------------------------------------------------------------------
+    # fault-injection hooks (serve/faults.py drives these)
+    # ------------------------------------------------------------------
+
+    def inject_nonfinite(self, slots: Sequence[int],
+                         fail_fallback: bool = False) -> None:
+        """Treat ``slots`` as if their next tick produced non-finite
+        logits (deterministic stand-in for a real kernel fault: the host
+        quarantine path is identical).  ``fail_fallback`` makes the
+        quarantined requests' one fallback retry fault too -> FAILED."""
+        self._inject_bad_slots.update(int(s) for s in slots)
+        if fail_fallback:
+            for s in slots:
+                rid = dict(self.pool.occupied()).get(int(s))
+                if rid is not None:
+                    self._fail_fallback_rids.add(rid)
+
+    def _fallback_engine(self) -> Engine:
+        """Lazily-built jnp-reference engine (``use_kernel=False``) over
+        the SAME prepared params: the slow-but-correct retry path for
+        quarantined requests.  ``weights="fp32"`` makes prepare_params a
+        no-op — the params are already in serving representation."""
+        if self._fallback is None:
+            fcfg = dataclasses.replace(self.scfg, weights="fp32",
+                                       use_kernel=False)
+            self._fallback = Engine(self.cfg, self.params, fcfg)
+        return self._fallback
+
+    # ------------------------------------------------------------------
+    # SLO admission control
+    # ------------------------------------------------------------------
+
+    def _update_rate_estimate(self, now: Optional[float]) -> None:
+        if now is None:
+            return
+        if self._last_now is not None and now > self._last_now:
+            emitted = self._emitted_tokens - self._emitted_at_last_now
+            if emitted > 0:
+                inst = emitted / (now - self._last_now)
+                ema = self._ema_tok_per_s
+                self._ema_tok_per_s = (inst if ema is None
+                                       else 0.8 * ema + 0.2 * inst)
+        self._last_now = now
+        self._emitted_at_last_now = self._emitted_tokens
+
+    def _service_rate(self) -> Optional[float]:
+        return self.sched.est_tok_per_s or self._ema_tok_per_s
+
+    def _backlog_tokens(self) -> int:
+        """Tokens of work ahead of a new arrival: queued prompts+budgets
+        plus the unfinished remainder of every running slot."""
+        total = 0
+        for rid in self.queue:
+            r = self.requests[rid]
+            total += len(r.resume_tokens()) + r.max_new_tokens - len(r.out)
+        for _, rid in self.pool.occupied():
+            r = self.requests[rid]
+            if r.state == PREFILLING:
+                job = self._prefills.get(rid)
+                left = (len(job.seq) - job.next) if job is not None else \
+                    len(r.resume_tokens())
+                total += left + r.max_new_tokens - len(r.out)
+            elif r.state == DECODING:
+                total += r.max_new_tokens - len(r.out)
+        return total
+
+    def _deadline_unmeetable(self, prompt, mnt: int, arrival: float,
+                             deadline: float) -> bool:
+        """Shed decision: estimated wait for the backlog + this request's
+        own service time vs the slack it arrived with.  No service-rate
+        estimate yet (cold start, no est_tok_per_s) => never shed."""
+        rate = self._service_rate()
+        if not rate or rate <= 0:
+            return False
+        est = (self._backlog_tokens() + len(prompt) + mnt) / rate
+        return arrival + est > deadline
+
+    # ------------------------------------------------------------------
+    # deadline enforcement (admission, mid-prefill, mid-decode)
+    # ------------------------------------------------------------------
+
+    def _expire(self, now: float) -> List[Request]:
+        expired = []
+        for rid in [r for r in self.queue
+                    if self._past_deadline(r, now)]:
+            req = self.requests[rid]
+            self.queue.remove(rid)
+            req.transition(TIMED_OUT, "deadline_queued")
+            self.counters["timed_out"] += 1
+            expired.append(req)
+        for slot, rid in list(self.pool.occupied()):
+            req = self.requests[rid]
+            if not self._past_deadline(rid, now):
+                continue
+            if req.state == PREFILLING:
+                self._cancel_prefill_job(rid)     # releases trie pins
+            elif req.state == DECODING:
+                self._deactivate_slot(slot)       # done-mask out of tick
+            self.pool.release(slot)
+            req.slot = None
+            req.transition(TIMED_OUT, "deadline_" + (
+                "prefill" if req.state == PREFILLING else "decode"))
+            self.counters["timed_out"] += 1
+            expired.append(req)
+        return expired
+
+    def _past_deadline(self, rid: int, now: float) -> bool:
+        d = self.requests[rid].deadline
+        return d is not None and now >= d
+
+    def _deactivate_slot(self, slot: int) -> None:
+        """Done-mask a slot out of the decode scan (its device row stops
+        advancing; the next insert replaces the row wholesale)."""
+        self._state = dict(self._state,
+                           active=self._state["active"].at[slot].set(False))
+
+    def _cancel_prefill_job(self, rid: int) -> None:
+        """Tear down an in-flight chunked prefill WITHOUT leaking its
+        trie pins (the pin-leak fix: a request dying between
+        ``_start_prefill`` and completion must release its pinned path)."""
+        job = self._prefills.pop(rid, None)
+        if job is None:
+            return
+        self._prefill_q.remove(rid)
+        if self.prefix is not None and job.pinned:
+            self.prefix.release(job.pinned)
+
+    # ------------------------------------------------------------------
+    # priority preemption
+    # ------------------------------------------------------------------
+
+    def _next_admittable(self, now: Optional[float]) -> Optional[int]:
+        """Highest-priority arrived request; submit order (lowest rid)
+        within a class — with uniform priorities this IS the legacy FIFO
+        order, so pre-lifecycle replays are bit-identical."""
+        best = None
+        for rid in self.queue:
+            req = self.requests[rid]
+            if now is not None and req.arrival > now:
+                continue
+            if best is None or (req.priority, -rid) > \
+                    (self.requests[best].priority, -best):
+                best = rid
+        return best
+
+    def _preempt_for(self, incoming: Request) -> bool:
+        """Evict the lowest-priority running slot (strictly lower than
+        ``incoming`` — equal priorities never preempt, so a preempted
+        victim cannot bounce the request that displaced it)."""
+        if not self.sched.preempt:
+            return False
+        victims = []
+        for slot, rid in self.pool.occupied():
+            req = self.requests[rid]
+            if req.state in (PREFILLING, DECODING):
+                victims.append((req.priority, -(req.admit_seq or 0),
+                                slot, rid))
+        if not victims:
+            return False
+        victims.sort()                 # lowest priority, youngest first
+        pr, _, slot, rid = victims[0]
+        if pr >= incoming.priority:
+            return False
+        self._evict(self.requests[rid], slot)
+        return True
+
+    def _evict(self, req: Request, slot: int) -> None:
+        """Preempt one running request back to the queue, publishing its
+        computed KV chunks to the prefix trie first so the later resume
+        is mostly trie splices (PREFILLING partial caches are dense —
+        always exact; DECODING rows publish only when the pool KV is
+        dense, since quantized rows would break splice exactness)."""
+        if req.state == PREFILLING:
+            job = self._prefills.get(req.rid)
+            if job is not None and self.prefix is not None \
+                    and job.cache is not None:
+                self._publish_blocks(job.seq, job.cache,
+                                     job.next // self.sched.prefill_chunk)
+            self._cancel_prefill_job(req.rid)
+        else:                           # DECODING
+            if self.prefix is not None and not self.scfg.kv_quant:
+                self._publish_pool_row(req, slot)
+            self._deactivate_slot(slot)
+        self.pool.release(slot)
+        req.slot = None
+        req.transition(PREEMPTED)
+        req.transition(QUEUED)
+        req.preemptions += 1
+        self.counters["preempted"] += 1
+        self.queue.append(req.rid)
+
+    def _publish_pool_row(self, req: Request, slot: int) -> None:
+        """Publish a preempted DECODING slot's KV — the prompt AND the
+        tokens it produced — as trie chunks keyed by ``prompt+out[:-1]``
+        (dense pool rows only; the prefix gate already guarantees
+        ring == cache_len, so slot == position and rows are extractable).
+        """
+        seq = req.resume_tokens()
+        c = self.sched.prefill_chunk
+        k_full = len(seq) // c
+        if k_full <= 0:
+            return
+        row = jax.tree.map(lambda a: a[:, slot:slot + 1], self._cache)
+        self._publish_blocks(seq, row, k_full)
+
+    # ------------------------------------------------------------------
     # admission (per-slot prefill-insert)
     # ------------------------------------------------------------------
 
@@ -338,41 +679,62 @@ class Scheduler:
             self._admit_chunked(now)
             return []
         completed = []
-        while self.pool.n_free and self.queue:
-            rid = self.queue[0]
-            req = self.requests[rid]
-            if now is not None and req.arrival > now:
+        while self.queue:
+            rid = self._next_admittable(now)
+            if rid is None:
                 break                  # offered-load replay: not here yet
-            self.queue.popleft()
+            req = self.requests[rid]
+            if not self.pool.n_free and not self._preempt_for(req):
+                break
+            self.queue.remove(rid)
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
-            self._stall_tokens += len(req.prompt)
-            self.prefill_tokens_computed += len(req.prompt)
+            req.t_admit = now
+            self.counters["admitted"] += 1
+            resumed = bool(req.out)
+            if resumed:
+                self.counters["resumed"] += 1
+            seq = req.resume_tokens()
+            self._stall_tokens += len(seq)
+            self.prefill_tokens_computed += len(seq)
 
-            toks = np.asarray([req.prompt], np.int32)
+            toks = np.asarray([seq], np.int32)
             lens = None
             if self._mask_pads and self.sched.bucket_prompts:
-                w = bucket_cache_len(len(req.prompt), floor=8)
+                w = bucket_cache_len(len(seq), floor=8)
                 padded = np.zeros((1, w), np.int32)
-                padded[0, w - len(req.prompt):] = req.prompt
+                padded[0, w - len(seq):] = seq
                 toks = padded
-                lens = jnp.asarray([len(req.prompt)], jnp.int32)
+                lens = jnp.asarray([len(seq)], jnp.int32)
             key = jax.random.fold_in(self._key, rid)
             self.n_prefills += 1
             tok, row_cache = self._prefill(self.params, jnp.asarray(toks),
                                            lens, key)
+            eos = -1 if req.eos_id is None else req.eos_id
+            if resumed:
+                # mid-decode resume: the newest emitted token (out[-1],
+                # not yet in KV) is the in-flight token; device steps
+                # start at len(out) so the budget rule lines up
+                req.transition(DECODING)
+                req.slot = self.pool.acquire(rid)
+                self._cache, self._state = self._insert(
+                    self._cache, self._state, row_cache, req.slot,
+                    req.out[-1], len(seq), req.max_new_tokens, eos,
+                    len(req.out))
+                continue
             first = int(tok[0])
             req.out.append(first)
+            self._emitted_tokens += 1
             if req.finished_by(first, 1):
-                req.state = DONE       # budget of 1 / instant EOS: no slot
+                req.transition(COMPLETED)   # budget of 1 / instant EOS
+                self.counters["completed"] += 1
                 completed.append(req)
                 continue
-            slot = self.pool.acquire(rid)
-            req.slot, req.state = slot, ACTIVE
+            req.slot = self.pool.acquire(rid)
+            req.transition(DECODING)
             self._cache, self._state = self._insert(
-                self._cache, self._state, row_cache, slot, tok[0],
-                len(req.prompt), req.max_new_tokens,
-                -1 if req.eos_id is None else req.eos_id)
+                self._cache, self._state, row_cache, req.slot, tok[0],
+                len(seq), req.max_new_tokens, eos, 1)
         return completed
 
     # ------------------------------------------------------------------
@@ -389,28 +751,41 @@ class Scheduler:
         prompt admitted together still hits the chunks the first sharer
         publishes (admission-time lookup would miss every in-flight
         sharer — the dominant pattern the trie exists for)."""
-        while self.pool.n_free and self.queue:
-            rid = self.queue[0]
-            req = self.requests[rid]
-            if now is not None and req.arrival > now:
+        while self.queue:
+            rid = self._next_admittable(now)
+            if rid is None:
                 break
-            self.queue.popleft()
+            req = self.requests[rid]
+            if not self.pool.n_free and not self._preempt_for(req):
+                break
+            self.queue.remove(rid)
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
+            req.t_admit = now
+            self.counters["admitted"] += 1
+            if req.preemptions:
+                self.counters["resumed"] += 1
             req.slot = self.pool.acquire(rid)
-            req.state = PREFILLING
-            self._prefills[rid] = _PrefillJob(rid=rid, cache=None, next=0,
-                                              pinned=[])
+            req.transition(PREFILLING)
+            self._prefills[rid] = _PrefillJob(rid=rid,
+                                              seq=req.resume_tokens(),
+                                              cache=None, next=0, pinned=[])
             self._prefill_q.append(rid)
 
     def _start_prefill(self, req: Request, job: _PrefillJob) -> None:
         """First chunk of a job: prefix lookup + partial-cache creation.
         Misses get device-side zeros (no host traffic); hits assemble the
         spliced rows on host and upload once."""
-        matched, pinned = (self.prefix.lookup(req.prompt)
+        matched, pinned = (self.prefix.lookup(job.seq)
                            if self.prefix is not None else (0, []))
         req.prefix_hit_tokens = matched
         self.prefill_tokens_skipped += matched
+        if req.preemptions:
+            # preemption-resume cost accounting: spliced vs recomputed
+            req.resume_splice_tokens += matched
+            req.resume_total_tokens += len(job.seq)
+            self.resume_splice_tokens += matched
+            self.resume_recompute_tokens += len(job.seq) - matched
         job.pinned = pinned
         job.next = matched
         job.cache = (self._spliced_row_cache(pinned) if pinned
@@ -432,8 +807,9 @@ class Scheduler:
 
     def _prefill_tick(self) -> List[Request]:
         """Advance the OLDEST prefilling request by one chunk; on its
-        final chunk, sample the first token, publish full chunks to the
-        prefix trie, and splice the (kv-quantized) row into the pool."""
+        final chunk, sample the first token (resumes reuse their
+        in-flight token instead), publish full chunks to the prefix trie,
+        and splice the (kv-quantized) row into the pool."""
         if not self._prefill_q:
             return []
         rid = self._prefill_q[0]
@@ -442,10 +818,10 @@ class Scheduler:
         if job.cache is None:
             self._start_prefill(req, job)
         cw = self.sched.prefill_chunk
-        n = len(req.prompt)
+        n = len(job.seq)
         take = min(cw, n - job.next)
         toks = np.zeros((1, cw), np.int32)
-        toks[0, :take] = req.prompt[job.next:job.next + take]
+        toks[0, :take] = job.seq[job.next:job.next + take]
         key = jax.random.fold_in(self._key, rid)
         self.n_prefills += 1
         req.prefill_chunks += 1
@@ -463,38 +839,51 @@ class Scheduler:
         self._prefill_q.popleft()
         del self._prefills[rid]
         if self.prefix is not None:
-            self._publish_prefix(req, job)
+            self._publish_blocks(job.seq, job.cache, n // cw)
             self.prefix.release(job.pinned)
+        eos = -1 if req.eos_id is None else req.eos_id
+        if req.out:
+            # preemption resume: out[-1] is the in-flight token (never
+            # written to KV); device steps resume at len(out)
+            req.transition(DECODING)
+            self._cache, self._state = self._insert_dense(
+                self._cache, self._state, job.cache, req.slot, req.out[-1],
+                n, req.max_new_tokens, eos, len(req.out))
+            return []
         first = int(tok[0])
         req.out.append(first)
+        self._emitted_tokens += 1
         if req.finished_by(first, 1):
-            req.state = DONE           # budget of 1 / instant EOS
+            req.transition(COMPLETED)   # budget of 1 / instant EOS
+            self.counters["completed"] += 1
             self.pool.release(req.slot)
             req.slot = None
             return [req]
-        req.state = ACTIVE
+        req.transition(DECODING)
         self._cache, self._state = self._insert_dense(
             self._cache, self._state, job.cache, req.slot, tok[0], n,
-            req.max_new_tokens, -1 if req.eos_id is None else req.eos_id)
+            req.max_new_tokens, eos, 1)
         return []
 
-    def _publish_prefix(self, req: Request, job: _PrefillJob) -> None:
-        """Insert the prompt's full chunks into the trie.  Block i is a
-        pure function of prompt[:(i+1)*c] (deterministic chunked prefill
-        with absolute chunk boundaries), so re-computed and cached blocks
-        are interchangeable — the trie keeps whichever arrived first."""
-        c = self.sched.prefill_chunk
-        k_full = len(req.prompt) // c
-        if k_full == 0:
+    def _publish_blocks(self, seq: Sequence[int], cache,
+                        k_full: int) -> None:
+        """Insert ``seq``'s first ``k_full`` whole chunks into the trie
+        from a dense batch=1 cache (a partial prefill cache or an
+        extracted pool row).  Block i is a pure function of
+        ``seq[:(i+1)*c]`` (deterministic chunked prefill with absolute
+        chunk boundaries), so re-computed and cached blocks are
+        interchangeable — the trie keeps whichever arrived first."""
+        if k_full <= 0 or self.prefix is None:
             return
-        # slice on device, transfer only the prompt's full chunks — not
-        # the whole cache_len row (prefix gate: slot == position)
+        c = self.sched.prefill_chunk
+        # slice on device, transfer only the full chunks — not the whole
+        # cache_len row (prefix gate: slot == position)
         host = jax.tree.map(
-            lambda a: np.asarray(a[:, :, :k_full * c]), job.cache)
+            lambda a: np.asarray(a[:, :, :k_full * c]), cache)
         blocks = [jax.tree.map(
             lambda a, i=i: a[:, :, i * c:(i + 1) * c].copy(), host)
             for i in range(k_full)]
-        self.prefix.insert(req.prompt, blocks)
+        self.prefix.insert(list(seq), blocks)
 
     # ------------------------------------------------------------------
     # decode tick (k steps on device, one dispatch)
@@ -502,28 +891,74 @@ class Scheduler:
 
     def _do_tick(self) -> List[Request]:
         occupied = [(slot, rid) for slot, rid in self.pool.occupied()
-                    if self.requests[rid].state == ACTIVE]
+                    if self.requests[rid].state == DECODING]
         if not occupied:               # only PREFILLING slots: no decode
+            self._inject_bad_slots.clear()
             return []
         self.n_ticks += 1
         key = jax.random.fold_in(self._tick_key, self.n_ticks)
-        self._cache, self._state, em = self._tick(
+        self._cache, self._state, em, bad = self._tick(
             self.params, self._cache, self._state, key)
-        em = np.asarray(em)            # ONE transfer per tick: (k, n_slots)
-        completed = []
+        em, bad = jax.device_get((em, bad))  # ONE sync per tick: (k, n)
+        em, bad = np.asarray(em), np.asarray(bad)
+        injected = self._inject_bad_slots
+        self._inject_bad_slots = set()
+        terminal = []
         for slot, rid in occupied:
             req = self.requests[rid]
             req.ticks += 1
+            if bad[:, slot].any() or slot in injected:
+                terminal += self._quarantine(req, slot)
+                continue
             for s in range(self.sched.steps_per_tick):
                 t = int(em[s, slot])
                 if t < 0:              # done-masked earlier in this tick
                     break
                 req.out.append(t)
+                self._emitted_tokens += 1
                 if req.finished_by(t, len(req.out)):
                     break              # device flagged done at this step
             if req.finished_by(req.out[-1], len(req.out)):
-                req.state = DONE
+                req.transition(COMPLETED)
+                self.counters["completed"] += 1
                 self.pool.release(slot)
                 req.slot = None
-                completed.append(req)
-        return completed
+                terminal.append(req)
+        return terminal
+
+    # ------------------------------------------------------------------
+    # non-finite quarantine -> jnp-fallback retry (DESIGN.md §10)
+    # ------------------------------------------------------------------
+
+    def _quarantine(self, req: Request, slot: int) -> List[Request]:
+        """A slot's decode logits went non-finite: free it (everything it
+        emitted is suspect — the fallback regenerates from scratch) and
+        retry the request ONCE on the jnp reference engine.  FAILED only
+        if the fallback faults too (or this is the second quarantine)."""
+        self._deactivate_slot(slot)
+        self.pool.release(slot)
+        req.slot = None
+        self.counters["nan_events"] += 1
+        if req.nan_retries >= 1:
+            req.out = []
+            req.transition(FAILED, "nonfinite_twice")
+            self.counters["failed"] += 1
+            return [req]
+        req.nan_retries += 1
+        self.counters["nan_retries"] += 1
+        try:
+            if req.rid in self._fail_fallback_rids:
+                self._fail_fallback_rids.discard(req.rid)
+                raise FloatingPointError("injected fallback fault")
+            out = self._fallback_engine().generate(
+                [req.prompt], [req.max_new_tokens], [req.eos_id])[0]
+        except Exception:
+            req.out = []
+            req.transition(FAILED, "nonfinite_fallback")
+            self.counters["failed"] += 1
+            return [req]
+        req.out = out
+        self._emitted_tokens += len(out)
+        req.transition(COMPLETED, "nan_fallback")
+        self.counters["completed"] += 1
+        return [req]

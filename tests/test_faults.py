@@ -1,0 +1,348 @@
+"""Fault-tolerant request lifecycle (DESIGN.md §10): state-machine
+enforcement, typed admission rejection, deadline timeouts at every stage
+(with the prefix-pin-leak regression), priority preemption + cheap
+resume, NaN quarantine -> jnp-fallback retry, bounded-queue/SLO
+shedding, seeded chaos-replay invariant sweeps, and chaos-off bit-parity
+incl. rtn:int4 weights + int4 KV."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.lm import LMConfig, lm_init
+from repro.serve import (COMPLETED, DECODING, FAILED, PREEMPTED, QUEUED,
+                         REJECTED, TIMED_OUT, Engine, RejectedError,
+                         Request, Scheduler, SchedulerConfig, ServeConfig,
+                         chaos_plan, check_drained, check_invariants)
+from repro.serve.replay import replay_chaos, sla_workload
+
+CFG = LMConfig(name="f", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+               d_ff=128, vocab=64, dtype=jnp.float32, remat=False)
+PROMPTS = [[1, 2, 3], [4, 5], [6], [7, 8, 9, 10]]
+
+
+def _params():
+    return lm_init(jax.random.PRNGKey(0), CFG)
+
+
+def _sched(params, *, chunked=False, prefix=False, **kw):
+    scfg_keys = ("weights", "kv_quant", "use_kernel", "temperature",
+                 "max_new_tokens", "act_fmt")
+    scfg = ServeConfig(**{k: kw.pop(k) for k in scfg_keys if k in kw})
+    if chunked:
+        kw.setdefault("prefill_chunk", 4)
+        kw.setdefault("prefix_cache", prefix)
+    return Scheduler(CFG, params, scfg,
+                     SchedulerConfig(cache_len=64, **kw))
+
+
+def _drain(sch, tick_s=0.0, now0=0.0, audit=True):
+    """Drive to empty, auditing invariants each step; returns clock."""
+    clock = now0
+    while sch.has_work():
+        sch.step(now=clock)
+        if audit:
+            v = check_invariants(sch)
+            assert not v, v
+        clock += tick_s
+    return clock
+
+
+# ----------------------------------------------------------------------
+# state machine + validation
+# ----------------------------------------------------------------------
+
+def test_lifecycle_transitions_enforced():
+    r = Request(rid=0, prompt=[1], max_new_tokens=4)
+    r.transition("prefilling")
+    r.transition(PREEMPTED)
+    r.transition(QUEUED)
+    r.transition(DECODING)
+    r.transition(COMPLETED, "done")
+    assert r.terminal and r.done and r.finish_reason == "done"
+    with pytest.raises(RuntimeError):      # terminal states are final
+        r.transition(QUEUED)
+    r2 = Request(rid=1, prompt=[1], max_new_tokens=4)
+    with pytest.raises(RuntimeError):      # QUEUED cannot fail directly
+        r2.transition(FAILED)
+
+
+def test_submit_rejects_malformed_with_typed_reason():
+    sch = _sched(_params(), n_slots=2)
+    for prompt, mnt, reason in (([], 4, "empty_prompt"),
+                                ([999, 0], 4, "oov_token"),
+                                ([1, 2], 100, "over_cache_len")):
+        with pytest.raises(RejectedError) as ei:
+            sch.submit(prompt, max_new_tokens=mnt)
+        assert ei.value.reason == reason
+        # strict=False records the rejection as a terminal request
+        rid = sch.submit(prompt, max_new_tokens=mnt, strict=False)
+        req = sch.requests[rid]
+        assert req.state == REJECTED and req.finish_reason == reason
+    assert sch.counters["rejected"] == 3
+    assert not check_drained(sch)
+
+
+def test_engine_generate_validates_prompts():
+    eng = Engine(CFG, _params(), ServeConfig(max_new_tokens=4))
+    for prompt in ([], [CFG.vocab + 3]):
+        with pytest.raises(RejectedError):
+            eng.generate([prompt])
+
+
+def test_bounded_queue_backpressure():
+    sch = _sched(_params(), n_slots=1, max_queue=2)
+    sch.submit([1], 4)
+    sch.submit([2], 4)
+    with pytest.raises(RejectedError) as ei:
+        sch.submit([3], 4)
+    assert ei.value.reason == "queue_full"
+    rid = sch.submit([3], 4, strict=False)
+    assert sch.requests[rid].finish_reason == "queue_full"
+    sch.run()
+    assert not check_drained(sch)
+
+
+# ----------------------------------------------------------------------
+# deadlines at every stage (+ the prefix-pin-leak regression)
+# ----------------------------------------------------------------------
+
+def test_deadline_timeout_in_queue_and_mid_decode():
+    sch = _sched(_params(), n_slots=1)
+    a = sch.submit([1, 2, 3], 16, deadline=0.5)     # dies mid-decode
+    b = sch.submit([4, 5], 16, deadline=0.2)        # dies queued (1 slot)
+    c = sch.submit([6, 7], 4, deadline=50.0)        # survives
+    clock = _drain(sch, tick_s=0.3)
+    assert sch.requests[a].state == TIMED_OUT
+    assert sch.requests[a].finish_reason == "deadline_decode"
+    assert sch.requests[b].state == TIMED_OUT
+    assert sch.requests[b].finish_reason == "deadline_queued"
+    assert sch.requests[c].done
+    assert sch.counters["timed_out"] == 2
+    assert not check_drained(sch)
+
+
+def test_deadline_timeout_mid_prefill_releases_pins():
+    """The pin-leak regression: a request that dies between
+    ``_start_prefill`` and completion must release its pinned trie path
+    (pre-PR this was unreachable except via exceptions; deadlines make it
+    a normal path)."""
+    sch = _sched(_params(), chunked=True, prefix=True, n_slots=2)
+    # seed the trie so the victim's lookup actually pins a path
+    warm = sch.submit(list(range(1, 13)), 2)
+    _drain(sch)
+    assert sch.requests[warm].done and sch.prefix.n_blocks > 0
+    # 20-token prompt: the trie covers the first 12, leaving 2 chunks to
+    # compute — after one tick the victim is still PREFILLING with its
+    # lookup path pinned; the deadline then hits mid-prefill
+    vic = sch.submit(list(range(1, 13)) + [20, 21, 22, 23, 24, 25, 26, 27],
+                     4, deadline=1.5)
+    sch.step(now=0.0)
+    assert sch.requests[vic].state == "prefilling"
+    assert sch.prefix.total_refcount() > 0          # lookup pinned
+    sch.step(now=2.0)                               # past the deadline
+    assert sch.requests[vic].state == TIMED_OUT
+    assert sch.requests[vic].finish_reason == "deadline_prefill"
+    assert sch.prefix.total_refcount() == 0         # no pin leak
+    v = check_invariants(sch)
+    assert not v, v
+    _drain(sch)
+    assert not check_drained(sch)
+
+
+def test_slo_shed_rejects_unmeetable_deadline():
+    # 1 tok/s service estimate: any real deadline is hopeless -> shed at
+    # the door with a typed reason instead of queueing to certain death
+    sch = _sched(_params(), n_slots=1, est_tok_per_s=1.0)
+    rid = sch.submit([1, 2, 3], 8, deadline=2.0, strict=False)
+    req = sch.requests[rid]
+    assert req.state == REJECTED and req.finish_reason == "slo_shed"
+    assert sch.counters["shed"] == 1
+    ok = sch.submit([1, 2, 3], 8)                   # no deadline: queued
+    sch.run()
+    assert sch.requests[ok].done
+    assert not check_drained(sch)
+
+
+# ----------------------------------------------------------------------
+# priority preemption + cheap resume
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunked", [False, True])
+def test_preemption_resume_token_parity(chunked):
+    """A preempted victim's final output is token-identical to the
+    engine's — the resume path (prompt + out[:-1] re-prefill, out[-1] as
+    the in-flight token) reconstructs the stream exactly."""
+    params = _params()
+    eng = Engine(CFG, params, ServeConfig(max_new_tokens=16))
+    want = eng.generate([[1, 2, 3], [4, 5]], max_new_tokens=[16, 8])
+    sch = _sched(params, chunked=chunked, prefix=chunked, n_slots=1)
+    lo = sch.submit([1, 2, 3], 16)
+    for _ in range(3):
+        sch.step()                     # lo reaches DECODING, emits some
+    hi = sch.submit([4, 5], 8, priority=5)
+    _drain(sch)
+    assert sch.requests[lo].preemptions == 1
+    assert sch.counters["preempted"] == 1 and sch.counters["resumed"] == 1
+    assert [sch.requests[lo].out, sch.requests[hi].out] == want
+    # equal priority never preempts (no livelock)
+    sch2 = _sched(params, n_slots=1)
+    a = sch2.submit([1, 2, 3], 8)
+    sch2.step()
+    sch2.submit([4, 5], 8, priority=0)
+    sch2.run()
+    assert sch2.counters["preempted"] == 0
+    assert not check_drained(sch2)
+
+
+def test_preemption_resume_splices_from_trie():
+    """Eviction publishes the victim's computed KV chunks, so its resume
+    re-prefill is mostly trie splices — the measured preemption cost."""
+    sch = _sched(_params(), chunked=True, prefix=True, n_slots=1)
+    lo = sch.submit(list(range(1, 13)), 16)
+    for _ in range(5):
+        sch.step()                     # 3 prefill chunks + decode ticks
+    sch.submit([40, 41], 4, priority=2)
+    _drain(sch)
+    assert sch.requests[lo].done and sch.requests[lo].preemptions == 1
+    assert sch.resume_splice_tokens > 0
+    frac = sch.resume_splice_tokens / (
+        sch.resume_splice_tokens + sch.resume_recompute_tokens)
+    assert frac >= 0.5, (sch.resume_splice_tokens,
+                         sch.resume_recompute_tokens)
+    assert not check_drained(sch)
+
+
+# ----------------------------------------------------------------------
+# non-finite quarantine -> fallback retry
+# ----------------------------------------------------------------------
+
+def test_nan_quarantine_falls_back_to_reference_engine():
+    params = _params()
+    want = Engine(CFG, params, ServeConfig(max_new_tokens=8)
+                  ).generate(PROMPTS[:2])
+    sch = _sched(params, n_slots=2)
+    ra, rb = (sch.submit(p, 8) for p in PROMPTS[:2])
+    sch.step()
+    sch.inject_nonfinite([sch.requests[ra].slot])
+    _drain(sch)
+    # the quarantined request regenerates correctly on the jnp fallback;
+    # its slot-mate is untouched
+    assert sch.requests[ra].out == want[0]
+    assert sch.requests[ra].finish_reason == "nan_fallback"
+    assert sch.requests[rb].out == want[1]
+    assert sch.counters["nan_events"] == 1
+    assert sch.counters["nan_retries"] == 1
+    assert not check_drained(sch)
+
+
+def test_nan_failing_fallback_marks_failed():
+    sch = _sched(_params(), n_slots=1)
+    rid = sch.submit([1, 2, 3], 8)
+    sch.step()
+    sch.inject_nonfinite([sch.requests[rid].slot], fail_fallback=True)
+    _drain(sch)
+    req = sch.requests[rid]
+    assert req.state == FAILED
+    assert req.finish_reason == "nonfinite_fallback"
+    assert req.out == []               # tainted tokens are never surfaced
+    assert sch.counters["failed"] == 1
+    assert not check_drained(sch)
+
+
+def test_real_nonfinite_logits_are_quarantined():
+    """End-to-end device guard: poison one slot's actual pool KV with
+    NaNs and the tick scan must done-mask exactly that slot (emitting -1
+    from the bad step on) while its batchmate decodes normally."""
+    params = _params()
+    want = Engine(CFG, params, ServeConfig(max_new_tokens=8)
+                  ).generate(PROMPTS[:2])
+    sch = _sched(params, n_slots=2)
+    ra, rb = (sch.submit(p, 8) for p in PROMPTS[:2])
+    sch.step()
+    slot = sch.requests[ra].slot
+    sch._cache = jax.tree.map(
+        lambda a: a.at[:, slot].set(jnp.nan) if jnp.issubdtype(
+            a.dtype, jnp.floating) else a, sch._cache)
+    _drain(sch)
+    assert sch.requests[ra].finish_reason == "nan_fallback"
+    assert sch.requests[ra].out == want[0]   # fallback regenerated
+    assert sch.requests[rb].out == want[1]   # batchmate unharmed
+    assert sch.counters["nan_events"] == 1
+    assert not check_drained(sch)
+
+
+# ----------------------------------------------------------------------
+# chaos sweeps + bit parity
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_chaos_replay_invariants_hold(seed):
+    """Seeded fault schedules (NaNs, stragglers, storms, malformed
+    submissions, bursts) must drain with zero invariant violations and
+    every request in exactly one terminal state."""
+    params = _params()
+    sch = _sched(params, chunked=True, prefix=True, n_slots=4,
+                 max_queue=8, est_tok_per_s=200.0, max_new_tokens=8)
+    wl = sla_workload(seed, 14, CFG.vocab, rate=50.0,
+                      prompt_lens=(2, 10), budgets=(2, 4, 8))
+    plan = chaos_plan(seed=seed, n_ticks=64, vocab=CFG.vocab,
+                      cache_len=64, nan_rate=0.2)
+    res = replay_chaos(sch, wl, plan=plan, tick_s=0.05)
+    assert res["violations"] == [], res["violations"][:5]
+    assert sum(res["by_state"].values()) == len(wl)
+    # the harness's own submissions (malformed + bursts) resolved too
+    assert all(r.terminal for r in sch.requests.values())
+    c = res["counters"]
+    assert c["submitted"] == (c["completed"] + c["timed_out"]
+                              + c["rejected"] + c["shed"] + c["failed"])
+
+
+@pytest.mark.parametrize("kv", [False, "int4"])
+def test_chaos_off_bit_parity(kv):
+    """Faults disabled, no deadlines/priorities: the lifecycle scheduler
+    reproduces the plain FIFO drain token-for-token — including through
+    rtn:int4 weights + packed int4 KV."""
+    params = _params()
+    q = dict(weights="rtn:int4", kv_quant=kv, use_kernel=False) if kv \
+        else {}
+    wl = sla_workload(5, 10, CFG.vocab, rate=80.0, prompt_lens=(2, 10),
+                      budgets=(2, 4, 8), deadline_frac=0.0,
+                      hi_priority_frac=0.0)
+    calm = replay_chaos(_sched(params, chunked=True, prefix=True,
+                               n_slots=2, **q),
+                        wl, plan=None, tick_s=0.05)
+    assert calm["violations"] == []
+    plain = _sched(params, chunked=True, prefix=True, n_slots=2, **q)
+    rids = [plain.submit(w.prompt, w.max_new_tokens) for w in wl]
+    plain.run()
+    assert len(calm["outputs"]) == len(wl)       # all completed
+    for i, r in enumerate(rids):
+        assert calm["outputs"][i] == plain.requests[r].out, i
+
+
+def test_counters_and_terminal_accounting_balance():
+    """One run touching every terminal path: the counter identity and
+    per-state tallies must balance at drain."""
+    sch = _sched(_params(), n_slots=1, max_queue=3, est_tok_per_s=100.0)
+    sch.submit([1, 2], 4)                               # completes
+    # deadline clears the shed estimate (~0.24s of backlog at 100 tok/s)
+    # but expires before the single slot frees -> queued timeout
+    sch.submit([3, 4], 16, deadline=0.3)
+    sch.submit([], 4, strict=False)                     # rejected
+    sch.submit([5, 6], 8, deadline=0.05, strict=False)  # slo-shed
+    nan = sch.submit([7, 8], 8)                         # FAILED via NaN
+    clock = 0.0
+    injected = False
+    while sch.has_work():
+        sch.step(now=clock)
+        clock += 0.5
+        if not injected and sch.requests[nan].state == DECODING:
+            sch.inject_nonfinite([sch.requests[nan].slot],
+                                 fail_fallback=True)
+            injected = True
+    assert not check_drained(sch)
+    c = sch.counters
+    assert c["completed"] == 1 and c["timed_out"] == 1
+    assert c["rejected"] == 1 and c["shed"] == 1 and c["failed"] == 1
