@@ -1,0 +1,216 @@
+"""Training-robustness chaos replay: seeded faults + invariant audit +
+fault-free bit parity (ISSUE 8 acceptance).
+
+Three arms over the SAME tiny-LM train step (jnp chain — the CPU CI
+backend; the fused kernel carries the identical SC_OK gate and is
+covered by the tier-1 tests):
+
+1. **plain** — ``run_loop`` with no checkpointing and no monitor: the
+   ground-truth trajectory.
+2. **fault-free chaos** — the full chaos harness (``run_chaos`` with
+   ``plan=None``): auto-resume on, spike monitor armed, checkpoints
+   written, poison scalar stamped 1.0 on every batch.  Its final
+   ``params/opt/step`` must be BIT-IDENTICAL to the plain arm — the
+   self-healing machinery is free when nothing goes wrong (multiply by
+   1.0 and ``where(True, new, old)`` are IEEE identities).
+3. **seeded chaos** — a :func:`repro.train.faults.chaos_train_plan`
+   exercising every recovery tier: NaN/inf batches (skip), a sustained
+   finite loss blow-up (spike rollback + LR backoff), hard kills after
+   the step and mid-checkpoint-write (auto-resume), a bit-flipped
+   published payload (quarantine).  The per-step
+   :class:`~repro.train.faults.TrainAuditor` must report ZERO
+   violations and the run must complete with a finite loss.
+
+All columns are deterministic on a fixed backend (seeded plan, seeded
+data, ``prefetch=0``), so ``check_regression.py`` gates them at zero
+tolerance; the invariant/parity columns are the acceptance bar itself.
+
+Emits ``BENCH_train.json`` (``--json-dir DIR``); ``--tiny`` is the CI
+smoke (1-layer model, 18 steps) and is what the committed baseline was
+generated from.
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantConfig, QuantPolicy
+from repro.data import DataPipeline, lm_batch, permutation_table
+from repro.models.lm import LMConfig, lm_init
+from repro.optim import adamw, constant
+from repro.train import (TrainConfig, init_state, make_optimizer,
+                         make_train_step)
+from repro.train import faults as tfaults
+from repro.train.loop import run_loop
+
+from .common import emit, write_bench_json
+
+# plan parameters verified (per mode) to exercise every recovery tier:
+# >=1 skip, >=1 rollback, >=1 mid-write kill, >=1 quarantine, zero audit
+# violations (see the committed baseline counters).  The quarantine tier
+# needs the corrupted save to still be the newest candidate at some
+# restore, so the corrupt ordinal shifts with the run length.
+PLAN_TINY = dict(seed=1, spike_at=24, spike_len=3, n_crashes=1,
+                 ckpt_crash_save=2, ckpt_crash_stage="manifest",
+                 corrupt_save=3, corrupt_mode="bitflip")
+PLAN_FULL = dict(seed=3, spike_at=24, spike_len=3, n_crashes=1,
+                 ckpt_crash_save=2, ckpt_crash_stage="manifest",
+                 corrupt_save=5, corrupt_mode="bitflip")
+SPIKE_WARMUP = 4
+CKPT_EVERY = 3
+
+
+def _setup(tiny: bool):
+    if tiny:
+        cfg = LMConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                       n_kv_heads=2, d_ff=64, vocab=32,
+                       dtype=jnp.float32, remat=False)
+        n_steps, b, l = 18, 4, 16
+    else:
+        cfg = LMConfig(name="small", n_layers=2, d_model=64, n_heads=4,
+                       n_kv_heads=2, d_ff=128, vocab=64,
+                       dtype=jnp.float32, remat=False)
+        n_steps, b, l = 36, 8, 32
+    tcfg = TrainConfig(
+        quant=QuantConfig(method="lotion", fmt_name="int4", lam=1e3,
+                          policy=QuantPolicy(min_size=64),
+                          use_kernel=False),
+        clip_norm=1.0, n_microbatches=1, seed=0)
+    perm = permutation_table(0, cfg.vocab)
+
+    def batch_fn(step):
+        return lm_batch(0, step, b, l, cfg.vocab, perm)
+
+    opt = make_optimizer(tcfg, adamw(constant(1e-2)))
+
+    def make_state():
+        params = lm_init(jax.random.PRNGKey(0), cfg)
+        return init_state(params, opt, lr_scale=True)
+
+    step = make_train_step(cfg, tcfg, opt,
+                           loss_fn=tfaults.chaos_loss_fn(cfg, tcfg))
+    plan_args = dict(PLAN_TINY if tiny else PLAN_FULL)
+    config = {"arch": {"n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                       "n_heads": cfg.n_heads, "vocab": cfg.vocab},
+              "n_steps": n_steps, "batch": b, "seq": l,
+              "plan": plan_args, "spike_warmup": SPIKE_WARMUP,
+              "ckpt_every": CKPT_EVERY}
+    return step, make_state, batch_fn, n_steps, plan_args, config
+
+
+def _plain_run(step, make_state, batch_fn, n_steps):
+    """Ground-truth trajectory: no checkpoints, no monitor, poison=1.0."""
+
+    def fn(s):
+        b = dict(batch_fn(s))
+        b["poison"] = np.asarray(1.0, np.float32)
+        return b
+
+    pipe = DataPipeline(fn, prefetch=0)
+    out = run_loop(step, make_state(), pipe, n_steps, log_every=0,
+                   log=lambda *a, **k: None)
+    pipe.close()
+    return out["state"]
+
+
+def _bit_parity(a, b) -> bool:
+    """Bitwise equality of the params/opt/step slices of two states
+    (``lr_scale`` and other driver-owned scalars are excluded — the
+    plain arm never touches them)."""
+    pa = {k: a[k] for k in ("params", "opt", "step")}
+    pb = {k: b[k] for k in ("params", "opt", "step")}
+    if (jax.tree_util.tree_structure(pa) != jax.tree_util.tree_structure(pb)):
+        return False
+    la = jax.tree_util.tree_leaves(pa)
+    lb = jax.tree_util.tree_leaves(pb)
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(la, lb))
+
+
+def robustness(step, make_state, batch_fn, n_steps, plan_args) -> dict:
+    plain = _plain_run(step, make_state, batch_fn, n_steps)
+
+    with tempfile.TemporaryDirectory(prefix="bench_ff_") as d:
+        ff = tfaults.run_chaos(step, make_state, batch_fn, None, n_steps, d,
+                               ckpt_every=CKPT_EVERY,
+                               spike_warmup=SPIKE_WARMUP)
+    parity = ff["state"] is not None and _bit_parity(plain, ff["state"])
+
+    plan = tfaults.chaos_train_plan(n_steps=n_steps, **plan_args)
+    with tempfile.TemporaryDirectory(prefix="bench_chaos_") as d:
+        ch = tfaults.run_chaos(step, make_state, batch_fn, plan, n_steps, d,
+                               ckpt_every=CKPT_EVERY,
+                               spike_warmup=SPIKE_WARMUP)
+
+    return {
+        "plan": plan.describe(),
+        "invariant_violations": len(ch["violations"]),
+        "violations": ch["violations"],
+        "fault_free_violations": len(ff["violations"]),
+        "fault_free_bit_parity": bool(parity),
+        "chaos_completed": ch["result"] is not None,
+        "final_loss_finite": bool(np.isfinite(ch["final_loss"])),
+        "final_loss": float(ch["final_loss"]),
+        "segments": ch["segments"],
+        "crashes": ch["crashes"],
+        "resumes": ch["resumes"],
+        "rollbacks": ch["rollbacks"],
+        "skipped_steps": ch["skipped"],
+        "replayed_steps": ch["replayed_steps"],
+        "steps_seen": ch["steps_seen"],
+        "saves": ch["saves"],
+        "corrupted_saves": ch["corrupted_saves"],
+        "quarantined": ch["quarantined"],
+    }
+
+
+def main(fast: bool = False, tiny: bool = False, json_dir: str = None):
+    step, make_state, batch_fn, n_steps, plan_args, config = _setup(
+        tiny or fast)
+    rob = robustness(step, make_state, batch_fn, n_steps, plan_args)
+    rec = {
+        "bench": "train_robustness",
+        "backend": jax.default_backend(),
+        "config": config,
+        "robustness": rob,
+        "note": ("all counters are deterministic (seeded plan + seeded "
+                 "data + prefetch=0): check_regression.py gates them at "
+                 "zero tolerance; violations/parity are the acceptance "
+                 "bar itself"),
+    }
+    emit("train_chaos_violations", 0.0, f"n={rob['invariant_violations']}")
+    emit("train_chaos_recovery", 0.0,
+         f"skips={rob['skipped_steps']} rollbacks={rob['rollbacks']} "
+         f"resumes={rob['resumes']} quarantined={rob['quarantined']}")
+    emit("train_fault_free_parity", 0.0,
+         f"bit_identical={rob['fault_free_bit_parity']}")
+
+    # the acceptance bar holds regardless of baselines
+    assert rob["invariant_violations"] == 0, rob["violations"]
+    assert rob["fault_free_violations"] == 0
+    assert rob["fault_free_bit_parity"], \
+        "fault-free chaos replay diverged from the plain run"
+    assert rob["chaos_completed"] and rob["final_loss_finite"]
+    # the plan must actually exercise every recovery tier
+    for tier in ("skipped_steps", "rollbacks", "resumes", "quarantined"):
+        assert rob[tier] >= 1, f"chaos plan exercised no {tier}"
+
+    if json_dir is not None:
+        print(f"wrote {write_bench_json('train', rec, json_dir)}")
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: 1-layer model, 18 chaos steps")
+    ap.add_argument("--json-dir", default=None,
+                    help="write BENCH_train.json into this directory")
+    a = ap.parse_args()
+    main(fast=a.fast, tiny=a.tiny, json_dir=a.json_dir)

@@ -119,6 +119,29 @@ METRICS = {
         Metric("scheduler_robustness.overload_shed_on.deadline_hit_rate",
                "higher"),
     ],
+    "train": [
+        # training chaos replay (ISSUE 8): seeded fault plan + seeded
+        # data + prefetch=0 make every counter deterministic on a fixed
+        # backend — zero tolerance.  The invariant/parity columns are
+        # the acceptance bar: any audit violation, a fault-free replay
+        # that is not bit-identical to the plain run, or a chaos run
+        # that does not finish with a finite loss fails CI outright.
+        Metric("robustness.invariant_violations", "lower"),
+        Metric("robustness.fault_free_violations", "lower"),
+        Metric("robustness.fault_free_bit_parity", "true"),
+        Metric("robustness.chaos_completed", "true"),
+        Metric("robustness.final_loss_finite", "true"),
+        # recovery-tier coverage: the plan must keep exercising skip,
+        # rollback, resume and quarantine — a "green" chaos run that
+        # stopped injecting faults is not a robustness proof
+        Metric("robustness.skipped_steps", "higher"),
+        Metric("robustness.rollbacks", "higher"),
+        Metric("robustness.resumes", "higher"),
+        Metric("robustness.crashes", "higher"),
+        Metric("robustness.quarantined", "higher"),
+        Metric("robustness.saves", "higher"),
+        Metric("robustness.replayed_steps", "higher"),
+    ],
     "opt_step": [
         Metric("structural.fused_passes_per_leaf", "lower"),
         Metric("structural.unfused_passes_per_leaf", "lower"),
@@ -137,6 +160,7 @@ CONFIG_KEYS = {
               "scheduler_robustness.est_tok_per_s",
               "scheduler_robustness.n_requests"],
     "opt_step": ["structural.leaf_shape", "structural.n_leaves"],
+    "train": ["config"],
 }
 
 

@@ -27,7 +27,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_fp4, bench_kernels, bench_lm_quant, bench_opt_step,
-                   bench_penalty_placement, bench_quadratic, bench_twolayer)
+                   bench_penalty_placement, bench_quadratic,
+                   bench_train_robustness, bench_twolayer)
 
     benches = {
         "kernels": bench_kernels.main,
@@ -38,6 +39,9 @@ def main() -> None:
         "penalty_placement": (
             lambda: bench_penalty_placement.main(fast=args.fast)),
         "opt_step": (lambda: bench_opt_step.main(fast=args.fast)),
+        # registered as "train" so the JSON artifact lands as
+        # BENCH_train.json — the name check_regression.py gates
+        "train": (lambda: bench_train_robustness.main(fast=args.fast)),
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

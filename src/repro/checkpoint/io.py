@@ -10,7 +10,17 @@ Design (scaled-down from a multi-host production layout, same invariants):
   checkpoint is never visible: restore only trusts directories whose
   manifest exists and verifies;
 * rotation keeps the newest K checkpoints (never deleting the one being
-  written);
+  written, and never the one just published even when ``keep`` would drop
+  it — a crash-recovery save of an OLD step must survive its own rotation);
+* stale ``*.tmp`` directories from a killed save are invisible to restore
+  (the step regex only matches published names) and swept by the next
+  ``save`` into the same directory;
+* **trust rules on restore** (DESIGN.md §11): ``load`` verifies per-leaf
+  crc32 against the manifest and raises the typed
+  :class:`CorruptCheckpointError` on any mismatch or unreadable payload;
+  :func:`latest_valid` walks checkpoints newest-first, returns the first
+  fully verifying step and (optionally) *quarantines* corrupt ones by
+  renaming ``step_X -> step_X.corrupt`` so they are never retried;
 * **elastic resharding on load**: leaves are restored as host arrays and
   re-placed with any target sharding (different mesh shape / device count
   than at save time) via ``load(..., shardings=...)``.
@@ -21,16 +31,23 @@ Quantized-storage trees round-trip natively: a
 serving checkpoint stores the int4/int8 codes themselves (manifest
 records the uint8/int8 dtypes and the static layout meta lives in the
 treedef of the ``like`` template at restore).
+
+For fault-injection tests, :func:`write_fault_hook` installs a process-
+wide hook that ``save`` calls at each write stage (``"payload"``,
+``"manifest"``, ``"publish"``, ``"done"``) — the chaos harness uses it to
+kill a save mid-write or corrupt a just-published payload without
+monkey-patching the filesystem.
 """
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import re
 import shutil
 import zlib
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import numpy as np
@@ -38,6 +55,37 @@ import numpy as np
 MANIFEST = "manifest.json"
 PAYLOAD = "arrays.npz"
 _STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CorruptCheckpointError(IOError):
+    """A checkpoint directory exists but fails verification (crc mismatch,
+    truncated/unreadable payload, or manifest/payload leaf mismatch)."""
+
+
+# write-stage fault hook (chaos harness seam); None in production
+_write_hook: Optional[Callable[[str, str], None]] = None
+
+
+@contextlib.contextmanager
+def write_fault_hook(hook: Callable[[str, str], None]):
+    """Install ``hook(stage, path)`` for the duration of the context.
+    Stages, in order per save: ``payload`` (before the npz write, path =
+    tmp dir), ``manifest`` (before the manifest write, path = tmp dir),
+    ``publish`` (before the atomic rename, path = tmp dir), ``done``
+    (after publish + rotation, path = final dir).  The hook may raise to
+    emulate a crash at that point."""
+    global _write_hook
+    prev = _write_hook
+    _write_hook = hook
+    try:
+        yield
+    finally:
+        _write_hook = prev
+
+
+def _stage(stage: str, path: str) -> None:
+    if _write_hook is not None:
+        _write_hook(stage, path)
 
 
 def _paths_and_leaves(tree):
@@ -56,12 +104,17 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    # sweep ALL stale tmp/displaced dirs (ours and any left by a killed
+    # save of a different step) — they hold no trusted data by
+    # construction (neither suffix matches the step regex)
+    for d in os.listdir(ckpt_dir):
+        if d.endswith(".tmp") or d.endswith(".old"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
     os.makedirs(tmp)
 
     items, _ = _paths_and_leaves(tree)
     arrays = {k: np.asarray(v) for k, v in items}
+    _stage("payload", tmp)
     np.savez(os.path.join(tmp, PAYLOAD), **arrays)
     manifest = {
         "step": step,
@@ -69,16 +122,36 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
                        "crc32": zlib.crc32(np.ascontiguousarray(a).tobytes())}
                    for k, a in arrays.items()},
     }
+    _stage("manifest", tmp)
     with open(os.path.join(tmp, MANIFEST), "w") as f:
         json.dump(manifest, f)
-    os.replace(tmp, final)      # atomic publish
-    _rotate(ckpt_dir, keep)
+    _stage("publish", tmp)
+    if os.path.isdir(final):
+        # re-save of an existing step (a rollback replay with LR backoff
+        # walks past the same boundary with a DIFFERENT trajectory):
+        # os.replace cannot clobber a non-empty dir, so displace the old
+        # one to an untrusted name first.  At any crash point either the
+        # old or the new version is the only visible ``step_X`` — a
+        # half-state is never trusted (.old fails the step regex).
+        trash = final + ".old"
+        shutil.rmtree(trash, ignore_errors=True)
+        os.rename(final, trash)
+        os.replace(tmp, final)  # atomic publish
+        shutil.rmtree(trash, ignore_errors=True)
+    else:
+        os.replace(tmp, final)  # atomic publish
+    _rotate(ckpt_dir, keep, protect=os.path.basename(final))
+    _stage("done", final)
     return final
 
 
-def _rotate(ckpt_dir: str, keep: int) -> None:
+def _rotate(ckpt_dir: str, keep: int, protect: Optional[str] = None) -> None:
     steps = sorted(d for d in os.listdir(ckpt_dir) if _STEP_RE.match(d))
     for d in steps[:-keep] if keep > 0 else []:
+        if d == protect:
+            # never delete the checkpoint this very save just published —
+            # a crash-recovery save of an old step outranks rotation
+            continue
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
@@ -93,6 +166,67 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return best
 
 
+def verify_dir(d: str) -> bool:
+    """True iff the checkpoint directory fully verifies: readable
+    manifest, readable payload, and every manifest leaf present with
+    matching shape/dtype/crc32."""
+    try:
+        with open(os.path.join(d, MANIFEST)) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(d, PAYLOAD)) as payload:
+            names = set(payload.files)
+            for key, meta in manifest["leaves"].items():
+                if key not in names:
+                    return False
+                a = payload[key]
+                if (list(a.shape) != list(meta["shape"])
+                        or str(a.dtype) != meta["dtype"]):
+                    return False
+                crc = zlib.crc32(np.ascontiguousarray(a).tobytes())
+                if crc != meta["crc32"]:
+                    return False
+        return True
+    except Exception:
+        # unreadable manifest / truncated zip / bad entry — all untrusted
+        return False
+
+
+def quarantine(path: str) -> str:
+    """Rename a corrupt checkpoint dir out of the trusted namespace
+    (``step_X -> step_X.corrupt``); returns the new path.  Quarantined
+    dirs no longer match the step regex, so restore and rotation both
+    skip them — kept on disk for post-mortem."""
+    dst = path + ".corrupt"
+    n = 0
+    while os.path.exists(dst):
+        n += 1
+        dst = f"{path}.corrupt{n}"
+    os.rename(path, dst)
+    return dst
+
+
+def latest_valid(ckpt_dir: str, quarantine_corrupt: bool = False
+                 ) -> Optional[int]:
+    """Newest step whose checkpoint fully verifies (crc per leaf), or
+    None.  Corrupt candidates are skipped (and renamed to ``*.corrupt``
+    when ``quarantine_corrupt`` — so a later save never rotates around a
+    poisoned dir and no restore retries it)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    found = []
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(d)
+        if m:
+            found.append((int(m.group(1)), d))
+    for step, d in sorted(found, reverse=True):
+        path = os.path.join(ckpt_dir, d)
+        if verify_dir(path):
+            return step
+        if quarantine_corrupt:
+            quarantine(path)
+    return None
+
+
 def load(ckpt_dir: str, like, step: Optional[int] = None,
          shardings=None, verify: bool = True):
     """Restore the pytree structured like ``like``.
@@ -100,6 +234,11 @@ def load(ckpt_dir: str, like, step: Optional[int] = None,
     ``shardings`` (a pytree of jax.sharding.Sharding matching ``like``, or
     a single sharding) re-places every leaf — this is the elastic-restart
     path: the saved topology does not constrain the restore topology.
+
+    With ``verify=True`` (default) every leaf's crc32 is checked against
+    the manifest; any mismatch or unreadable payload raises
+    :class:`CorruptCheckpointError` (an ``IOError``).  ``verify=False``
+    skips the crc pass for callers that already ran :func:`latest_valid`.
     """
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
@@ -107,21 +246,37 @@ def load(ckpt_dir: str, like, step: Optional[int] = None,
     d = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(d, MANIFEST)) as f:
         manifest = json.load(f)
-    payload = np.load(os.path.join(d, PAYLOAD))
+    try:
+        payload = np.load(os.path.join(d, PAYLOAD))
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"unreadable checkpoint payload in {d}: {e}") from e
 
     items, treedef = _paths_and_leaves(like)
     leaves = []
-    for key, ref in items:
-        if key not in manifest["leaves"]:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        a = payload[key]
-        meta = manifest["leaves"][key]
-        if verify and zlib.crc32(np.ascontiguousarray(a).tobytes()) != meta["crc32"]:
-            raise IOError(f"crc mismatch for {key!r} — corrupt checkpoint")
-        if tuple(a.shape) != tuple(np.shape(ref)):
-            raise ValueError(f"shape mismatch for {key!r}: "
-                             f"{a.shape} vs {np.shape(ref)}")
-        leaves.append(a)
+    with payload:
+        for key, ref in items:
+            if key not in manifest["leaves"]:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            try:
+                a = payload[key]
+            except KeyError:
+                raise CorruptCheckpointError(
+                    f"manifest leaf {key!r} missing from payload in {d}")
+            except Exception as e:
+                raise CorruptCheckpointError(
+                    f"unreadable leaf {key!r} in {d}: {e}") from e
+            meta = manifest["leaves"][key]
+            if verify:
+                crc = zlib.crc32(np.ascontiguousarray(a).tobytes())
+                if crc != meta["crc32"]:
+                    raise CorruptCheckpointError(
+                        f"crc mismatch for {key!r} — corrupt checkpoint "
+                        f"in {d}")
+            if tuple(a.shape) != tuple(np.shape(ref)):
+                raise ValueError(f"shape mismatch for {key!r}: "
+                                 f"{a.shape} vs {np.shape(ref)}")
+            leaves.append(a)
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:
         tree = jax.device_put(tree, shardings)

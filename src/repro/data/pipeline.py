@@ -5,6 +5,13 @@ Wraps a counter-based generator (see synthetic.py) into an iterator that
 with a given sharding (multi-host: each host computes only its addressable
 slice — the generator is indexed by (step, host_slice)), and (3) overlaps
 host-side generation with device compute via a one-deep prefetch thread.
+
+A ``batch_fn``/``device_put`` exception inside the prefetch worker does
+NOT die silently: it is enqueued in stream order and re-raised from
+``__next__`` on the consumer thread at the exact step it occurred (the
+consumer used to hang forever on an empty queue).  After the raise the
+pipeline is reset, so a retry (or a ``seek``) restarts the worker
+cleanly.
 """
 
 from __future__ import annotations
@@ -14,6 +21,16 @@ import threading
 from typing import Callable, Iterator, Optional
 
 import jax
+
+
+class _WorkerFailure:
+    """Sentinel carrying an exception from the prefetch worker to the
+    consumer thread (enqueued at the step where generation failed)."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
 
 
 class DataPipeline:
@@ -46,10 +63,18 @@ class DataPipeline:
         s = from_step
         while not self._stop.is_set():
             try:
-                self._q.put((s, self._make(s)), timeout=0.1)
-                s += 1
-            except queue.Full:
-                continue
+                item = self._make(s)
+            except BaseException as e:  # surfaced on the consumer thread
+                item = _WorkerFailure(e)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((s, item), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            if isinstance(item, _WorkerFailure):
+                return              # worker exits at the failing step
+            s += 1
 
     def _halt_worker(self):
         if self._thread is not None:
@@ -70,6 +95,13 @@ class DataPipeline:
                     target=self._worker, args=(self._step,), daemon=True)
                 self._thread.start()
             s, batch = self._q.get()
+            if isinstance(batch, _WorkerFailure):
+                # worker died at step s; reset so a retry/seek restarts it
+                self._thread.join()
+                self._thread = None
+                while not self._q.empty():
+                    self._q.get_nowait()
+                raise batch.exc
             assert s == self._step, f"pipeline desync: {s} != {self._step}"
         else:
             batch = self._make(self._step)

@@ -25,11 +25,11 @@ from repro.kernels.lotion_reg.ops import _interpret, _to_2d
 from .opt_step import N_SCALARS, opt_step_pallas
 
 
-def _scalars_row(lr, bc1, bc2, clip_scale, scale):
+def _scalars_row(lr, bc1, bc2, clip_scale, scale, ok=1.0):
     row = jnp.stack([
         jnp.asarray(lr, jnp.float32), jnp.asarray(bc1, jnp.float32),
         jnp.asarray(bc2, jnp.float32), jnp.asarray(clip_scale, jnp.float32),
-        jnp.asarray(scale, jnp.float32)])
+        jnp.asarray(scale, jnp.float32), jnp.asarray(ok, jnp.float32)])
     return jnp.concatenate(
         [row, jnp.zeros((N_SCALARS - row.shape[0],), jnp.float32)]
     ).reshape(1, N_SCALARS)
@@ -40,7 +40,7 @@ def fused_opt_step_leaf(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
                         b1: float, b2: float, eps: float,
                         weight_decay: float, core: str = "adamw",
                         momentum: float = 0.0, fisher_decay=None,
-                        interpret=None):
+                        ok=None, interpret=None):
     """One fused (clip + LOTION + AdamW/SGD) step for one leaf.
 
     Returns ``(new_w, new_mu, new_nu, pen)`` with ``pen`` the UNSCALED
@@ -48,8 +48,13 @@ def fused_opt_step_leaf(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
     ``clip_scale`` are traced step scalars; everything else is static.
     ``core="sgd"`` ignores b1/b2/eps/weight_decay/bc* and uses
     ``momentum``/``fisher_decay`` instead (pass ``bc1=bc2=1.0``).
+    ``ok`` (traced 0/1 scalar, default 1) is the non-finite guard: 0
+    makes the kernel write (w, mu, nu) back unchanged — the skip path of
+    a poisoned step, gated INSIDE the kernel so no extra HBM pass exists
+    on either branch.
     """
     interpret = _interpret() if interpret is None else interpret
+    ok = 1.0 if ok is None else ok
     fmt = get_format(fmt_name)
     fp4 = isinstance(fmt, CodebookFormat)
     qmax = 6.0 if fp4 else float(fmt.qmax)
@@ -62,7 +67,7 @@ def fused_opt_step_leaf(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
     def run_2d(c_width, scale, penalty_mode, args):
         tiled = [_to_2d(x, c_width) for x in args]
         n_pad = tiled[0][1]
-        scalars = _scalars_row(lr, bc1, bc2, clip_scale, scale)
+        scalars = _scalars_row(lr, bc1, bc2, clip_scale, scale, ok)
         w2, mu2, nu2, pen = opt_step_pallas(
             tiled[0][0], tiled[1][0], tiled[2][0], tiled[3][0], scalars,
             block_size=(block_size if penalty_mode == "block" else -1),
@@ -95,7 +100,7 @@ def fused_opt_step_leaf(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
                 clip_scale=clip_scale, lam=lam, fmt_name=fmt_name,
                 block_size=-1, b1=b1, b2=b2, eps=eps,
                 weight_decay=weight_decay, core=core, momentum=momentum,
-                fisher_decay=fisher_decay, interpret=interpret)
+                fisher_decay=fisher_decay, ok=ok, interpret=interpret)
 
         nw, nm, nn, pens = jax.vmap(one)(*mats)
         return (nw.reshape(shape), nm.reshape(shape), nn.reshape(shape),

@@ -21,9 +21,17 @@ the same math (mu EMA, nu EMA, AdamW step, weight decay, penalty grad,
 clip multiply, apply_updates, penalty value), which is the whole cost
 of the optimizer step in the paper's memory-bound 150M/300M LM regime.
 
-Step scalars (lr, bias corrections, the clip scale and the per-matrix
-quant scale) arrive as one prefetched (1, 8) operand, the same pattern
-``lotion_reg`` uses for its precomputed scale.
+Step scalars (lr, bias corrections, the clip scale, the per-matrix
+quant scale and the step-ok guard flag) arrive as one prefetched (1, 8)
+operand, the same pattern ``lotion_reg`` uses for its precomputed scale.
+
+``scalars[SC_OK]`` is the on-device non-finite guard (DESIGN.md §11):
+when 0 the kernel still makes its one read pass but writes back the
+INPUT (w, mu, nu) unchanged — a poisoned step (NaN/inf loss or gnorm)
+applies no update without any extra HBM pass, and without the host ever
+having to inspect the gradients.  The select is elementwise in VMEM
+(``jnp.where`` on the already-loaded tiles), so the kernel's DMA
+contract (reads/writes per tile) is untouched.
 
 Penalty modes (static):
 * ``"scalar"`` — per-matrix scale passed in ``scalars[SC_SCALE]``
@@ -47,7 +55,7 @@ from repro.kernels.lotion_reg.lotion_reg import (_blockwise_neighbors,
                                                 _neighbors_int)
 
 # scalar-operand layout (one (1, 8) f32 row, lane-aligned)
-SC_LR, SC_BC1, SC_BC2, SC_CLIP, SC_SCALE = 0, 1, 2, 3, 4
+SC_LR, SC_BC1, SC_BC2, SC_CLIP, SC_SCALE, SC_OK = 0, 1, 2, 3, 4, 5
 N_SCALARS = 8
 
 
@@ -84,7 +92,7 @@ def _opt_kernel(w_ref, g_ref, mu_ref, nu_ref, sc_ref,
         mu2 = b1 * mu + (1 - b1) * g
         nu2 = b2 * nu + (1 - b2) * g * g
         upd = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + eps)
-        w_out[...] = (w - lr * (upd + wd * w)).astype(w_out.dtype)
+        new_w = w - lr * (upd + wd * w)
     else:  # "sgd": the paper's synthetic-experiment optimizer — nu is a
         # pure Fisher EMA (LOTION's f), never a step denominator
         nu2 = (fisher_decay * nu + (1 - fisher_decay) * g * g
@@ -95,9 +103,13 @@ def _opt_kernel(w_ref, g_ref, mu_ref, nu_ref, sc_ref,
         else:
             mu2 = mu
             step = g
-        w_out[...] = (w - lr * step).astype(w_out.dtype)
-    mu_out[...] = mu2.astype(mu_out.dtype)
-    nu_out[...] = nu2.astype(nu_out.dtype)
+        new_w = w - lr * step
+    # non-finite guard: ok=0 writes the inputs back untouched (NaN/inf in
+    # the untaken branch is discarded by the select, never stored)
+    ok = sc_ref[0, SC_OK] != 0.0
+    w_out[...] = jnp.where(ok, new_w, w).astype(w_out.dtype)
+    mu_out[...] = jnp.where(ok, mu2, mu).astype(mu_out.dtype)
+    nu_out[...] = jnp.where(ok, nu2, nu).astype(nu_out.dtype)
 
 
 def opt_step_pallas(w2d, g2d, mu2d, nu2d, scalars, *,
@@ -111,7 +123,8 @@ def opt_step_pallas(w2d, g2d, mu2d, nu2d, scalars, *,
     """Fused step over a 2-D leaf view.
 
     Returns ``(new_w (R, C), new_mu, new_nu, pen_partials (gm, gn))``;
-    ``scalars`` is the (1, 8) [lr, bc1, bc2, clip_scale, scale, ...] row.
+    ``scalars`` is the (1, 8) [lr, bc1, bc2, clip_scale, scale, ok, ...]
+    row (``ok`` = the non-finite guard flag; 0 freezes w/mu/nu in-kernel).
     """
     R, C = w2d.shape
     tile_n = min(tile_n, C)

@@ -22,10 +22,12 @@ def opt_step_ref(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
                  lam: float, fmt_name: str, block_size: int,
                  b1: float, b2: float, eps: float,
                  weight_decay: float, core: str = "adamw",
-                 momentum: float = 0.0, fisher_decay=None) -> Tuple:
+                 momentum: float = 0.0, fisher_decay=None,
+                 ok=None) -> Tuple:
     """Returns ``(new_w, new_mu, new_nu, pen)``; ``pen`` is the UNSCALED
     penalty value (multiply by ``lam`` for the loss-side number), 0 when
-    ``lam == 0`` (non-eligible leaves / no regularizer)."""
+    ``lam == 0`` (non-eligible leaves / no regularizer).  ``ok`` mirrors
+    the kernel's non-finite guard: 0 returns (w, mu, nu) unchanged."""
     g = g * clip_scale
     if lam != 0.0:
         pen, grad = lotion_penalty_and_grad(
@@ -48,4 +50,9 @@ def opt_step_ref(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
             mu2 = mu
             step = g
         new_w = w - lr * step
+    if ok is not None:
+        keep = jnp.asarray(ok, jnp.float32) != 0.0
+        new_w = jnp.where(keep, new_w, w)
+        mu2 = jnp.where(keep, mu2, mu)
+        nu2 = jnp.where(keep, nu2, nu)
     return new_w, mu2, nu2, pen.astype(jnp.float32)

@@ -13,7 +13,9 @@ dry-run IS this launcher minus execution.
 from __future__ import annotations
 
 import argparse
+import math
 import os
+import tempfile
 
 # allow forcing host devices for local multi-device runs (must precede jax)
 if os.environ.get("REPRO_FORCE_DEVICES"):
@@ -25,7 +27,6 @@ if os.environ.get("REPRO_FORCE_DEVICES"):
 import jax  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro import checkpoint as ckpt  # noqa: E402
 from repro.configs import get_config, get_smoke_config  # noqa: E402
 from repro.core import QuantConfig, QuantPolicy  # noqa: E402
 from repro.data import DataPipeline, lm_batch, permutation_table  # noqa: E402
@@ -54,7 +55,16 @@ def main():
     ap.add_argument("--placement", default=None,
                     choices=["loss", "decoupled"],
                     help="LOTION penalty placement (default: decoupled)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the training chaos harness (seeded faults "
+                         "+ per-step invariant audit, train/faults.py) "
+                         "instead of a plain run; exits nonzero on any "
+                         "audit violation")
+    ap.add_argument("--chaos-seed", type=int, default=1)
     args = ap.parse_args()
+    if args.chaos and args.microbatches != 1:
+        ap.error("--chaos requires --microbatches 1 (the poison scalar "
+                 "is per batch)")
 
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split("x"))
@@ -81,26 +91,70 @@ def main():
                         if cfg.n_codebooks > 1 else P(("data",), None, "model")),
                     head_in=NamedSharding(mesh, P(("data",), None, None)))
 
+    perm = permutation_table(0, cfg.vocab)
+
+    def batch_fn(s):
+        return lm_batch(0, s, args.batch, args.seq, cfg.vocab, perm,
+                        n_codebooks=cfg.n_codebooks)
+
     with mesh:
+        if args.chaos:
+            # chaos drive: fresh state per segment (the harness emulates
+            # a supervisor restarting a killed job), loss carries the
+            # poison seam, faults and audits run through public hooks
+            from repro.train import faults as tfaults
+
+            def make_state():
+                return jax.jit(
+                    lambda k: init_state(lm_init(k, cfg), opt,
+                                         lr_scale=True),
+                    out_shardings={**state_sh,
+                                   "lr_scale": None})(jax.random.PRNGKey(0))
+
+            step = make_train_step(
+                cfg, tcfg, opt, grad_shardings=state_sh["params"],
+                loss_fn=tfaults.chaos_loss_fn(cfg, tcfg))
+            plan = tfaults.chaos_train_plan(args.chaos_seed,
+                                            n_steps=args.steps)
+            ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(
+                prefix="chaos_train_")
+            print(f"chaos: {plan.describe()} ckpt_dir={ckpt_dir}")
+            summary = tfaults.run_chaos(
+                step, make_state, batch_fn, plan, args.steps, ckpt_dir,
+                log=print)
+            counters = {k: summary[k] for k in
+                        ("segments", "crashes", "resumes", "rollbacks",
+                         "skipped", "replayed_steps", "saves",
+                         "quarantined")}
+            print(f"chaos done: violations={len(summary['violations'])} "
+                  f"{counters} final_loss={summary['final_loss']:.4f}")
+            for v in summary["violations"]:
+                print(f"  VIOLATION: {v}")
+            ok = (not summary["violations"]
+                  and summary["result"] is not None
+                  and math.isfinite(summary["final_loss"]))
+            raise SystemExit(0 if ok else 1)
+
         params = jax.jit(lambda k: init_state(lm_init(k, cfg), opt),
                          out_shardings=state_sh)(jax.random.PRNGKey(0))
         step = make_train_step(cfg, tcfg, opt,
                                grad_shardings=state_sh["params"])
-        perm = permutation_table(0, cfg.vocab)
         batch_abs = sp.train_batch_specs(cfg, args.batch, args.seq)
         batch_sh = train_batch_shardings(mesh, batch_abs, args.batch)
-        pipe = DataPipeline(
-            lambda s: lm_batch(0, s, args.batch, args.seq, cfg.vocab, perm,
-                               n_codebooks=cfg.n_codebooks),
-            sharding=batch_sh, prefetch=1)
+        pipe = DataPipeline(batch_fn, sharding=batch_sh, prefetch=1)
         hooks = {}
         if args.ckpt_dir:
-            hooks = dict(ckpt_every=max(args.steps // 2, 1),
-                         ckpt_hook=lambda st: ckpt.save(
-                             args.ckpt_dir, int(st["step"]), st))
+            # the loop's own atomic checkpointing + crash-exact restart
+            # (DESIGN.md §11): re-running the same command after a kill
+            # resumes from the newest CRC-verified checkpoint
+            hooks = dict(ckpt_dir=args.ckpt_dir,
+                         ckpt_every=max(args.steps // 2, 1),
+                         auto_resume=True)
         out = run_loop(step, params, pipe, args.steps, log_every=5, **hooks)
         print(f"done: {int(out['state']['step'])} steps on mesh "
-              f"{dict(mesh.shape)} devices={mesh.size}")
+              f"{dict(mesh.shape)} devices={mesh.size} "
+              f"skipped={out['skipped']} rollbacks={out['rollbacks']} "
+              f"resumed_from={out['resumed_from']}")
         pipe.close()
 
 

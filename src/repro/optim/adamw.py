@@ -55,7 +55,7 @@ def adamw_core(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
             "count": jnp.zeros((), jnp.int32),
         }
 
-    def update(grads, state, params=None, **_):
+    def update(grads, state, params=None, **extras):
         count = state["count"] + 1
         mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
         nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
@@ -63,6 +63,10 @@ def adamw_core(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         bc1 = 1 - b1 ** c
         bc2 = 1 - b2 ** c
         lr = lr_fn(count)
+        # transient LR backoff (run_loop spike-rollback cooldown): a
+        # traced scalar so cooldown entry/exit never recompiles
+        if extras.get("lr_scale") is not None:
+            lr = lr * extras["lr_scale"]
 
         def step(p, m, v):
             upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
@@ -97,9 +101,11 @@ def sgd_core(lr_fn, momentum: float = 0.0,
             st["nu"] = jax.tree.map(jnp.zeros_like, params)
         return st
 
-    def update(grads, state, params=None, **_):
+    def update(grads, state, params=None, **extras):
         count = state["count"] + 1
         lr = lr_fn(count)
+        if extras.get("lr_scale") is not None:
+            lr = lr * extras["lr_scale"]
         new_state = {"count": count}
         if momentum:
             mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)

@@ -69,10 +69,21 @@ def _fused_core(kind: str, lr_fn, *, b1: float, b2: float, eps: float,
             st["penalty"] = jnp.zeros((), jnp.float32)
         return st
 
-    def update(grads, state, params=None, **_):
+    def update(grads, state, params=None, **extras):
         if params is None:
             raise ValueError(f"fused_lotion_{kind}_core needs params")
         norm = global_norm(grads)
+        # non-finite guard (DESIGN.md §11): a poisoned step (non-finite
+        # gnorm, or the train step's loss flag via the step_ok extra)
+        # must apply NO update.  The gate rides INSIDE the step kernel
+        # as the SC_OK scalar — w/mu/nu are written back unchanged with
+        # zero extra HBM passes — and count is frozen here so the bias
+        # corrections and lr schedule replay identically after a skip.
+        ok = jnp.isfinite(norm)
+        step_ok = extras.get("step_ok")
+        if step_ok is not None:
+            ok = jnp.logical_and(ok, step_ok)
+        okf = ok.astype(jnp.float32)
         cscale = clip_scale(norm, clip_norm)
         count = state["count"] + 1
         if kind == "adamw":
@@ -82,6 +93,11 @@ def _fused_core(kind: str, lr_fn, *, b1: float, b2: float, eps: float,
         else:
             bc1 = bc2 = jnp.ones((), jnp.float32)
         lr = lr_fn(count)
+        # transient LR backoff (spike-rollback cooldown) — a pure scalar
+        # multiply, so it costs nothing fused into the kernel's lr slot
+        lr_scale = extras.get("lr_scale")
+        if lr_scale is not None:
+            lr = lr * lr_scale
 
         if use_kernel:
             from repro.kernels.opt_step import fused_opt_step_leaf as leaf_fn
@@ -96,7 +112,8 @@ def _fused_core(kind: str, lr_fn, *, b1: float, b2: float, eps: float,
                 w, g, m, n, lr=lr, bc1=bc1, bc2=bc2, clip_scale=cscale,
                 lam=leaf_lam, fmt_name=fmt_name, block_size=block_size,
                 b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
-                core=kind, momentum=momentum, fisher_decay=fisher_decay)
+                core=kind, momentum=momentum, fisher_decay=fisher_decay,
+                ok=okf)
             if leaf_lam != 0.0:
                 pens.append(pen.astype(jnp.float32))
             return (new_w, new_m, new_n)
@@ -109,11 +126,16 @@ def _fused_core(kind: str, lr_fn, *, b1: float, b2: float, eps: float,
                               is_leaf=lambda t: isinstance(t, tuple))
         new_nu = jax.tree.map(lambda t: t[2], out,
                               is_leaf=lambda t: isinstance(t, tuple))
-        new_state = {"mu": new_mu, "nu": new_nu, "count": count,
-                     "gnorm": norm}
+        # the metric scalars are gated like everything else: a skipped
+        # step must leave the WHOLE opt state bit-identical (the chain
+        # path gets the same via the train step's tree-wide select)
+        new_state = {"mu": new_mu, "nu": new_nu,
+                     "count": jnp.where(ok, count, state["count"]),
+                     "gnorm": jnp.where(ok, norm, state["gnorm"])}
         if lam != 0.0:
-            new_state["penalty"] = (lam * jnp.sum(jnp.stack(pens)) if pens
-                                    else jnp.zeros((), jnp.float32))
+            pen = (lam * jnp.sum(jnp.stack(pens)) if pens
+                   else jnp.zeros((), jnp.float32))
+            new_state["penalty"] = jnp.where(ok, pen, state["penalty"])
         return new_params, new_state
 
     def fisher(state):

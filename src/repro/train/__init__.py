@@ -1,10 +1,15 @@
-"""Training substrate: step construction, quantized eval, driver loop."""
+"""Training substrate: step construction, quantized eval, self-healing
+driver loop, and the training chaos harness."""
 
 from .compress import ef_compress, ef_transform, wire_bytes
+from .guard import (InjectedCrash, NonFiniteBudgetError, RollbackBudgetError,
+                    SpikeMonitor)
 from .loop import (TrainConfig, cross_entropy, make_eval_fn, make_loss_fn,
                    make_optimizer, make_train_step, run_loop)
 from .state import init_state
 
 __all__ = ["TrainConfig", "make_train_step", "make_loss_fn", "make_eval_fn",
            "make_optimizer", "cross_entropy", "run_loop", "init_state",
-           "ef_compress", "ef_transform", "wire_bytes"]
+           "ef_compress", "ef_transform", "wire_bytes",
+           "SpikeMonitor", "NonFiniteBudgetError", "RollbackBudgetError",
+           "InjectedCrash"]

@@ -1,0 +1,413 @@
+"""Deterministic fault injection + per-step invariant audit for the
+TRAINING loop (DESIGN.md §11) — the training twin of ``serve/faults.py``.
+
+The loop's self-healing claims ("a poisoned step applies no update", "a
+crash resumes bit-exactly", "a corrupt checkpoint is quarantined, never
+restored") only mean something if they survive faults actually
+happening.  This module supplies both halves of that proof:
+
+* :func:`chaos_train_plan` builds a **seeded, fully deterministic**
+  schedule of faults.  Transient data faults (NaN/inf gradient poison,
+  finite loss blow-ups that trip the spike monitor, pipeline stalls) are
+  keyed by FETCH ORDINAL — the i-th batch ever fetched — not by step
+  index, modeling transient hardware/data glitches: a rollback replay of
+  the same step fetches a CLEAN batch, which is what makes recovery
+  possible and deterministic.  Crashes are keyed by step-hook ordinal
+  (the adversarial "after the step, before the checkpoint" point) and by
+  save ordinal at a chosen write stage (mid-checkpoint-write kill via
+  the :func:`repro.checkpoint.write_fault_hook` seam); checkpoint
+  payloads can additionally be bit-flipped or truncated AFTER a
+  successful publish so restore must quarantine and fall back.
+* :class:`TrainAuditor` audits every step of a chaos run through
+  ``run_loop``'s ``step_hook``: step monotonicity (a forward jump is
+  lost data; backward jumps must be attributable to a rollback or a
+  resume), opt/param tree-structure stability, the non-finite guard flag
+  actually raised on every non-finite loss, and skip/rollback counter
+  balance against ``run_loop``'s returned telemetry (one source of
+  truth, cross-checked).
+* :func:`run_chaos` drives segments of ``run_loop`` under a plan,
+  emulating a hard kill per injected crash (``InjectedCrash`` derives
+  from BaseException, so no recovery path can swallow it) and restarting
+  from scratch state + ``auto_resume`` — exactly what a supervisor
+  restarting a killed job does.
+
+Faults are injected only through public seams — the batch function, the
+step hook, and the checkpoint write hook — the chaos layer holds no
+private loop state and cannot itself desynchronize the thing it audits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.data import DataPipeline
+from repro.train.guard import InjectedCrash
+from repro.train.loop import make_loss_fn, run_loop
+
+
+@dataclasses.dataclass
+class TrainFaultPlan:
+    """One deterministic training chaos schedule.
+
+    ``nan_fetches``/``spike_fetches``/``stall_fetches`` are keyed by
+    fetch ordinal (transient faults — replays are clean);
+    ``crash_steps`` by step-hook ordinal; ``ckpt_crashes`` and
+    ``corrupt_saves`` by save ordinal (the i-th ``checkpoint.save`` of
+    the run, the eager anchor save being ordinal 0).
+    """
+
+    seed: int
+    # fetch ordinal -> poison scale multiplied into the loss (nan/inf:
+    # non-finite loss AND gradients via the cotangent)
+    nan_fetches: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # fetch ordinal -> large-but-finite loss blow-up (spike-monitor food)
+    spike_fetches: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # fetch ordinal -> host-side stall seconds (prefetch/timing jitter)
+    stall_fetches: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # step-hook ordinals at which the run is hard-killed (after the
+    # step, before the checkpoint boundary — the adversarial window)
+    crash_steps: frozenset = frozenset()
+    # save ordinal -> write stage ("payload"|"manifest"|"publish") at
+    # which the save is hard-killed mid-write
+    ckpt_crashes: Dict[int, str] = dataclasses.field(default_factory=dict)
+    # save ordinal -> "bitflip" | "truncate" applied AFTER publish: the
+    # newest checkpoint on disk is poisoned, restore must quarantine it
+    corrupt_saves: Dict[int, str] = dataclasses.field(default_factory=dict)
+
+    def describe(self) -> str:
+        return (f"TrainFaultPlan(seed={self.seed}, "
+                f"nans={len(self.nan_fetches)}, "
+                f"spikes={len(self.spike_fetches)}, "
+                f"stalls={len(self.stall_fetches)}, "
+                f"crashes={len(self.crash_steps)}, "
+                f"ckpt_crashes={len(self.ckpt_crashes)}, "
+                f"corrupt={len(self.corrupt_saves)})")
+
+
+def chaos_train_plan(seed: int, n_steps: int = 18,
+                     nan_rate: float = 0.12,
+                     spike_scale: float = 1e4, spike_len: int = 2,
+                     spike_at: Optional[int] = None,
+                     stall_rate: float = 0.08,
+                     n_crashes: int = 2,
+                     ckpt_crash_save: Optional[int] = 2,
+                     ckpt_crash_stage: str = "manifest",
+                     corrupt_save: Optional[int] = 3,
+                     corrupt_mode: str = "bitflip") -> TrainFaultPlan:
+    """Sample a :class:`TrainFaultPlan` from a seeded generator — same
+    arguments, same plan, machine-independent.
+
+    The skeleton is partly structured (one spike burst placed after the
+    monitor's warmup window; crash ordinals spread over the run
+    including the replay-inflated tail) so a default plan exercises
+    every recovery tier: skip, rollback, mid-write kill, quarantine.
+    """
+    rng = np.random.default_rng(seed)
+    plan = TrainFaultPlan(seed=seed)
+    for i in range(n_steps):
+        if rng.random() < nan_rate:
+            plan.nan_fetches[i] = (float("nan") if rng.random() < 0.5
+                                   else float("inf"))
+        if rng.random() < stall_rate:
+            plan.stall_fetches[i] = float(rng.uniform(0.005, 0.02))
+    # one sustained spike burst, placed past the monitor warmup
+    lo = max(2, n_steps // 2)
+    start = (spike_at if spike_at is not None
+             else int(rng.integers(lo, max(lo + 1, n_steps - spike_len))))
+    for j in range(spike_len):
+        plan.nan_fetches.pop(start + j, None)
+        plan.spike_fetches[start + j] = spike_scale
+    # crashes: hook ordinals keep counting across replays, so spread
+    # them past n_steps to also hit replayed regions
+    if n_crashes > 0:
+        hi = n_steps + n_steps // 2
+        picks = rng.choice(np.arange(3, hi), size=min(n_crashes, hi - 3),
+                           replace=False)
+        plan.crash_steps = frozenset(int(x) for x in picks)
+    if ckpt_crash_save is not None:
+        plan.ckpt_crashes[int(ckpt_crash_save)] = ckpt_crash_stage
+    if corrupt_save is not None:
+        plan.corrupt_saves[int(corrupt_save)] = corrupt_mode
+    return plan
+
+
+def corrupt_checkpoint(path: str, mode: str = "bitflip",
+                       rng: Optional[np.random.Generator] = None) -> None:
+    """Damage a published checkpoint payload in place.  ``bitflip``
+    inverts one byte in the middle of the npz (array data region — the
+    per-leaf crc32 catches it even when the zip container still reads);
+    ``truncate`` cuts the file (unreadable container)."""
+    payload = os.path.join(path, ckpt_io.PAYLOAD)
+    with open(payload, "rb") as f:
+        data = bytearray(f.read())
+    if mode == "truncate":
+        data = data[: max(16, len(data) // 3)]
+    elif mode == "bitflip":
+        data[len(data) // 2] ^= 0xFF
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    with open(payload, "wb") as f:
+        f.write(bytes(data))
+
+
+def chaos_loss_fn(cfg, tcfg) -> Callable:
+    """The standard LM loss with the chaos poison seam: the batch's
+    ``poison`` scalar multiplies the loss, so a NaN/inf scale yields a
+    non-finite loss AND non-finite gradients (cotangent scaling), while
+    the fault-free value 1.0 is a bit-exact identity (IEEE multiply by
+    1.0) — the fault-free chaos replay stays bit-identical to a plain
+    run."""
+    if tcfg.n_microbatches != 1:
+        raise ValueError("chaos poison is a per-batch scalar: the "
+                         "microbatch reshape would split it — run chaos "
+                         "with n_microbatches=1")
+    base = make_loss_fn(cfg, tcfg)
+
+    def loss_fn(params, batch, fisher, rng):
+        loss, aux = base(params, batch, fisher, rng)
+        return loss * batch["poison"], aux
+
+    return loss_fn
+
+
+class ChaosInjector:
+    """Stateful fault applier: owns the fetch/hook/save ordinals and
+    applies the plan through the public seams.  A ``plan=None`` injector
+    counts ordinals and stamps ``poison=1.0`` but injects nothing (the
+    fault-free bit-parity arm)."""
+
+    def __init__(self, plan: Optional[TrainFaultPlan]):
+        self.plan = plan or TrainFaultPlan(seed=0)
+        self.fetches = 0
+        self.hook_calls = 0
+        self.saves = 0
+        self.crashes = 0
+        self.corrupted: List[str] = []
+        self._cur_save = -1
+        self._rng = np.random.default_rng(self.plan.seed + 101)
+
+    def wrap_batch_fn(self, batch_fn: Callable[[int], dict]) -> Callable:
+        def fn(step: int) -> dict:
+            i = self.fetches
+            self.fetches += 1
+            b = dict(batch_fn(step))
+            scale = 1.0
+            if i in self.plan.nan_fetches:
+                scale = self.plan.nan_fetches[i]
+            elif i in self.plan.spike_fetches:
+                scale = self.plan.spike_fetches[i]
+            if i in self.plan.stall_fetches:
+                time.sleep(self.plan.stall_fetches[i])
+            b["poison"] = np.asarray(scale, np.float32)
+            return b
+
+        return fn
+
+    def crash_hook(self) -> Callable:
+        """``run_loop`` step_hook raising :class:`InjectedCrash` at the
+        plan's hook ordinals (after the step, before the checkpoint)."""
+
+        def hook(state, metrics):
+            i = self.hook_calls
+            self.hook_calls += 1
+            if i in self.plan.crash_steps:
+                self.crashes += 1
+                raise InjectedCrash(
+                    f"injected crash after step-hook ordinal {i} "
+                    f"(state step {int(state['step'])})")
+
+        return hook
+
+    def write_hook(self) -> Callable:
+        """Checkpoint write-stage hook: mid-write kills and post-publish
+        payload corruption, keyed by save ordinal."""
+
+        def hook(stage: str, path: str):
+            if stage == "payload":
+                self._cur_save = self.saves
+                self.saves += 1
+            n = self._cur_save
+            if self.plan.ckpt_crashes.get(n) == stage:
+                self.crashes += 1
+                raise InjectedCrash(
+                    f"injected crash mid-checkpoint-write "
+                    f"(save {n}, stage {stage!r})")
+            if stage == "done" and n in self.plan.corrupt_saves:
+                corrupt_checkpoint(path, self.plan.corrupt_saves[n],
+                                   self._rng)
+                self.corrupted.append(path)
+
+        return hook
+
+
+class TrainAuditor:
+    """Per-step invariant audit for chaos training runs (run through
+    ``run_loop``'s ``step_hook``, before the injector's crash hook so a
+    killed step is still audited)."""
+
+    def __init__(self):
+        self.violations: List[str] = []
+        self.total_skips = 0
+        self.total_rollbacks = 0
+        self.total_resumes = 0
+        self.replayed_steps = 0
+        self.steps_seen = 0
+        self.last_loss = float("nan")
+        self._treedef = None
+        self._prev_step: Optional[int] = None
+        self._seg_skips = 0
+        self._seg_rollbacks = 0
+        self._seg_first = True
+
+    def on_segment_start(self) -> None:
+        self._seg_skips = 0
+        self._seg_rollbacks = 0
+        self._seg_first = True
+
+    def on_step(self, state, metrics) -> None:
+        self.steps_seen += 1
+        step = int(state["step"])
+        td = jax.tree_util.tree_structure(
+            {"params": state["params"], "opt": state["opt"]})
+        if self._treedef is None:
+            self._treedef = td
+        elif td != self._treedef:
+            self.violations.append(
+                f"opt/param tree structure changed at step {step}")
+        if self._prev_step is not None:
+            if step > self._prev_step + 1:
+                self.violations.append(
+                    f"step jumped forward {self._prev_step} -> {step}: "
+                    f"data was silently dropped")
+            elif step <= self._prev_step:
+                # backward (or repeated) step: must be a resume (first
+                # audited step of a fresh segment) or a spike rollback
+                self.replayed_steps += self._prev_step - step + 1
+                if self._seg_first:
+                    self.total_resumes += 1
+                else:
+                    self.total_rollbacks += 1
+                    self._seg_rollbacks += 1
+        self._seg_first = False
+        self._prev_step = step
+        skipped = bool(metrics["skipped"]) if "skipped" in metrics else False
+        loss = float(metrics["loss"])
+        self.last_loss = loss
+        if skipped:
+            self.total_skips += 1
+            self._seg_skips += 1
+        if not np.isfinite(loss) and not skipped:
+            self.violations.append(
+                f"non-finite loss at step {step} not flagged skipped: "
+                f"the guard failed to gate the update")
+
+    def on_segment_end(self, result: Dict[str, Any]) -> None:
+        """Cross-check ``run_loop``'s returned telemetry against the
+        audit's own tally for the completed segment (counter balance)."""
+        if result["skipped"] != self._seg_skips:
+            self.violations.append(
+                f"skip-counter imbalance: run_loop says "
+                f"{result['skipped']}, audit saw {self._seg_skips}")
+        if result["rollbacks"] != self._seg_rollbacks:
+            self.violations.append(
+                f"rollback-counter imbalance: run_loop says "
+                f"{result['rollbacks']}, audit saw {self._seg_rollbacks}")
+
+    def finish(self) -> None:
+        if not np.isfinite(self.last_loss):
+            self.violations.append(
+                f"final loss not finite after recovery: {self.last_loss}")
+
+
+def run_chaos(train_step, make_state: Callable[[], dict], batch_fn,
+              plan: Optional[TrainFaultPlan], n_steps: int, ckpt_dir: str,
+              *, ckpt_every: int = 3, ckpt_keep: int = 3,
+              max_skips: int = 8,
+              spike_zscore: float = 8.0, spike_warmup: int = 6,
+              spike_patience: int = 2, backoff_scale: float = 0.5,
+              cooldown_steps: int = 8, max_rollbacks: int = 4,
+              max_segments: int = 32,
+              log: Callable = lambda *a, **k: None) -> Dict[str, Any]:
+    """Drive ``run_loop`` to completion under a fault plan, emulating a
+    supervisor that restarts the job after every hard kill.
+
+    Each segment builds FRESH state and a fresh ``prefetch=0`` pipeline
+    (prefetch would let the worker race ahead and consume fetch ordinals
+    for batches that are then dropped — nondeterministic fault
+    placement), then calls ``run_loop(auto_resume=True)``.  An
+    :class:`InjectedCrash` ends the segment exactly like SIGKILL would;
+    anything else (including the guard's budget errors) propagates.
+
+    Returns a summary dict with the auditor's violations and the
+    counters the bench gates on.
+    """
+    inj = ChaosInjector(plan)
+    auditor = TrainAuditor()
+    chaos_batch_fn = inj.wrap_batch_fn(batch_fn)
+    crash = inj.crash_hook()
+
+    def hook(state, metrics):
+        auditor.on_step(state, metrics)   # audit first: a killed step
+        crash(state, metrics)             # must still be audited
+
+    result = None
+    segments = 0
+    with ckpt_io.write_fault_hook(inj.write_hook()):
+        while result is None:
+            segments += 1
+            if segments > max_segments:
+                auditor.violations.append(
+                    f"chaos run did not complete within {max_segments} "
+                    f"segments")
+                break
+            auditor.on_segment_start()
+            pipe = DataPipeline(chaos_batch_fn, prefetch=0)
+            state = make_state()
+            try:
+                result = run_loop(
+                    train_step, state, pipe, n_steps,
+                    log_every=0, log=log,
+                    ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                    ckpt_keep=ckpt_keep, auto_resume=True,
+                    max_skips=max_skips,
+                    spike_zscore=spike_zscore, spike_warmup=spike_warmup,
+                    spike_patience=spike_patience,
+                    backoff_scale=backoff_scale,
+                    cooldown_steps=cooldown_steps,
+                    max_rollbacks=max_rollbacks,
+                    step_hook=hook)
+            except InjectedCrash as e:
+                log(f"chaos segment {segments}: {e}")
+            finally:
+                pipe.close()
+    if result is not None:
+        auditor.on_segment_end(result)
+    auditor.finish()
+
+    quarantined = 0
+    if os.path.isdir(ckpt_dir):
+        quarantined = sum(1 for d in os.listdir(ckpt_dir)
+                          if ".corrupt" in d)
+    return {
+        "violations": auditor.violations,
+        "segments": segments,
+        "crashes": inj.crashes,
+        "resumes": auditor.total_resumes,
+        "rollbacks": auditor.total_rollbacks,
+        "skipped": auditor.total_skips,
+        "replayed_steps": auditor.replayed_steps,
+        "steps_seen": auditor.steps_seen,
+        "saves": inj.saves,
+        "corrupted_saves": len(inj.corrupted),
+        "quarantined": quarantined,
+        "final_loss": auditor.last_loss,
+        "state": (result["state"] if result is not None else None),
+        "result": result,
+    }

@@ -34,6 +34,8 @@ from repro.optim import (UpdateTransform, as_transform, apply_updates, chain,
                          fused_lotion_sgd_core,
                          global_norm, lotion_decoupled)
 from repro.train.compress import ef_transform
+from repro.train.guard import (NonFiniteBudgetError, RollbackBudgetError,
+                               SpikeMonitor)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,23 +270,49 @@ def make_train_step(cfg: LMConfig, tcfg: TrainConfig, optimizer,
         if grad_shardings is not None:
             grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
 
+        # on-device non-finite guard (DESIGN.md §11): ok_loss gates the
+        # update through the chain — a fused core folds it into its
+        # in-kernel SC_OK gate (together with its own gnorm check), the
+        # jnp chain is gated below with a tree-wide where.  lr_scale is
+        # run_loop's spike-cooldown backoff (absent => no-op).
+        ok_loss = jnp.isfinite(loss)
         updates, new_opt = tx.update(grads, state["opt"], params,
-                                     fisher=fisher)
-        # a fused terminal core emits new params straight from the step
-        # kernel; adding a separate updates tree back would re-introduce
-        # the extra full-tensor HBM pass the fusion removed
-        new_params = (updates if tx.applies_updates
-                      else apply_updates(params, updates))
+                                     fisher=fisher, step_ok=ok_loss,
+                                     lr_scale=state.get("lr_scale"))
+
+        link = _link_metrics(new_opt)
+        gnorm = link.get("gnorm")
+        if gnorm is None:
+            gnorm = global_norm(grads)
+        ok = jnp.logical_and(ok_loss, jnp.isfinite(gnorm))
+
+        if tx.applies_updates:
+            # a fused terminal core emits new params straight from the
+            # step kernel (update already SC_OK-gated inside it; adding a
+            # tree-wide select here would re-introduce the extra HBM pass
+            # the fusion removed)
+            new_params, gated_opt = updates, new_opt
+        else:
+            # jnp chain: select per leaf — a skipped step keeps params
+            # AND the whole chain state (moments, count, EF error) so the
+            # replayed schedule is bit-identical to never having seen the
+            # poisoned batch
+            def sel(new, old):
+                return jnp.where(ok, new, old)
+
+            new_params = jax.tree.map(sel, apply_updates(params, updates),
+                                      params)
+            gated_opt = jax.tree.map(sel, new_opt, state["opt"])
 
         new_state = dict(state)
-        new_state.update(params=new_params, opt=new_opt,
+        new_state.update(params=new_params, opt=gated_opt,
                          step=state["step"] + 1)
 
         metrics = {"loss": loss, **aux}
-        link = _link_metrics(new_opt)
-        metrics["grad_norm"] = link.get("gnorm", None)
-        if metrics["grad_norm"] is None:
-            metrics["grad_norm"] = global_norm(grads)
+        metrics["grad_norm"] = gnorm
+        # the guard flag ships on the existing metrics transfer — no
+        # extra device sync to learn a step was poisoned
+        metrics["skipped"] = jnp.logical_not(ok)
         if "penalty" in link:       # decoupled placement
             metrics["penalty"] = link["penalty"]
             metrics["loss"] = loss + link["penalty"]
@@ -335,38 +363,174 @@ def run_loop(train_step, state, pipeline, n_steps: int,
              eval_every: int = 0, eval_hook: Optional[Callable] = None,
              ckpt_every: int = 0, ckpt_hook: Optional[Callable] = None,
              log_every: int = 50, log: Callable = print,
-             straggler_pct: float = 95.0) -> Dict[str, Any]:
-    """Generic driver: telemetry (step-time percentiles for straggler
-    detection), periodic eval + checkpoint.  Resumes from state['step'].
+             straggler_pct: float = 95.0,
+             ckpt_dir: Optional[str] = None, ckpt_keep: int = 3,
+             auto_resume: bool = False,
+             max_skips: int = 8,
+             spike_zscore: float = 0.0, spike_ema: float = 0.98,
+             spike_patience: int = 2, spike_warmup: int = 8,
+             backoff_scale: float = 0.5, cooldown_steps: int = 16,
+             max_rollbacks: int = 4,
+             step_hook: Optional[Callable] = None) -> Dict[str, Any]:
+    """Self-healing driver: telemetry, periodic eval + checkpoint, and the
+    three recovery tiers of DESIGN.md §11.
 
-    ``step_times`` in the result holds (at most) the trailing
-    ``TELEMETRY_WINDOW`` step durations.
+    * **Skip budget** — ``train_step``'s non-finite guard already froze
+      params/opt on a poisoned step; the loop counts CONSECUTIVE skipped
+      steps and raises :class:`NonFiniteBudgetError` (with loss/gnorm
+      diagnostics) past ``max_skips`` instead of spinning forever.
+    * **Spike rollback** — with ``spike_zscore > 0`` (requires
+      ``ckpt_dir``), a :class:`SpikeMonitor` watches the loss; on a
+      sustained spike the loop restores the newest VALID checkpoint,
+      rewinds the data stream via ``pipeline.seek`` (exact batch replay —
+      batches are pure functions of the step index), and applies an LR
+      backoff of ``backoff_scale`` for ``cooldown_steps`` steps through
+      ``state["lr_scale"]`` (a traced scalar: no recompile).  More than
+      ``max_rollbacks`` raises :class:`RollbackBudgetError`.
+    * **Auto-resume** — ``auto_resume=True`` (requires ``ckpt_dir``)
+      restores the newest checkpoint whose manifest CRC verifies,
+      quarantining corrupt ones, then seeks the pipeline; combined with
+      the step-indexed rng (``fold_in(seed, step)``) the continued run is
+      bit-identical to one that never crashed.
+
+    ``ckpt_dir`` enables the loop's own atomic checkpointing every
+    ``ckpt_every`` steps (``ckpt_hook`` remains for callers doing their
+    own persistence; both may be used together).  ``step_hook(state,
+    metrics)`` runs after every step — the chaos harness's crash seam.
+
+    Returns ``{"state", "history", "step_times", "skipped", "rollbacks",
+    "resumed_from"}`` — the same counters the periodic log line prints,
+    so bench logs and the chaos auditor read one source of truth.
     """
+    from repro.checkpoint import io as ckpt_io
+
+    spiking = spike_zscore > 0.0
+    if spiking and not ckpt_dir:
+        raise ValueError("spike rollback (spike_zscore > 0) needs ckpt_dir")
+    if auto_resume and not ckpt_dir:
+        raise ValueError("auto_resume needs ckpt_dir")
+    monitor = (SpikeMonitor(zscore=spike_zscore, ema=spike_ema,
+                            patience=spike_patience, warmup=spike_warmup)
+               if spiking else None)
+    if spiking and "lr_scale" not in state:
+        state = dict(state)
+        state["lr_scale"] = jnp.ones((), jnp.float32)
+    template = jax.eval_shape(lambda: state)
+    counters: Dict[str, Any] = {"skipped": 0, "rollbacks": 0,
+                                "resumed_from": None}
+
+    if auto_resume:
+        best = ckpt_io.latest_valid(ckpt_dir, quarantine_corrupt=True)
+        if best is not None:
+            state, s = ckpt_io.load(ckpt_dir, template, step=best)
+            if spiking:
+                # a fresh segment starts calm: a crash mid-cooldown must
+                # not pin the reduced LR forever
+                state = dict(state)
+                state["lr_scale"] = jnp.ones((), jnp.float32)
+            counters["resumed_from"] = s
+            pipeline.seek(s)
+            log(f"run_loop: auto-resumed from {ckpt_dir} at step {s}")
+    if (ckpt_dir and (ckpt_every or spiking)
+            and ckpt_io.latest_valid(ckpt_dir) is None):
+        # eager anchor save: rollback/resume always has a target, even
+        # before the first ckpt_every boundary
+        ckpt_io.save(ckpt_dir, int(state["step"]), state, keep=ckpt_keep)
+
     history = []
     times = collections.deque(maxlen=TELEMETRY_WINDOW)
-    start = int(state["step"])
     # one self-describing line so benchmark logs record which optimizer
     # backend (fused kernel vs jnp chain) produced the step times
     log(f"run_loop: opt_fused={opt_state_is_fused(state.get('opt'))} "
         f"backend={jax.default_backend()}")
     step_jit = jax.jit(train_step, donate_argnums=(0,))
-    for _ in range(start, n_steps):
+    cur = int(state["step"])
+    consec_skips = 0
+    lr_scale_now = 1.0
+    cooldown = 0
+    while cur < n_steps:
         batch = next(pipeline)
         t0 = time.perf_counter()
         state, metrics = step_jit(state, batch)
-        jax.block_until_ready(metrics["loss"])
+        # the loss transfer doubles as the step sync; the guard flag
+        # rides the same transfer
+        loss_v = float(metrics["loss"])
         dt = time.perf_counter() - t0
         times.append(dt)
-        step = int(state["step"])
+        cur += 1
+        skipped = bool(metrics["skipped"]) if "skipped" in metrics else False
+
+        if skipped:
+            counters["skipped"] += 1
+            consec_skips += 1
+            if consec_skips > max_skips:
+                diag = {"step": cur, "loss": loss_v,
+                        "grad_norm": float(metrics["grad_norm"]),
+                        **{k: v for k, v in counters.items()}}
+                raise NonFiniteBudgetError(
+                    f"{consec_skips} consecutive non-finite steps "
+                    f"(budget {max_skips}) at step {cur}: loss={loss_v}, "
+                    f"gnorm={diag['grad_norm']} — data or optimizer state "
+                    f"is persistently poisoned", diag)
+        else:
+            consec_skips = 0
+            if monitor is not None and monitor.observe(loss_v):
+                counters["rollbacks"] += 1
+                if counters["rollbacks"] > max_rollbacks:
+                    raise RollbackBudgetError(
+                        f"spike rollback budget ({max_rollbacks}) "
+                        f"exhausted at step {cur} (loss={loss_v})",
+                        {"step": cur, "loss": loss_v, **counters})
+                best = ckpt_io.latest_valid(ckpt_dir,
+                                            quarantine_corrupt=True)
+                if best is None:
+                    raise RollbackBudgetError(
+                        f"loss spike at step {cur} but no valid "
+                        f"checkpoint in {ckpt_dir} to roll back to",
+                        {"step": cur, "loss": loss_v, **counters})
+                state, s = ckpt_io.load(ckpt_dir, template, step=best)
+                pipeline.seek(s)
+                cur = s
+                lr_scale_now *= backoff_scale
+                cooldown = cooldown_steps
+                state = dict(state)
+                state["lr_scale"] = jnp.asarray(lr_scale_now, jnp.float32)
+                monitor.reset()
+                log(f"run_loop: loss spike ({loss_v:.4f}) — rolled back "
+                    f"to step {s}, lr_scale={lr_scale_now:g} for "
+                    f"{cooldown_steps} steps")
+                continue
+
+        if cooldown > 0:
+            cooldown -= 1
+            if cooldown == 0 and lr_scale_now != 1.0:
+                lr_scale_now = 1.0
+                state = dict(state)
+                state["lr_scale"] = jnp.ones((), jnp.float32)
+                log(f"run_loop: cooldown over at step {cur}, lr restored")
+
+        if step_hook is not None:
+            step_hook(state, metrics)
+
+        step = cur
         if log_every and step % log_every == 0:
             window = np.asarray(times)
             p50, p95 = (np.percentile(window, 50),
                         np.percentile(window, straggler_pct))
-            log(f"step {step:6d} loss {float(metrics['loss']):.4f} "
+            log(f"step {step:6d} loss {loss_v:.4f} "
                 f"gnorm {float(metrics['grad_norm']):.3f} "
-                f"dt_p50 {p50*1e3:.1f}ms p95 {p95*1e3:.1f}ms")
+                f"dt_p50 {p50*1e3:.1f}ms p95 {p95*1e3:.1f}ms "
+                f"skipped {counters['skipped']} "
+                f"rollbacks {counters['rollbacks']} "
+                f"resumed_from {counters['resumed_from']}")
         if eval_every and eval_hook and step % eval_every == 0:
             history.append((step, eval_hook(state)))
-        if ckpt_every and ckpt_hook and step % ckpt_every == 0:
-            ckpt_hook(state)
-    return {"state": state, "history": history, "step_times": list(times)}
+        if ckpt_every and step % ckpt_every == 0:
+            # never checkpoint while a spike is suspected: a hot monitor
+            # means this state may be what we are about to roll away from
+            if ckpt_dir and (monitor is None or not monitor.hot):
+                ckpt_io.save(ckpt_dir, step, state, keep=ckpt_keep)
+            if ckpt_hook:
+                ckpt_hook(state)
+    return {"state": state, "history": history, "step_times": list(times),
+            **counters}

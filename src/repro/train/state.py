@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 
-def init_state(params, optimizer, ef_compress: bool = False) -> Dict[str, Any]:
+def init_state(params, optimizer, ef_compress: bool = False,
+               lr_scale: bool = False) -> Dict[str, Any]:
     state = {
         "params": params,
         "opt": optimizer.init(params),
@@ -26,4 +27,10 @@ def init_state(params, optimizer, ef_compress: bool = False) -> Dict[str, Any]:
         # legacy layout only: with a make_optimizer chain the EF error
         # feedback lives inside state["opt"] and this flag must stay False
         state["ef_err"] = jax.tree.map(jnp.zeros_like, params)
+    if lr_scale:
+        # pre-insert run_loop's spike-cooldown LR multiplier so the
+        # checkpoint layout is identical whether or not spike detection
+        # is enabled for a given run (run_loop inserts it lazily
+        # otherwise, which changes the saved tree structure)
+        state["lr_scale"] = jnp.ones((), jnp.float32)
     return state

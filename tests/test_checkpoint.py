@@ -195,3 +195,115 @@ def test_elastic_restore_with_shardings(tmp_path):
     shardings = jax.tree.map(lambda _: sh, t)
     out, _ = ckpt.load(str(tmp_path), t, shardings=shardings)
     assert all(x.sharding == sh for x in jax.tree.leaves(out))
+
+
+# ------------------------------------------------------ trust rules (§11)
+
+def _corrupt_payload(path, mode="bitflip"):
+    from repro.train.faults import corrupt_checkpoint
+    corrupt_checkpoint(path, mode)
+
+
+def test_load_verifies_crc_with_opt_out(tmp_path):
+    """A bit-flipped payload byte fails the per-leaf crc check with the
+    typed error; verify=False skips the crc pass (caller already ran
+    latest_valid)."""
+    t = _tree()
+    path = ckpt.save(str(tmp_path), 1, t)
+    _corrupt_payload(path)
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.load(str(tmp_path), t)
+    assert not ckpt.io.verify_dir(path)
+
+
+def test_latest_valid_quarantines_corrupt_newest(tmp_path):
+    """Restore falls back past a bit-flipped newest checkpoint and (with
+    quarantine on) renames it out of the trusted namespace so no later
+    restore retries it."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    path2 = ckpt.save(str(tmp_path), 2, t)
+    _corrupt_payload(path2)
+    assert ckpt.latest_step(str(tmp_path)) == 2      # manifest-only scan
+    assert ckpt.latest_valid(str(tmp_path)) == 1     # crc-verified scan
+    assert os.path.isdir(path2)                      # not yet quarantined
+    assert ckpt.latest_valid(str(tmp_path), quarantine_corrupt=True) == 1
+    assert not os.path.isdir(path2)
+    assert os.path.isdir(path2 + ".corrupt")
+    # quarantined dirs are invisible to every scan
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    _, step = ckpt.load(str(tmp_path), t)
+    assert step == 1
+
+
+def test_truncated_payload_falls_back(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    path2 = ckpt.save(str(tmp_path), 2, t)
+    _corrupt_payload(path2, mode="truncate")
+    with pytest.raises(ckpt.CorruptCheckpointError):
+        ckpt.load(str(tmp_path), t, step=2)  # unreadable container
+    assert ckpt.latest_valid(str(tmp_path), quarantine_corrupt=True) == 1
+
+
+def test_rotation_never_deletes_checkpoint_being_written(tmp_path):
+    """A crash-recovery save of an OLD step must survive its own
+    rotation: without the protect rule, keep=2 would delete the step-2
+    dir the save just published (it sorts oldest)."""
+    t = _tree()
+    for s in (3, 4, 5):
+        ckpt.save(str(tmp_path), s, t, keep=2)
+    path = ckpt.save(str(tmp_path), 2, t, keep=2)
+    assert os.path.isdir(path)
+    assert ckpt.latest_valid(str(tmp_path)) == 5
+    out, step = ckpt.load(str(tmp_path), t, step=2)
+    assert step == 2
+
+
+def test_stale_tmp_ignored_by_restore_and_swept_by_save(tmp_path):
+    """A killed save leaves a ``*.tmp`` dir: restore never trusts it and
+    the next save sweeps it."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    stale = tmp_path / "step_0000000009.tmp"
+    os.makedirs(stale)
+    (stale / "junk").write_text("x")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    assert ckpt.latest_valid(str(tmp_path)) == 1
+    ckpt.save(str(tmp_path), 2, t)
+    assert not os.path.exists(stale)
+
+
+def test_mid_write_crash_leaves_previous_step_restorable(tmp_path):
+    """A hard kill mid-manifest-write (injected through the write-stage
+    hook) publishes nothing: the previous checkpoint stays the newest
+    valid one and the next save of the same step succeeds."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+
+    def kill(stage, path):
+        if stage == "manifest":
+            raise RuntimeError("killed mid-write")
+
+    with ckpt.write_fault_hook(kill):
+        with pytest.raises(RuntimeError):
+            ckpt.save(str(tmp_path), 2, t)
+    assert ckpt.latest_valid(str(tmp_path)) == 1
+    assert any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    ckpt.save(str(tmp_path), 2, t)   # retry sweeps the tmp and publishes
+    assert ckpt.latest_valid(str(tmp_path)) == 2
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_resave_same_step_overwrites_atomically(tmp_path):
+    """Re-saving an existing step (a rollback replay crossing the same
+    boundary with a different trajectory) replaces the old contents."""
+    a = _tree(seed=0)
+    b = _tree(seed=1)
+    ckpt.save(str(tmp_path), 3, a)
+    ckpt.save(str(tmp_path), 3, b)
+    out, _ = ckpt.load(str(tmp_path), b, step=3)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(b["params"]["w"]))
+    assert not any(d.endswith(".old") or d.endswith(".tmp")
+                   for d in os.listdir(tmp_path))

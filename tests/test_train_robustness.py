@@ -1,0 +1,245 @@
+"""Self-healing training tests (DESIGN.md §11): non-finite guard skip
+semantics (chain + fused), skip/rollback budgets, spike rollback with LR
+backoff, crash-exact auto-resume, chaos harness audits, and prefetch
+worker-death propagation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantConfig, QuantPolicy
+from repro.data import DataPipeline, lm_batch, permutation_table
+from repro.models.lm import LMConfig, lm_init
+from repro.optim import adamw, constant
+from repro.train import (InjectedCrash, NonFiniteBudgetError, SpikeMonitor,
+                         TrainConfig, init_state, make_optimizer,
+                         make_train_step)
+from repro.train import faults as tfaults
+from repro.train.loop import run_loop
+
+CFG = LMConfig(name="rb", n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+               d_ff=64, vocab=32, dtype=jnp.float32, remat=False)
+PERM = permutation_table(0, CFG.vocab)
+_QUIET = {"log_every": 0, "log": lambda *a, **k: None}
+
+
+def _batch(step, poison=1.0):
+    b = dict(lm_batch(0, step, 4, 16, CFG.vocab, PERM))
+    b["poison"] = np.asarray(poison, np.float32)
+    return b
+
+
+def _build(use_kernel=False, ef=False):
+    tcfg = TrainConfig(
+        quant=QuantConfig(method="lotion", fmt_name="int4", lam=1e3,
+                          policy=QuantPolicy(min_size=64),
+                          use_kernel=use_kernel),
+        clip_norm=1.0, ef_compress=ef)
+    opt = make_optimizer(tcfg, adamw(constant(1e-2)))
+    step = make_train_step(CFG, tcfg, opt,
+                           loss_fn=tfaults.chaos_loss_fn(CFG, tcfg))
+    state = init_state(lm_init(jax.random.PRNGKey(0), CFG), opt)
+    return step, state
+
+
+def _bits_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(la, lb))
+
+
+# ------------------------------------------------------------------ guard
+
+@pytest.mark.parametrize("poison", [float("nan"), float("inf")])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_nonfinite_step_applies_no_update(use_kernel, poison):
+    """A poisoned batch advances ``step`` but leaves params AND the whole
+    optimizer state bit-identical, flags ``skipped``, and the replayed
+    clean trajectory is bit-exact — for the jnp chain (tree-wide where)
+    and the fused core (in-kernel SC_OK gate) alike."""
+    step, st0 = _build(use_kernel=use_kernel)
+    step = jax.jit(step)
+    clean = [_batch(0), _batch(1)]
+
+    ref, _ = step(st0, clean[0])
+    ref, m_ref = step(ref, clean[1])
+    assert not bool(m_ref["skipped"])
+
+    st, _ = step(st0, clean[0])
+    frozen = jax.device_get({"params": st["params"], "opt": st["opt"]})
+    st, m = step(st, _batch(1, poison=poison))
+    assert bool(m["skipped"])
+    assert not np.isfinite(float(m["loss"]))
+    assert _bits_equal(frozen, {"params": st["params"], "opt": st["opt"]})
+    assert int(st["step"]) == 2        # step counter still advances
+    st, _ = step(st, clean[1])         # replay the schedule cleanly
+    assert _bits_equal({"params": ref["params"], "opt": ref["opt"]},
+                       {"params": st["params"], "opt": st["opt"]})
+
+
+def test_skip_budget_aborts_with_diagnostics():
+    step, st = _build()
+    pipe = DataPipeline(lambda s: _batch(s, poison=float("nan")), prefetch=0)
+    with pytest.raises(NonFiniteBudgetError) as ei:
+        run_loop(step, st, pipe, 10, max_skips=2, **_QUIET)
+    assert ei.value.diagnostics["skipped"] == 3
+    assert not np.isfinite(ei.value.diagnostics["loss"])
+    pipe.close()
+
+
+# ---------------------------------------------------------- spike monitor
+
+def test_spike_monitor_detects_sustained_spike_only():
+    mon = SpikeMonitor(zscore=6.0, ema=0.9, patience=2, warmup=4)
+    for _ in range(6):
+        assert not mon.observe(2.0)
+    assert not mon.observe(float("nan"))   # non-finite: guard's job
+    assert not mon.observe(200.0)          # 1st hot sample: not yet
+    assert mon.hot
+    assert mon.observe(200.0)              # sustained -> roll back
+    mon.reset()
+    assert not mon.hot
+    # a single outlier between calm samples never triggers
+    for _ in range(6):
+        mon.observe(2.0)
+    assert not mon.observe(200.0)
+    assert not mon.observe(2.0)
+    assert not mon.hot
+
+
+def test_spike_rollback_recovers_and_restores_lr(tmp_path):
+    """A transient finite loss blow-up triggers a rollback to the last
+    calm checkpoint, an LR backoff for the cooldown window, and the run
+    still completes with lr_scale restored to 1.0."""
+    step, st = _build()
+    fetches = {"n": 0}
+
+    def fn(s):
+        i = fetches["n"]
+        fetches["n"] += 1
+        # fetch-ordinal keying: the replay of these steps is clean
+        return _batch(s, poison=1e4 if i in (6, 7) else 1.0)
+
+    pipe = DataPipeline(fn, prefetch=0)
+    out = run_loop(step, st, pipe, 12, ckpt_dir=str(tmp_path), ckpt_every=2,
+                   spike_zscore=6.0, spike_warmup=4, spike_patience=2,
+                   backoff_scale=0.5, cooldown_steps=3, **_QUIET)
+    pipe.close()
+    assert out["rollbacks"] == 1
+    assert int(out["state"]["step"]) == 12
+    assert float(out["state"]["lr_scale"]) == 1.0
+    assert all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree_util.tree_leaves(out["state"]["params"]))
+
+
+def test_spike_without_checkpoint_dir_is_rejected():
+    step, st = _build()
+    pipe = DataPipeline(lambda s: _batch(s), prefetch=0)
+    with pytest.raises(ValueError):
+        run_loop(step, st, pipe, 2, spike_zscore=6.0, **_QUIET)
+    pipe.close()
+
+
+# ------------------------------------------------------- crash-exact resume
+
+@pytest.mark.parametrize("variant", ["chain", "fused", "ef"])
+def test_auto_resume_is_bit_exact(variant, tmp_path):
+    """N steps straight through ≡ k steps + hard kill + fresh-process
+    auto-resume + N-k steps, bit for bit — for the jnp chain, the fused
+    core ({mu, nu, count} in one flat dict), and the EF-compressed chain
+    (error-feedback residual inside the chain state)."""
+    kw = dict(use_kernel=(variant == "fused"), ef=(variant == "ef"))
+    step, st = _build(**kw)
+
+    pipe = DataPipeline(lambda s: _batch(s), prefetch=0)
+    ref = run_loop(step, st, pipe, 6, **_QUIET)["state"]
+    pipe.close()
+
+    calls = {"n": 0}
+
+    def crash_hook(state, metrics):
+        i = calls["n"]
+        calls["n"] += 1
+        if i == 3:                       # after step 4, before its save
+            raise InjectedCrash("kill")
+
+    st2 = _build(**kw)[1]
+    pipe = DataPipeline(lambda s: _batch(s), prefetch=0)
+    with pytest.raises(InjectedCrash):
+        run_loop(step, st2, pipe, 6, ckpt_dir=str(tmp_path), ckpt_every=2,
+                 auto_resume=True, step_hook=crash_hook, **_QUIET)
+    pipe.close()
+
+    # "fresh process": new state, new pipeline, same command line
+    pipe = DataPipeline(lambda s: _batch(s), prefetch=0)
+    out = run_loop(step, _build(**kw)[1], pipe, 6, ckpt_dir=str(tmp_path),
+                   ckpt_every=2, auto_resume=True, **_QUIET)
+    pipe.close()
+    assert out["resumed_from"] == 2      # step-4 save never completed
+    assert _bits_equal(ref, out["state"])
+
+
+# --------------------------------------------------------------- chaos
+
+def test_chaos_run_passes_all_audits(tmp_path):
+    """The full seeded chaos plan (NaN batches, loss spike, hard kill,
+    mid-checkpoint-write kill, bit-flipped payload) completes with zero
+    audit violations and exercises every recovery tier."""
+    step, _ = _build()
+    plan = tfaults.chaos_train_plan(1, n_steps=18, spike_at=24,
+                                    spike_len=3, n_crashes=1)
+    s = tfaults.run_chaos(step, lambda: _build()[1], _batch, plan, 18,
+                          str(tmp_path), spike_warmup=4)
+    assert s["violations"] == []
+    assert s["result"] is not None and np.isfinite(s["final_loss"])
+    assert s["skipped"] >= 1 and s["rollbacks"] >= 1
+    assert s["resumes"] >= 1 and s["quarantined"] >= 1
+    assert s["crashes"] >= 2             # step kill + mid-write kill
+
+
+def test_fault_free_chaos_is_bit_identical_to_plain_run(tmp_path):
+    """With no faults injected, the whole self-healing machinery (poison
+    scalar, guard, monitor, checkpoints, auto-resume arming) is an exact
+    no-op on the trajectory."""
+    step, st = _build()
+    pipe = DataPipeline(lambda s: _batch(s), prefetch=0)
+    plain = run_loop(step, st, pipe, 8, **_QUIET)["state"]
+    pipe.close()
+
+    s = tfaults.run_chaos(step, lambda: _build()[1], _batch, None, 8,
+                          str(tmp_path), ckpt_every=3)
+    assert s["violations"] == []
+    assert s["segments"] == 1 and s["crashes"] == 0
+    got = {k: s["state"][k] for k in ("params", "opt", "step")}
+    want = {k: plain[k] for k in ("params", "opt", "step")}
+    assert _bits_equal(want, got)
+
+
+def test_chaos_loss_fn_rejects_microbatching():
+    tcfg = TrainConfig(n_microbatches=2)
+    with pytest.raises(ValueError):
+        tfaults.chaos_loss_fn(CFG, tcfg)
+
+
+# ------------------------------------------------------------- pipeline
+
+def test_prefetch_worker_death_propagates_and_recovers():
+    """A batch_fn exception inside the prefetch worker is re-raised from
+    ``__next__`` at the exact failing step (the consumer used to hang on
+    an empty queue), and a ``seek`` afterwards restarts cleanly."""
+
+    def fn(s):
+        if s == 3:
+            raise RuntimeError("generator died at step 3")
+        return {"x": np.full((2,), s, np.float32)}
+
+    pipe = DataPipeline(fn, prefetch=2)
+    for s in range(3):
+        assert pipe.__next__()["x"][0] == s
+    with pytest.raises(RuntimeError, match="step 3"):
+        next(pipe)
+    pipe.seek(0)                       # restart after the failure
+    assert next(pipe)["x"][0] == 0
+    pipe.close()
