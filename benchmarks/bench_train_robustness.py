@@ -33,11 +33,25 @@ generated from.
 from __future__ import annotations
 
 import argparse
+import os
 import tempfile
+
+# the distributed section needs forced host devices, and XLA reads the
+# flag only before backend init — so the env dance happens at module
+# top, before jax is imported.  Local runs therefore see the same
+# 8-device backend CI generates the committed baselines on.
+os.environ.setdefault("REPRO_FORCE_DEVICES", "8")
+if ("--xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count="
+        f"{os.environ['REPRO_FORCE_DEVICES']} "
+        + os.environ.get("XLA_FLAGS", ""))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import QuantConfig, QuantPolicy
 from repro.data import DataPipeline, lm_batch, permutation_table
@@ -63,6 +77,23 @@ PLAN_FULL = dict(seed=3, spike_at=24, spike_len=3, n_crashes=1,
                  corrupt_save=5, corrupt_mode="bitflip")
 SPIKE_WARMUP = 4
 CKPT_EVERY = 3
+
+# host-level chaos plan for the distributed arm (DESIGN.md §12, ISSUE 9
+# acceptance): one peer-host kill, one straggler past the deadline, one
+# shard-targeted bitflip and one torn manifest on top of the data-level
+# tiers.  Ordinals verified (like PLAN_TINY's) to make every tier
+# actually fire on the deterministic CPU testbed.
+DIST_MESH = (2, 4)                       # data x model -> n_hosts = 2
+HOST_PLAN_TINY = dict(seed=1, spike_at=24, spike_len=3, n_crashes=1,
+                      ckpt_crash_save=2, ckpt_crash_stage="manifest",
+                      corrupt_save=3, corrupt_mode=("bitflip", 1),
+                      torn_manifest_save=4,
+                      n_hosts=2, host_kill_at=2, straggle_at=7)
+HOST_PLAN_FULL = dict(seed=3, spike_at=24, spike_len=3, n_crashes=1,
+                      ckpt_crash_save=2, ckpt_crash_stage="manifest",
+                      corrupt_save=5, corrupt_mode=("bitflip", 1),
+                      torn_manifest_save=6,
+                      n_hosts=2, host_kill_at=2, straggle_at=7)
 
 
 def _setup(tiny: bool):
@@ -95,12 +126,17 @@ def _setup(tiny: bool):
     step = make_train_step(cfg, tcfg, opt,
                            loss_fn=tfaults.chaos_loss_fn(cfg, tcfg))
     plan_args = dict(PLAN_TINY if tiny else PLAN_FULL)
+    host_plan_args = dict(HOST_PLAN_TINY if tiny else HOST_PLAN_FULL)
     config = {"arch": {"n_layers": cfg.n_layers, "d_model": cfg.d_model,
                        "n_heads": cfg.n_heads, "vocab": cfg.vocab},
               "n_steps": n_steps, "batch": b, "seq": l,
               "plan": plan_args, "spike_warmup": SPIKE_WARMUP,
-              "ckpt_every": CKPT_EVERY}
-    return step, make_state, batch_fn, n_steps, plan_args, config
+              "ckpt_every": CKPT_EVERY,
+              "dist_mesh": list(DIST_MESH),
+              "host_plan": {k: list(v) if isinstance(v, tuple) else v
+                            for k, v in host_plan_args.items()}}
+    return step, make_state, batch_fn, n_steps, plan_args, \
+        host_plan_args, config
 
 
 def _plain_run(step, make_state, batch_fn, n_steps):
@@ -169,19 +205,97 @@ def robustness(step, make_state, batch_fn, n_steps, plan_args) -> dict:
     }
 
 
+def distributed(step, make_state, batch_fn, n_steps,
+                host_plan_args) -> dict:
+    """The 2x4-mesh arm (DESIGN.md §12): plain mesh run, fault-free
+    chaos bit parity on the SAME mesh, then the seeded host-level plan —
+    peer-host kill, straggler, torn manifest, one corrupted shard of a
+    2-shard save — with the cross-host fingerprint + replica audit on
+    every step and zero tolerance for violations."""
+    n_hosts = host_plan_args["n_hosts"]
+    mesh = jax.make_mesh(DIST_MESH, ("data", "model"))
+    rep = NamedSharding(mesh, P())
+
+    def make_state_mesh():
+        return jax.tree.map(lambda x: jax.device_put(x, rep), make_state())
+
+    probe = batch_fn(0)
+    batch_sh = {k: NamedSharding(
+        mesh, P(*(("data",) + (None,) * (np.asarray(v).ndim - 1))))
+        for k, v in probe.items()}
+    batch_sh["poison"] = rep             # injector-stamped scalar
+
+    with mesh:
+        def fn(s):
+            b = dict(batch_fn(s))
+            b["poison"] = np.asarray(1.0, np.float32)
+            return b
+
+        pipe = DataPipeline(fn, prefetch=0, sharding=batch_sh)
+        plain = run_loop(step, make_state_mesh(), pipe, n_steps,
+                         log_every=0, log=lambda *a, **k: None)["state"]
+        pipe.close()
+
+        with tempfile.TemporaryDirectory(prefix="bench_dist_ff_") as d:
+            ff = tfaults.run_chaos(step, make_state_mesh, batch_fn, None,
+                                   n_steps, d, ckpt_every=CKPT_EVERY,
+                                   spike_warmup=SPIKE_WARMUP,
+                                   n_hosts=n_hosts, ckpt_shards=n_hosts,
+                                   batch_sharding=batch_sh)
+        parity = ff["state"] is not None and _bit_parity(plain, ff["state"])
+
+        plan = tfaults.chaos_train_plan(n_steps=n_steps, **host_plan_args)
+        with tempfile.TemporaryDirectory(prefix="bench_dist_chaos_") as d:
+            ch = tfaults.run_chaos(step, make_state_mesh, batch_fn, plan,
+                                   n_steps, d, ckpt_every=CKPT_EVERY,
+                                   spike_warmup=SPIKE_WARMUP,
+                                   n_hosts=n_hosts, ckpt_shards=n_hosts,
+                                   batch_sharding=batch_sh)
+
+    return {
+        "mesh": f"{DIST_MESH[0]}x{DIST_MESH[1]}",
+        "n_hosts": n_hosts,
+        "devices": int(mesh.size),
+        "plan": plan.describe(),
+        "invariant_violations": len(ch["violations"]),
+        "violations": ch["violations"],
+        "fault_free_violations": len(ff["violations"]),
+        "fault_free_bit_parity": bool(parity),
+        "chaos_completed": ch["result"] is not None,
+        "final_loss_finite": bool(np.isfinite(ch["final_loss"])),
+        "final_loss": float(ch["final_loss"]),
+        "segments": ch["segments"],
+        "crashes": ch["crashes"],
+        "resumes": ch["resumes"],
+        "rollbacks": ch["rollbacks"],
+        "skipped_steps": ch["skipped"],
+        "saves": ch["saves"],
+        "quarantined": ch["quarantined"],
+        "host_kills": ch["host_kills"],
+        "straggles": ch["straggles"],
+        "host_kill_timeouts": ch["host_kill_timeouts"],
+        "straggler_timeouts": ch["straggler_timeouts"],
+        "divergence_checks": ch["divergence_checks"],
+        "data_windows_skipped": ch["data_windows_skipped"],
+    }
+
+
 def main(fast: bool = False, tiny: bool = False, json_dir: str = None):
-    step, make_state, batch_fn, n_steps, plan_args, config = _setup(
-        tiny or fast)
+    step, make_state, batch_fn, n_steps, plan_args, host_plan_args, \
+        config = _setup(tiny or fast)
     rob = robustness(step, make_state, batch_fn, n_steps, plan_args)
+    dist = distributed(step, make_state, batch_fn, n_steps,
+                       host_plan_args)
     rec = {
         "bench": "train_robustness",
         "backend": jax.default_backend(),
         "config": config,
         "robustness": rob,
+        "distributed": dist,
         "note": ("all counters are deterministic (seeded plan + seeded "
-                 "data + prefetch=0): check_regression.py gates them at "
-                 "zero tolerance; violations/parity are the acceptance "
-                 "bar itself"),
+                 "data + prefetch=0 + virtual coordinator clock): "
+                 "check_regression.py gates them at zero tolerance; "
+                 "violations/parity are the acceptance bar itself"),
     }
     emit("train_chaos_violations", 0.0, f"n={rob['invariant_violations']}")
     emit("train_chaos_recovery", 0.0,
@@ -189,6 +303,15 @@ def main(fast: bool = False, tiny: bool = False, json_dir: str = None):
          f"resumes={rob['resumes']} quarantined={rob['quarantined']}")
     emit("train_fault_free_parity", 0.0,
          f"bit_identical={rob['fault_free_bit_parity']}")
+    emit("train_dist_chaos", 0.0,
+         f"mesh={dist['mesh']} host_kills={dist['host_kill_timeouts']} "
+         f"stragglers={dist['straggler_timeouts']} "
+         f"quarantined={dist['quarantined']} "
+         f"rollbacks={dist['rollbacks']} "
+         f"violations={dist['invariant_violations']}")
+    emit("train_dist_parity", 0.0,
+         f"bit_identical={dist['fault_free_bit_parity']} "
+         f"divergence_checks={dist['divergence_checks']}")
 
     # the acceptance bar holds regardless of baselines
     assert rob["invariant_violations"] == 0, rob["violations"]
@@ -199,6 +322,16 @@ def main(fast: bool = False, tiny: bool = False, json_dir: str = None):
     # the plan must actually exercise every recovery tier
     for tier in ("skipped_steps", "rollbacks", "resumes", "quarantined"):
         assert rob[tier] >= 1, f"chaos plan exercised no {tier}"
+    # the distributed acceptance bar (ISSUE 9): zero violations, mesh
+    # bit parity, and every host-level tier actually fired
+    assert dist["invariant_violations"] == 0, dist["violations"]
+    assert dist["fault_free_violations"] == 0
+    assert dist["fault_free_bit_parity"], \
+        "fault-free mesh chaos replay diverged from the plain 2x4 run"
+    assert dist["chaos_completed"] and dist["final_loss_finite"]
+    for tier in ("host_kill_timeouts", "straggler_timeouts",
+                 "quarantined", "rollbacks", "divergence_checks"):
+        assert dist[tier] >= 1, f"distributed chaos exercised no {tier}"
 
     if json_dir is not None:
         print(f"wrote {write_bench_json('train', rec, json_dir)}")

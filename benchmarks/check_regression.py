@@ -141,6 +141,25 @@ METRICS = {
         Metric("robustness.quarantined", "higher"),
         Metric("robustness.saves", "higher"),
         Metric("robustness.replayed_steps", "higher"),
+        # distributed self-healing on the forced-device 2x4 mesh
+        # (ISSUE 9): the coordinator runs on a virtual clock and the
+        # host-fault plan is seeded, so every column is deterministic —
+        # zero tolerance.  Parity/violation columns are the acceptance
+        # bar (a fault-free mesh replay must stay bit-identical to the
+        # plain 2x4 run); the tier counters prove the host-level faults
+        # — peer kill, straggler, shard corruption, coordinated
+        # rollback — keep actually firing and being healed.
+        Metric("distributed.invariant_violations", "lower"),
+        Metric("distributed.fault_free_violations", "lower"),
+        Metric("distributed.fault_free_bit_parity", "true"),
+        Metric("distributed.chaos_completed", "true"),
+        Metric("distributed.final_loss_finite", "true"),
+        Metric("distributed.host_kill_timeouts", "higher"),
+        Metric("distributed.straggler_timeouts", "higher"),
+        Metric("distributed.quarantined", "higher"),
+        Metric("distributed.rollbacks", "higher"),
+        Metric("distributed.divergence_checks", "higher"),
+        Metric("distributed.data_windows_skipped", "higher"),
     ],
     "opt_step": [
         Metric("structural.fused_passes_per_leaf", "lower"),

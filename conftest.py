@@ -1,0 +1,20 @@
+"""Root pytest conftest: honor REPRO_FORCE_DEVICES before jax imports.
+
+Multi-device tests (tests/test_distributed_robustness.py's @needs8
+group) need forced host devices, which XLA only reads at backend init —
+i.e. before ANY test module imports jax.  Setting the flag here, at
+collection time, makes
+
+    REPRO_FORCE_DEVICES=8 python -m pytest ...
+
+work without every test file repeating the env dance the launcher does.
+Unset, nothing changes (single default device; the @needs8 tests skip).
+"""
+
+import os
+
+if os.environ.get("REPRO_FORCE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count="
+        f"{os.environ['REPRO_FORCE_DEVICES']} "
+        + os.environ.get("XLA_FLAGS", ""))

@@ -2,13 +2,23 @@
 
 Design (scaled-down from a multi-host production layout, same invariants):
 
-* one ``.npz`` payload per checkpoint step holding every leaf, keyed by its
-  pytree path (in production: one payload per host shard — the manifest
-  format already records global shapes so the layout generalizes);
-* a JSON *manifest* with step, leaf paths/shapes/dtypes and a crc32 per
-  leaf — written LAST and atomically (tmp + rename), so a half-written
-  checkpoint is never visible: restore only trusts directories whose
-  manifest exists and verifies;
+* ``save(..., n_shards=1)`` writes one ``.npz`` payload per checkpoint
+  step holding every leaf, keyed by its pytree path.  ``n_shards > 1``
+  is the multi-host layout: leaves are deterministically partitioned
+  (greedy by byte size) across ``arrays_XXXX_of_YYYY.npz`` shard files —
+  one per simulated writer host — and the manifest records which shard
+  owns each leaf.  **Shard trust is all-or-nothing**: a step is
+  restorable only if EVERY shard file is present and every leaf CRC
+  verifies; one missing/corrupt/truncated shard untrusts (and, via
+  :func:`latest_valid`, quarantines) the WHOLE step — a checkpoint that
+  is only mostly there is not a checkpoint;
+* a JSON *manifest* with step, shard count, leaf paths/shapes/dtypes,
+  per-leaf shard index and crc32 — written LAST, fsync'd, and published
+  atomically (tmp + rename), so a half-written checkpoint is never
+  visible: restore only trusts directories whose manifest exists and
+  verifies.  Payload files and the manifest are fsync'd BEFORE the
+  publish rename (and the parent directory after), so a published step
+  survives a power-loss-style kill, not just a process kill;
 * rotation keeps the newest K checkpoints (never deleting the one being
   written, and never the one just published even when ``keep`` would drop
   it — a crash-recovery save of an OLD step must survive its own rotation);
@@ -23,7 +33,9 @@ Design (scaled-down from a multi-host production layout, same invariants):
   renaming ``step_X -> step_X.corrupt`` so they are never retried;
 * **elastic resharding on load**: leaves are restored as host arrays and
   re-placed with any target sharding (different mesh shape / device count
-  than at save time) via ``load(..., shardings=...)``.
+  than at save time) via ``load(..., shardings=...)`` — shard files are
+  a storage partition, not a placement constraint, so a step saved from
+  a 2x4 mesh restores onto 1x1 or 4x2 unchanged.
 
 Quantized-storage trees round-trip natively: a
 :class:`repro.core.qtensor.QTensor` is a pytree node whose ``codes`` /
@@ -33,9 +45,11 @@ records the uint8/int8 dtypes and the static layout meta lives in the
 treedef of the ``like`` template at restore).
 
 For fault-injection tests, :func:`write_fault_hook` installs a process-
-wide hook that ``save`` calls at each write stage (``"payload"``,
-``"manifest"``, ``"publish"``, ``"done"``) — the chaos harness uses it to
-kill a save mid-write or corrupt a just-published payload without
+wide hook that ``save`` calls at each write stage (``"payload"``, then
+``"shard{i}"`` per shard file when ``n_shards > 1``, ``"manifest"``,
+``"fsync"``, ``"publish"``, ``"done"``) — the chaos harness uses it to
+kill a save mid-write (including mid-shard, leaving a torn shard set in
+the tmp dir) or corrupt a just-published payload without
 monkey-patching the filesystem.
 """
 
@@ -57,6 +71,52 @@ PAYLOAD = "arrays.npz"
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
+def shard_payload_name(i: int, n_shards: int) -> str:
+    """Payload file for shard ``i`` of an ``n_shards``-way checkpoint."""
+    return f"arrays_{i:04d}_of_{n_shards:04d}.npz"
+
+
+def payload_files(manifest: dict) -> dict:
+    """shard index -> payload filename for a (possibly legacy) manifest.
+    Pre-shard manifests (no ``n_shards`` key) and ``n_shards=1`` saves
+    both use the single legacy ``arrays.npz``."""
+    n = int(manifest.get("n_shards", 1))
+    if n <= 1:
+        return {0: PAYLOAD}
+    return {i: shard_payload_name(i, n) for i in range(n)}
+
+
+def _assign_shards(arrays: dict, n_shards: int) -> dict:
+    """Deterministic leaf -> shard partition: greedy bin packing by byte
+    size (largest first, ties by key) onto the lightest shard.  Each leaf
+    lives wholly in one shard — the storage analogue of per-host writer
+    ownership; global shapes stay in the manifest so restore is elastic."""
+    if n_shards <= 1:
+        return {k: 0 for k in arrays}
+    sizes = [0] * n_shards
+    assign = {}
+    for k in sorted(arrays, key=lambda k: (-arrays[k].nbytes, k)):
+        i = min(range(n_shards), key=lambda j: (sizes[j], j))
+        assign[k] = i
+        sizes[i] += max(int(arrays[k].nbytes), 1)
+    return assign
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory; best-effort on filesystems that refuse
+    directory fds (the rename itself is still atomic there)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 class CorruptCheckpointError(IOError):
     """A checkpoint directory exists but fails verification (crc mismatch,
     truncated/unreadable payload, or manifest/payload leaf mismatch)."""
@@ -69,11 +129,13 @@ _write_hook: Optional[Callable[[str, str], None]] = None
 @contextlib.contextmanager
 def write_fault_hook(hook: Callable[[str, str], None]):
     """Install ``hook(stage, path)`` for the duration of the context.
-    Stages, in order per save: ``payload`` (before the npz write, path =
-    tmp dir), ``manifest`` (before the manifest write, path = tmp dir),
-    ``publish`` (before the atomic rename, path = tmp dir), ``done``
-    (after publish + rotation, path = final dir).  The hook may raise to
-    emulate a crash at that point."""
+    Stages, in order per save: ``payload`` (before any payload write,
+    path = tmp dir), then for ``n_shards > 1`` one ``shard{i}`` per
+    shard file (before that shard's write), ``manifest`` (before the
+    manifest write), ``fsync`` (after the manifest is written and
+    flushed, before publish), ``publish`` (before the atomic rename),
+    ``done`` (after publish + rotation, path = final dir).  The hook may
+    raise to emulate a crash at that point."""
     global _write_hook
     prev = _write_hook
     _write_hook = hook
@@ -99,8 +161,15 @@ def _paths_and_leaves(tree):
     return out, treedef
 
 
-def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
-    """Atomically write checkpoint for ``step``; returns its directory."""
+def save(ckpt_dir: str, step: int, tree, keep: int = 3,
+         n_shards: int = 1) -> str:
+    """Atomically write checkpoint for ``step``; returns its directory.
+
+    ``n_shards > 1`` partitions the leaves across that many payload
+    files (the multi-host layout; see the module docstring for the
+    all-or-nothing trust rule).  ``n_shards=1`` is byte-for-byte the
+    legacy single-payload layout.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = final + ".tmp"
@@ -114,17 +183,36 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
 
     items, _ = _paths_and_leaves(tree)
     arrays = {k: np.asarray(v) for k, v in items}
+    assign = _assign_shards(arrays, n_shards)
+    files = payload_files({"n_shards": n_shards})
     _stage("payload", tmp)
-    np.savez(os.path.join(tmp, PAYLOAD), **arrays)
+    for i, fname in sorted(files.items()):
+        if n_shards > 1:
+            # per-shard stage: a mid-shard-write kill leaves a torn
+            # shard SET in the tmp dir — never visible to restore
+            _stage(f"shard{i}", tmp)
+        fpath = os.path.join(tmp, fname)
+        np.savez(fpath, **{k: a for k, a in arrays.items()
+                           if assign[k] == i})
+        _fsync_path(fpath)
     manifest = {
         "step": step,
+        "n_shards": int(max(n_shards, 1)),
         "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype),
+                       "shard": assign[k],
                        "crc32": zlib.crc32(np.ascontiguousarray(a).tobytes())}
                    for k, a in arrays.items()},
     }
     _stage("manifest", tmp)
     with open(os.path.join(tmp, MANIFEST), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        # durability before visibility: rename alone only orders
+        # metadata — a power-loss-style kill after publish must not
+        # leave a manifest of zeros behind a valid-looking name
+        os.fsync(f.fileno())
+    _fsync_path(tmp)
+    _stage("fsync", tmp)
     _stage("publish", tmp)
     if os.path.isdir(final):
         # re-save of an existing step (a rollback replay with LR backoff
@@ -140,6 +228,7 @@ def save(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
         shutil.rmtree(trash, ignore_errors=True)
     else:
         os.replace(tmp, final)  # atomic publish
+    _fsync_path(ckpt_dir)       # make the rename itself durable
     _rotate(ckpt_dir, keep, protect=os.path.basename(final))
     _stage("done", final)
     return final
@@ -166,28 +255,48 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return best
 
 
+def _open_payloads(d: str, manifest: dict) -> dict:
+    """Open every payload shard of a checkpoint dir; shard index -> npz.
+    Raises on any missing/unreadable shard — trust is all-or-nothing."""
+    handles = {}
+    try:
+        for i, fname in payload_files(manifest).items():
+            handles[i] = np.load(os.path.join(d, fname))
+    except Exception:
+        for h in handles.values():
+            h.close()
+        raise
+    return handles
+
+
 def verify_dir(d: str) -> bool:
     """True iff the checkpoint directory fully verifies: readable
-    manifest, readable payload, and every manifest leaf present with
-    matching shape/dtype/crc32."""
+    manifest, EVERY payload shard present and readable, and every
+    manifest leaf present in its shard with matching shape/dtype/crc32.
+    One missing, truncated or corrupt shard fails the whole step."""
     try:
         with open(os.path.join(d, MANIFEST)) as f:
             manifest = json.load(f)
-        with np.load(os.path.join(d, PAYLOAD)) as payload:
-            names = set(payload.files)
+        payloads = _open_payloads(d, manifest)
+        try:
             for key, meta in manifest["leaves"].items():
-                if key not in names:
+                pz = payloads.get(int(meta.get("shard", 0)))
+                if pz is None or key not in pz.files:
                     return False
-                a = payload[key]
+                a = pz[key]
                 if (list(a.shape) != list(meta["shape"])
                         or str(a.dtype) != meta["dtype"]):
                     return False
                 crc = zlib.crc32(np.ascontiguousarray(a).tobytes())
                 if crc != meta["crc32"]:
                     return False
+        finally:
+            for pz in payloads.values():
+                pz.close()
         return True
     except Exception:
-        # unreadable manifest / truncated zip / bad entry — all untrusted
+        # unreadable manifest / missing shard / truncated zip / bad
+        # entry — all untrusted
         return False
 
 
@@ -247,26 +356,33 @@ def load(ckpt_dir: str, like, step: Optional[int] = None,
     with open(os.path.join(d, MANIFEST)) as f:
         manifest = json.load(f)
     try:
-        payload = np.load(os.path.join(d, PAYLOAD))
+        payloads = _open_payloads(d, manifest)
     except Exception as e:
         raise CorruptCheckpointError(
-            f"unreadable checkpoint payload in {d}: {e}") from e
+            f"missing or unreadable checkpoint payload shard in {d}: {e} "
+            f"— one bad shard untrusts the whole step") from e
 
     items, treedef = _paths_and_leaves(like)
     leaves = []
-    with payload:
+    try:
         for key, ref in items:
             if key not in manifest["leaves"]:
                 raise KeyError(f"checkpoint missing leaf {key!r}")
+            meta = manifest["leaves"][key]
+            payload = payloads.get(int(meta.get("shard", 0)))
+            if payload is None:
+                raise CorruptCheckpointError(
+                    f"leaf {key!r} assigned to unknown shard "
+                    f"{meta.get('shard')!r} in {d}")
             try:
                 a = payload[key]
             except KeyError:
                 raise CorruptCheckpointError(
-                    f"manifest leaf {key!r} missing from payload in {d}")
+                    f"manifest leaf {key!r} missing from its payload "
+                    f"shard in {d}")
             except Exception as e:
                 raise CorruptCheckpointError(
                     f"unreadable leaf {key!r} in {d}: {e}") from e
-            meta = manifest["leaves"][key]
             if verify:
                 crc = zlib.crc32(np.ascontiguousarray(a).tobytes())
                 if crc != meta["crc32"]:
@@ -277,6 +393,9 @@ def load(ckpt_dir: str, like, step: Optional[int] = None,
                 raise ValueError(f"shape mismatch for {key!r}: "
                                  f"{a.shape} vs {np.shape(ref)}")
             leaves.append(a)
+    finally:
+        for pz in payloads.values():
+            pz.close()
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:
         tree = jax.device_put(tree, shardings)

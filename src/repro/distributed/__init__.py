@@ -1,9 +1,16 @@
-"""Distribution: sharding rules + collective accounting."""
+"""Distribution: sharding rules, collective accounting, the cross-host
+agreement seam (coordinator) and the divergence audit."""
 
+from .audit import replica_divergence, tree_fingerprint
+from .coordinator import (DEAD, AgreementError, Coordinator,
+                          CoordinatorTimeout, InProcessBus, Straggle)
 from .sharding import (activation_spec, cache_shardings, cache_spec,
                        data_batch_spec, param_spec, params_shardings,
                        state_shardings, train_batch_shardings)
 
 __all__ = ["param_spec", "params_shardings", "state_shardings",
            "train_batch_shardings", "cache_spec", "cache_shardings",
-           "data_batch_spec", "activation_spec"]
+           "data_batch_spec", "activation_spec",
+           "Coordinator", "CoordinatorTimeout", "AgreementError",
+           "InProcessBus", "Straggle", "DEAD",
+           "tree_fingerprint", "replica_divergence"]

@@ -51,7 +51,9 @@ def fused_opt_step_leaf(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
     ``ok`` (traced 0/1 scalar, default 1) is the non-finite guard: 0
     makes the kernel write (w, mu, nu) back unchanged — the skip path of
     a poisoned step, gated INSIDE the kernel so no extra HBM pass exists
-    on either branch.
+    on either branch.  The caller owns the flag's scope: under GSPMD the
+    train step all-reduces it across data shards first (DESIGN.md §12),
+    so by kernel entry every device holds the same 0/1.
     """
     interpret = _interpret() if interpret is None else interpret
     ok = 1.0 if ok is None else ok

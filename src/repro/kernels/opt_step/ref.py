@@ -27,7 +27,9 @@ def opt_step_ref(w, g, mu, nu, *, lr, bc1, bc2, clip_scale,
     """Returns ``(new_w, new_mu, new_nu, pen)``; ``pen`` is the UNSCALED
     penalty value (multiply by ``lam`` for the loss-side number), 0 when
     ``lam == 0`` (non-eligible leaves / no regularizer).  ``ok`` mirrors
-    the kernel's non-finite guard: 0 returns (w, mu, nu) unchanged."""
+    the kernel's non-finite guard: 0 returns (w, mu, nu) unchanged —
+    like the kernel, this reference assumes the caller already reduced
+    the flag to a globally agreed scalar (DESIGN.md §12)."""
     g = g * clip_scale
     if lam != 0.0:
         pen, grad = lotion_penalty_and_grad(

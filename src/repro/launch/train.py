@@ -91,6 +91,17 @@ def main():
                         if cfg.n_codebooks > 1 else P(("data",), None, "model")),
                     head_in=NamedSharding(mesh, P(("data",), None, None)))
 
+    # simulated host count: one host per data/pod-axis slice of the mesh
+    # (the replica groups a real multi-host job would place one process
+    # each on); "model" shards live inside a host.  1 on a model-only or
+    # default mesh.  Drives both the chaos bus width and the checkpoint
+    # shard count (one payload shard per host, as a real per-host
+    # sharded save would write).
+    n_hosts = 1
+    for ax, n in mesh.shape.items():
+        if ax != "model":
+            n_hosts *= int(n)
+
     perm = permutation_table(0, cfg.vocab)
 
     def batch_fn(s):
@@ -114,18 +125,46 @@ def main():
             step = make_train_step(
                 cfg, tcfg, opt, grad_shardings=state_sh["params"],
                 loss_fn=tfaults.chaos_loss_fn(cfg, tcfg))
+            kw = {}
+            if n_hosts > 1:
+                # host-level tier: pick hook ordinals clear of the
+                # seeded crash ordinals (a crash at the same ordinal
+                # would end the segment before the kill's timeout is
+                # ever observed).  The base plan is deterministic per
+                # seed, so sampling it twice is free.
+                base = tfaults.chaos_train_plan(args.chaos_seed,
+                                                n_steps=args.steps)
+                taken = set(base.crash_steps)
+                free = (i for i in range(2, args.steps - 1)
+                        if i not in taken)
+                kill_at = next(free)
+                straggle_at = next(free)
+                kw = dict(n_hosts=n_hosts, host_kill_at=kill_at,
+                          straggle_at=straggle_at,
+                          corrupt_mode=("bitflip", n_hosts - 1),
+                          torn_manifest_save=4,
+                          # pin the spike burst late in the FETCH stream
+                          # (ordinals run past n_steps because replays
+                          # keep counting): it must land in the long
+                          # final segment, past the monitor warmup, so
+                          # the coordinated-rollback tier provably fires
+                          spike_at=(5 * args.steps) // 4, spike_len=3)
             plan = tfaults.chaos_train_plan(args.chaos_seed,
-                                            n_steps=args.steps)
+                                            n_steps=args.steps, **kw)
             ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(
                 prefix="chaos_train_")
-            print(f"chaos: {plan.describe()} ckpt_dir={ckpt_dir}")
+            print(f"chaos: {plan.describe()} n_hosts={n_hosts} "
+                  f"ckpt_dir={ckpt_dir}")
             summary = tfaults.run_chaos(
                 step, make_state, batch_fn, plan, args.steps, ckpt_dir,
+                n_hosts=n_hosts, ckpt_shards=n_hosts,
                 log=print)
             counters = {k: summary[k] for k in
                         ("segments", "crashes", "resumes", "rollbacks",
                          "skipped", "replayed_steps", "saves",
-                         "quarantined")}
+                         "quarantined", "host_kill_timeouts",
+                         "straggler_timeouts", "divergence_checks",
+                         "data_windows_skipped")}
             print(f"chaos done: violations={len(summary['violations'])} "
                   f"{counters} final_loss={summary['final_loss']:.4f}")
             for v in summary["violations"]:
@@ -133,6 +172,14 @@ def main():
             ok = (not summary["violations"]
                   and summary["result"] is not None
                   and math.isfinite(summary["final_loss"]))
+            if n_hosts > 1:
+                # the distributed acceptance bar: every host-level fault
+                # tier must have actually fired AND been healed
+                ok = (ok and summary["host_kill_timeouts"] >= 1
+                      and summary["straggler_timeouts"] >= 1
+                      and summary["quarantined"] >= 1
+                      and summary["rollbacks"] >= 1
+                      and summary["divergence_checks"] >= 1)
             raise SystemExit(0 if ok else 1)
 
         params = jax.jit(lambda k: init_state(lm_init(k, cfg), opt),
@@ -149,6 +196,7 @@ def main():
             # resumes from the newest CRC-verified checkpoint
             hooks = dict(ckpt_dir=args.ckpt_dir,
                          ckpt_every=max(args.steps // 2, 1),
+                         ckpt_shards=n_hosts,
                          auto_resume=True)
         out = run_loop(step, params, pipe, args.steps, log_every=5, **hooks)
         print(f"done: {int(out['state']['step'])} steps on mesh "

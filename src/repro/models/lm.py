@@ -362,34 +362,62 @@ def lm_forward(params, cfg: LMConfig, tokens: Array,
 def lm_loss(params, cfg: LMConfig, tokens: Array, labels: Array,
             image_embeds: Optional[Array] = None,
             attn_chunk: Optional[int] = None,
-            logit_chunk: Optional[int] = None) -> Array:
+            logit_chunk: Optional[int] = None,
+            per_example: bool = False):
     """Mean next-token CE with an optional *chunked head*: the full
     (b, l, vocab) logits tensor is never materialized — head + CE run as a
     rematerialized scan over sequence chunks, holding one
     (b, logit_chunk, vocab) slice at a time.  Essential at 256k-vocab,
-    1M-token steps (see EXPERIMENTS.md §Perf)."""
-    from repro.train.loop import cross_entropy  # deferred: no import cycle
+    1M-token steps (see EXPERIMENTS.md §Perf).
+
+    ``per_example=True`` additionally returns the (b,)-vector of
+    per-example mean CE — the raw material for the cross-shard non-finite
+    gate (DESIGN.md §12) — as ``(ce, ce_ex)``.  The scalar ``ce`` is
+    computed from the identical elementwise terms either way, so the
+    side output never perturbs the loss bits."""
+    # deferred: no import cycle
+    from repro.train.loop import _ce_terms, cross_entropy
 
     x = _trunk(params, cfg, tokens, image_embeds, attn_chunk)
     l = tokens.shape[1]
     if logit_chunk is None or logit_chunk >= l:
-        return cross_entropy(_head(params, cfg, x), labels)
+        if not per_example:
+            return cross_entropy(_head(params, cfg, x), labels)
+        terms = _ce_terms(_head(params, cfg, x), labels)
+        return (jnp.mean(terms),
+                jnp.mean(terms, axis=tuple(range(1, terms.ndim))))
 
     n_chunks = l // logit_chunk
     xc = x.reshape((x.shape[0], n_chunks, logit_chunk, x.shape[-1]))
     lc = labels.reshape((labels.shape[0], n_chunks, logit_chunk)
                         + labels.shape[2:])
+    inputs = (xc.transpose(1, 0, 2, 3), jnp.moveaxis(lc, 1, 0))
 
-    def chunk_ce(carry, inp):
+    if not per_example:
+        def chunk_ce(carry, inp):
+            xch, lch = inp
+            return carry + cross_entropy(_head(params, cfg, xch), lch), None
+
+        body = jax.checkpoint(chunk_ce, prevent_cse=False)
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), inputs,
+                                unroll=scan_unroll(n_chunks))
+        return total / n_chunks
+
+    def chunk_ce_ex(carry, inp):
         xch, lch = inp
-        return carry + cross_entropy(_head(params, cfg, xch), lch), None
+        terms = _ce_terms(_head(params, cfg, xch), lch)
+        tot, pex = carry
+        return (tot + jnp.mean(terms),
+                pex + jnp.mean(terms, axis=tuple(range(1, terms.ndim)))
+                ), None
 
-    body = jax.checkpoint(chunk_ce, prevent_cse=False)
-    total, _ = jax.lax.scan(
-        body, jnp.zeros((), jnp.float32),
-        (xc.transpose(1, 0, 2, 3), jnp.moveaxis(lc, 1, 0)),
-        unroll=scan_unroll(n_chunks))
-    return total / n_chunks
+    body = jax.checkpoint(chunk_ce_ex, prevent_cse=False)
+    (total, pex), _ = jax.lax.scan(
+        body,
+        (jnp.zeros((), jnp.float32),
+         jnp.zeros((tokens.shape[0],), jnp.float32)),
+        inputs, unroll=scan_unroll(n_chunks))
+    return total / n_chunks, pex / n_chunks
 
 
 # ==========================================================================

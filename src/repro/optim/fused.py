@@ -74,7 +74,9 @@ def _fused_core(kind: str, lr_fn, *, b1: float, b2: float, eps: float,
             raise ValueError(f"fused_lotion_{kind}_core needs params")
         norm = global_norm(grads)
         # non-finite guard (DESIGN.md §11): a poisoned step (non-finite
-        # gnorm, or the train step's loss flag via the step_ok extra)
+        # gnorm, or the train step's loss flag via the step_ok extra —
+        # on a mesh that flag is already all-reduced across data shards
+        # per DESIGN.md §12, so every device agrees before it gets here)
         # must apply NO update.  The gate rides INSIDE the step kernel
         # as the SC_OK scalar — w/mu/nu are written back unchanged with
         # zero extra HBM passes — and count is frozen here so the bias

@@ -31,6 +31,17 @@ happening.  This module supplies both halves of that proof:
   from scratch state + ``auto_resume`` — exactly what a supervisor
   restarting a killed job does.
 
+PR 9 adds the HOST level (DESIGN.md §12): the plan can kill or straggle
+a simulated peer host mid-run (via the coordinator's
+:class:`~repro.distributed.InProcessBus`), tear a checkpoint manifest,
+or corrupt ONE shard of a sharded save; the auditor posts a param-tree
+fingerprint through the coordinator every ``audit_every`` steps (the
+cross-host divergence audit, doubling as the liveness heartbeat) and
+byte-compares same-window device shards.  A dead/straggling host
+surfaces as a typed ``CoordinatorTimeout`` which the supervisor treats
+like any crash — restart, heal the bus (replacement host), resume from
+the newest checkpoint EVERY host can restore.
+
 Faults are injected only through public seams — the batch function, the
 step hook, and the checkpoint write hook — the chaos layer holds no
 private loop state and cannot itself desynchronize the thing it audits.
@@ -74,12 +85,23 @@ class TrainFaultPlan:
     # step-hook ordinals at which the run is hard-killed (after the
     # step, before the checkpoint boundary — the adversarial window)
     crash_steps: frozenset = frozenset()
-    # save ordinal -> write stage ("payload"|"manifest"|"publish") at
-    # which the save is hard-killed mid-write
+    # save ordinal -> write stage ("payload"|"shard{i}"|"manifest"|
+    # "fsync"|"publish") at which the save is hard-killed mid-write
     ckpt_crashes: Dict[int, str] = dataclasses.field(default_factory=dict)
-    # save ordinal -> "bitflip" | "truncate" applied AFTER publish: the
-    # newest checkpoint on disk is poisoned, restore must quarantine it
-    corrupt_saves: Dict[int, str] = dataclasses.field(default_factory=dict)
+    # save ordinal -> mode or (mode, shard) applied AFTER publish, where
+    # mode is "bitflip" | "truncate" | "delete" | "manifest": the newest
+    # checkpoint on disk is poisoned (possibly one shard of many, or its
+    # manifest torn), restore must quarantine the WHOLE step
+    corrupt_saves: Dict[int, Any] = dataclasses.field(default_factory=dict)
+    # host-level faults (DESIGN.md §12), keyed by step-hook ordinal like
+    # crash_steps: the fault lands after that step's audit, and the NEXT
+    # coordination round (fingerprint heartbeat / rollback election)
+    # surfaces it as a CoordinatorTimeout
+    # hook ordinal -> simulated peer host to kill (1..n_hosts-1)
+    host_kills: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # hook ordinal -> (host, virtual delay seconds); delay > the
+    # coordinator timeout is indistinguishable from dead
+    stragglers: Dict[int, Any] = dataclasses.field(default_factory=dict)
 
     def describe(self) -> str:
         return (f"TrainFaultPlan(seed={self.seed}, "
@@ -88,7 +110,9 @@ class TrainFaultPlan:
                 f"stalls={len(self.stall_fetches)}, "
                 f"crashes={len(self.crash_steps)}, "
                 f"ckpt_crashes={len(self.ckpt_crashes)}, "
-                f"corrupt={len(self.corrupt_saves)})")
+                f"corrupt={len(self.corrupt_saves)}, "
+                f"host_kills={len(self.host_kills)}, "
+                f"stragglers={len(self.stragglers)})")
 
 
 def chaos_train_plan(seed: int, n_steps: int = 18,
@@ -100,7 +124,15 @@ def chaos_train_plan(seed: int, n_steps: int = 18,
                      ckpt_crash_save: Optional[int] = 2,
                      ckpt_crash_stage: str = "manifest",
                      corrupt_save: Optional[int] = 3,
-                     corrupt_mode: str = "bitflip") -> TrainFaultPlan:
+                     corrupt_mode: str = "bitflip",
+                     n_hosts: int = 1,
+                     host_kill_at: Optional[int] = None,
+                     host_kill_host: int = 1,
+                     straggle_at: Optional[int] = None,
+                     straggle_host: Optional[int] = None,
+                     straggle_delay: float = 1e9,
+                     torn_manifest_save: Optional[int] = None
+                     ) -> TrainFaultPlan:
     """Sample a :class:`TrainFaultPlan` from a seeded generator — same
     arguments, same plan, machine-independent.
 
@@ -108,6 +140,12 @@ def chaos_train_plan(seed: int, n_steps: int = 18,
     monitor's warmup window; crash ordinals spread over the run
     including the replay-inflated tail) so a default plan exercises
     every recovery tier: skip, rollback, mid-write kill, quarantine.
+
+    With ``n_hosts > 1`` the host-level tier joins in: a peer host kill
+    at hook ordinal ``host_kill_at``, a straggler (virtual
+    ``straggle_delay``, default far past any timeout) at ``straggle_at``,
+    and — mesh or not — a torn manifest (``torn_manifest_save``) and
+    shard-targeted corruption via ``corrupt_mode=(mode, shard)``.
     """
     rng = np.random.default_rng(seed)
     plan = TrainFaultPlan(seed=seed)
@@ -135,17 +173,47 @@ def chaos_train_plan(seed: int, n_steps: int = 18,
         plan.ckpt_crashes[int(ckpt_crash_save)] = ckpt_crash_stage
     if corrupt_save is not None:
         plan.corrupt_saves[int(corrupt_save)] = corrupt_mode
+    if torn_manifest_save is not None:
+        plan.corrupt_saves[int(torn_manifest_save)] = "manifest"
+    if n_hosts > 1:
+        if host_kill_at is not None:
+            plan.host_kills[int(host_kill_at)] = int(host_kill_host)
+        if straggle_at is not None:
+            h = (int(straggle_host) if straggle_host is not None
+                 else max(1, n_hosts - 1))
+            plan.stragglers[int(straggle_at)] = (h, float(straggle_delay))
     return plan
 
 
 def corrupt_checkpoint(path: str, mode: str = "bitflip",
-                       rng: Optional[np.random.Generator] = None) -> None:
-    """Damage a published checkpoint payload in place.  ``bitflip``
-    inverts one byte in the middle of the npz (array data region — the
+                       rng: Optional[np.random.Generator] = None,
+                       shard: int = 0) -> None:
+    """Damage a published checkpoint in place.  ``bitflip`` inverts one
+    byte in the middle of one payload npz (array data region — the
     per-leaf crc32 catches it even when the zip container still reads);
-    ``truncate`` cuts the file (unreadable container)."""
-    payload = os.path.join(path, ckpt_io.PAYLOAD)
-    with open(payload, "rb") as f:
+    ``truncate`` cuts the file (unreadable container); ``delete``
+    removes it outright (lost shard); ``manifest`` tears the manifest
+    json mid-file (torn metadata write).  ``shard`` selects which
+    payload shard of a sharded save to hit — damaging ANY one shard must
+    untrust the whole step."""
+    import json
+
+    if mode == "manifest":
+        target = os.path.join(path, ckpt_io.MANIFEST)
+        with open(target, "rb") as f:
+            data = bytearray(f.read())
+        with open(target, "wb") as f:
+            f.write(bytes(data[: max(2, len(data) // 2)]))
+        return
+    with open(os.path.join(path, ckpt_io.MANIFEST)) as f:
+        manifest = json.load(f)
+    files = ckpt_io.payload_files(manifest)
+    target = os.path.join(path,
+                          files.get(int(shard), next(iter(files.values()))))
+    if mode == "delete":
+        os.remove(target)
+        return
+    with open(target, "rb") as f:
         data = bytearray(f.read())
     if mode == "truncate":
         data = data[: max(16, len(data) // 3)]
@@ -153,7 +221,7 @@ def corrupt_checkpoint(path: str, mode: str = "bitflip",
         data[len(data) // 2] ^= 0xFF
     else:
         raise ValueError(f"unknown corruption mode {mode!r}")
-    with open(payload, "wb") as f:
+    with open(target, "wb") as f:
         f.write(bytes(data))
 
 
@@ -181,14 +249,21 @@ class ChaosInjector:
     """Stateful fault applier: owns the fetch/hook/save ordinals and
     applies the plan through the public seams.  A ``plan=None`` injector
     counts ordinals and stamps ``poison=1.0`` but injects nothing (the
-    fault-free bit-parity arm)."""
+    fault-free bit-parity arm).  With a ``bus``
+    (:class:`~repro.distributed.InProcessBus`) the plan's host-level
+    faults mark simulated peers dead/straggling at their hook ordinal —
+    the next coordination round converts that into a
+    :class:`~repro.distributed.CoordinatorTimeout`."""
 
-    def __init__(self, plan: Optional[TrainFaultPlan]):
+    def __init__(self, plan: Optional[TrainFaultPlan], bus=None):
         self.plan = plan or TrainFaultPlan(seed=0)
+        self.bus = bus
         self.fetches = 0
         self.hook_calls = 0
         self.saves = 0
         self.crashes = 0
+        self.host_kills = 0
+        self.straggles = 0
         self.corrupted: List[str] = []
         self._cur_save = -1
         self._rng = np.random.default_rng(self.plan.seed + 101)
@@ -212,11 +287,19 @@ class ChaosInjector:
 
     def crash_hook(self) -> Callable:
         """``run_loop`` step_hook raising :class:`InjectedCrash` at the
-        plan's hook ordinals (after the step, before the checkpoint)."""
+        plan's hook ordinals (after the step, before the checkpoint) and
+        marking host-level faults on the bus at theirs."""
 
         def hook(state, metrics):
             i = self.hook_calls
             self.hook_calls += 1
+            if self.bus is not None and i in self.plan.host_kills:
+                self.bus.kill(self.plan.host_kills[i])
+                self.host_kills += 1
+            if self.bus is not None and i in self.plan.stragglers:
+                h, delay = self.plan.stragglers[i]
+                self.bus.straggle(h, delay)
+                self.straggles += 1
             if i in self.plan.crash_steps:
                 self.crashes += 1
                 raise InjectedCrash(
@@ -240,8 +323,10 @@ class ChaosInjector:
                     f"injected crash mid-checkpoint-write "
                     f"(save {n}, stage {stage!r})")
             if stage == "done" and n in self.plan.corrupt_saves:
-                corrupt_checkpoint(path, self.plan.corrupt_saves[n],
-                                   self._rng)
+                spec = self.plan.corrupt_saves[n]
+                mode, shard = (spec if isinstance(spec, tuple)
+                               else (spec, 0))
+                corrupt_checkpoint(path, mode, self._rng, shard=shard)
                 self.corrupted.append(path)
 
         return hook
@@ -250,15 +335,28 @@ class ChaosInjector:
 class TrainAuditor:
     """Per-step invariant audit for chaos training runs (run through
     ``run_loop``'s ``step_hook``, before the injector's crash hook so a
-    killed step is still audited)."""
+    killed step is still audited).
 
-    def __init__(self):
+    With a ``coordinator`` the audit adds the cross-host divergence
+    check every ``audit_every`` steps: the param+opt tree fingerprint is
+    posted and compared across hosts (the round doubles as the liveness
+    heartbeat — a killed host surfaces here as a
+    :class:`~repro.distributed.CoordinatorTimeout`, which propagates to
+    the supervisor), and ``replica_audit=True`` additionally
+    byte-compares same-window device shards of the params."""
+
+    def __init__(self, coordinator=None, audit_every: int = 1,
+                 replica_audit: bool = True):
+        self.coordinator = coordinator
+        self.audit_every = max(1, int(audit_every))
+        self.replica_audit = replica_audit
         self.violations: List[str] = []
         self.total_skips = 0
         self.total_rollbacks = 0
         self.total_resumes = 0
         self.replayed_steps = 0
         self.steps_seen = 0
+        self.divergence_checks = 0
         self.last_loss = float("nan")
         self._treedef = None
         self._prev_step: Optional[int] = None
@@ -307,6 +405,20 @@ class TrainAuditor:
             self.violations.append(
                 f"non-finite loss at step {step} not flagged skipped: "
                 f"the guard failed to gate the update")
+        if (self.coordinator is not None
+                and self.steps_seen % self.audit_every == 0):
+            # divergence audit + liveness heartbeat: a dead/straggling
+            # host raises CoordinatorTimeout out of this hook — run_loop
+            # does not catch it, the supervisor (run_chaos) does
+            from repro.distributed import (replica_divergence,
+                                           tree_fingerprint)
+            digest = tree_fingerprint({"params": state["params"],
+                                       "opt": state["opt"]})
+            self.divergence_checks += 1
+            self.violations.extend(
+                self.coordinator.check_fingerprint(step, digest))
+            if self.replica_audit:
+                self.violations.extend(replica_divergence(state["params"]))
 
     def on_segment_end(self, result: Dict[str, Any]) -> None:
         """Cross-check ``run_loop``'s returned telemetry against the
@@ -315,10 +427,12 @@ class TrainAuditor:
             self.violations.append(
                 f"skip-counter imbalance: run_loop says "
                 f"{result['skipped']}, audit saw {self._seg_skips}")
-        if result["rollbacks"] != self._seg_rollbacks:
+        loop_rollbacks = (result["rollbacks"]
+                          + result.get("eval_rollbacks", 0))
+        if loop_rollbacks != self._seg_rollbacks:
             self.violations.append(
                 f"rollback-counter imbalance: run_loop says "
-                f"{result['rollbacks']}, audit saw {self._seg_rollbacks}")
+                f"{loop_rollbacks}, audit saw {self._seg_rollbacks}")
 
     def finish(self) -> None:
         if not np.isfinite(self.last_loss):
@@ -329,10 +443,16 @@ class TrainAuditor:
 def run_chaos(train_step, make_state: Callable[[], dict], batch_fn,
               plan: Optional[TrainFaultPlan], n_steps: int, ckpt_dir: str,
               *, ckpt_every: int = 3, ckpt_keep: int = 3,
+              ckpt_shards: int = 1,
               max_skips: int = 8,
               spike_zscore: float = 8.0, spike_warmup: int = 6,
               spike_patience: int = 2, backoff_scale: float = 0.5,
               cooldown_steps: int = 8, max_rollbacks: int = 4,
+              rollback_reorder: bool = True,
+              n_hosts: int = 1, audit_every: int = 1,
+              replica_audit: bool = True,
+              coordinator_timeout: float = 30.0,
+              batch_sharding=None,
               max_segments: int = 32,
               log: Callable = lambda *a, **k: None) -> Dict[str, Any]:
     """Drive ``run_loop`` to completion under a fault plan, emulating a
@@ -343,13 +463,23 @@ def run_chaos(train_step, make_state: Callable[[], dict], batch_fn,
     for batches that are then dropped — nondeterministic fault
     placement), then calls ``run_loop(auto_resume=True)``.  An
     :class:`InjectedCrash` ends the segment exactly like SIGKILL would;
-    anything else (including the guard's budget errors) propagates.
+    a :class:`~repro.distributed.CoordinatorTimeout` (dead or straggling
+    host detected by a coordination round) ends it the same way, and the
+    bus is healed at the next segment start — the supervisor replacing
+    the failed host.  Anything else (including the guard's budget
+    errors) propagates.
 
     Returns a summary dict with the auditor's violations and the
     counters the bench gates on.
     """
-    inj = ChaosInjector(plan)
-    auditor = TrainAuditor()
+    from repro.distributed import Coordinator, CoordinatorTimeout, \
+        InProcessBus
+
+    bus = InProcessBus(n_hosts)
+    coord = Coordinator(bus, timeout=coordinator_timeout)
+    inj = ChaosInjector(plan, bus=bus)
+    auditor = TrainAuditor(coordinator=coord, audit_every=audit_every,
+                           replica_audit=replica_audit)
     chaos_batch_fn = inj.wrap_batch_fn(batch_fn)
     crash = inj.crash_hook()
 
@@ -359,6 +489,8 @@ def run_chaos(train_step, make_state: Callable[[], dict], batch_fn,
 
     result = None
     segments = 0
+    host_kill_timeouts = 0
+    straggler_timeouts = 0
     with ckpt_io.write_fault_hook(inj.write_hook()):
         while result is None:
             segments += 1
@@ -368,22 +500,41 @@ def run_chaos(train_step, make_state: Callable[[], dict], batch_fn,
                     f"segments")
                 break
             auditor.on_segment_start()
-            pipe = DataPipeline(chaos_batch_fn, prefetch=0)
+            # supervisor restart replaces dead/straggling hosts
+            bus.heal_all()
+            pipe = DataPipeline(chaos_batch_fn, prefetch=0,
+                                sharding=batch_sharding)
             state = make_state()
             try:
                 result = run_loop(
                     train_step, state, pipe, n_steps,
                     log_every=0, log=log,
                     ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
-                    ckpt_keep=ckpt_keep, auto_resume=True,
+                    ckpt_keep=ckpt_keep, ckpt_shards=ckpt_shards,
+                    auto_resume=True,
                     max_skips=max_skips,
                     spike_zscore=spike_zscore, spike_warmup=spike_warmup,
                     spike_patience=spike_patience,
                     backoff_scale=backoff_scale,
                     cooldown_steps=cooldown_steps,
                     max_rollbacks=max_rollbacks,
+                    rollback_reorder=rollback_reorder,
+                    coordinator=coord,
                     step_hook=hook)
             except InjectedCrash as e:
+                log(f"chaos segment {segments}: {e}")
+            except CoordinatorTimeout as e:
+                # classify by what the injector actually marked: a dead
+                # host and a straggler past the deadline are the same
+                # wire-level silence, but the bench gates on both tiers
+                missing = set(e.missing)
+                if missing & bus.dead:
+                    host_kill_timeouts += 1
+                elif missing & set(bus.straggling):
+                    straggler_timeouts += 1
+                else:
+                    auditor.violations.append(
+                        f"unattributable coordinator timeout: {e}")
                 log(f"chaos segment {segments}: {e}")
             finally:
                 pipe.close()
@@ -407,6 +558,17 @@ def run_chaos(train_step, make_state: Callable[[], dict], batch_fn,
         "saves": inj.saves,
         "corrupted_saves": len(inj.corrupted),
         "quarantined": quarantined,
+        "n_hosts": bus.n_hosts,
+        "host_kills": inj.host_kills,
+        "straggles": inj.straggles,
+        "host_kill_timeouts": host_kill_timeouts,
+        "straggler_timeouts": straggler_timeouts,
+        "divergence_checks": auditor.divergence_checks,
+        "coord_rounds": coord.rounds,
+        "data_windows_skipped": (result.get("data_windows_skipped", 0)
+                                 if result is not None else 0),
+        "eval_rollbacks": (result.get("eval_rollbacks", 0)
+                           if result is not None else 0),
         "final_loss": auditor.last_loss,
         "state": (result["state"] if result is not None else None),
         "result": result,

@@ -7,11 +7,17 @@ The division of labor:
   an ``isfinite(loss) & isfinite(gnorm)`` flag gates the whole state
   update (``jnp.where``-selected for the jnp chain, the ``SC_OK`` scalar
   inside the fused Pallas kernel) so a poisoned step applies *no* update
-  and the flag rides the existing metrics transfer;
+  and the flag rides the existing metrics transfer.  On a mesh the flag
+  is GLOBALLY CONSISTENT (DESIGN.md §12): the loss side of the gate
+  folds in ``all(isfinite(ce_ex))`` over the per-example CE terms, which
+  GSPMD lowers to one small cross-shard all-reduce — a NaN on any one
+  host's data shard skips the step on every host in the same dispatch;
 * the HOST half lives here: :class:`SpikeMonitor` watches the (already
   transferred) loss scalar for sustained z-score spikes against an EMA
-  baseline, and the typed errors below carry diagnostics when a run
-  exhausts its skip or rollback budget instead of looping forever.
+  baseline — ``run_loop`` runs one on the train loss and optionally a
+  second on the eval CE — and the typed errors below carry diagnostics
+  when a run exhausts its skip or rollback budget instead of looping
+  forever.
 
 The monitor's EMA statistics FREEZE while a spike is suspected (``hot``):
 folding spike samples into the baseline would teach it that spikes are

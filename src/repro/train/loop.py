@@ -173,6 +173,18 @@ def make_optimizer(tcfg: TrainConfig, base) -> UpdateTransform:
     return chain(*links)
 
 
+def _ce_terms(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-position CE terms ``logz - gold`` with the logits' leading
+    shape (b, l[, c]) — :func:`cross_entropy` is their mean, and the
+    per-example CE vector (the cross-shard gate's raw material) is their
+    mean over the non-batch axes.  One set of elementwise terms feeds
+    both, so the side output cannot perturb the scalar's bits."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    return logz - gold
+
+
 def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     """Mean CE in nats.  logits: (b, l, [c,] v) fp32; labels: (b, l[, c]).
 
@@ -181,10 +193,7 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     logits tensor stays sharded and the reduction lowers to one small
     all-reduce under GSPMD instead of an all-gather of the logits.
     """
-    logz = jax.nn.logsumexp(logits, axis=-1)
-    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
-    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
-    return jnp.mean(logz - gold)
+    return jnp.mean(_ce_terms(logits, labels))
 
 
 def make_loss_fn(cfg: LMConfig, tcfg: TrainConfig):
@@ -194,16 +203,22 @@ def make_loss_fn(cfg: LMConfig, tcfg: TrainConfig):
 
     def loss_fn(params, batch, fisher, rng):
         fwd = forward_params(tcfg.quant, params, rng)
-        ce = lm_loss(fwd, cfg, batch["tokens"], batch["labels"],
-                     image_embeds=batch.get("image_embeds"),
-                     attn_chunk=tcfg.attn_chunk or None,
-                     logit_chunk=tcfg.logit_chunk or None)
+        ce, ce_ex = lm_loss(fwd, cfg, batch["tokens"], batch["labels"],
+                            image_embeds=batch.get("image_embeds"),
+                            attn_chunk=tcfg.attn_chunk or None,
+                            logit_chunk=tcfg.logit_chunk or None,
+                            per_example=True)
+        # ce_ex rides the aux dict to make_train_step, which pops it and
+        # folds all(isfinite(ce_ex)) into the skip gate — the explicit
+        # cross-data-shard agreement on "was this step poisoned"
+        aux = {"ce": ce, "ce_ex": ce_ex}
         if loss_side:
             pen = penalty(tcfg.quant, params, fisher)
-            return ce + pen, {"ce": ce, "penalty": pen}
+            aux["penalty"] = pen
+            return ce + pen, aux
         # decoupled placement: the penalty never touches the loss — it is
         # applied once per step by the lotion_decoupled chain link
-        return ce, {"ce": ce}
+        return ce, aux
     return loss_fn
 
 
@@ -263,9 +278,13 @@ def make_train_step(cfg: LMConfig, tcfg: TrainConfig, optimizer,
             (loss, grads), auxs = jax.lax.scan(micro, (0.0, zero_g), mbs)
             loss = loss / n
             grads = jax.tree.map(lambda g: g / n, grads)
+            auxs = dict(auxs)
+            ce_ex = auxs.pop("ce_ex", None)  # (n, b/n) — keep raw terms
             aux = jax.tree.map(lambda a: a.mean(), auxs)
         else:
             (loss, aux), grads = grad_fn(params, batch, fisher, rng)
+            aux = dict(aux)
+            ce_ex = aux.pop("ce_ex", None)
 
         if grad_shardings is not None:
             grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
@@ -275,7 +294,21 @@ def make_train_step(cfg: LMConfig, tcfg: TrainConfig, optimizer,
         # in-kernel SC_OK gate (together with its own gnorm check), the
         # jnp chain is gated below with a tree-wide where.  lr_scale is
         # run_loop's spike-cooldown backoff (absent => no-op).
+        #
+        # Globally consistent skip gate (DESIGN.md §12): under a data/pod
+        # mesh the scalar loss is already the cross-shard mean, but
+        # folding all(isfinite(ce_ex)) — the per-example CE terms — in as
+        # well makes the agreement explicit and lowers to one extra small
+        # all-reduce.  On a 1x1 mesh it is bit-exact with isfinite(loss)
+        # alone: any non-finite per-example term makes the IEEE mean
+        # non-finite, and a finite-terms overflow trips isfinite(loss) in
+        # both forms.  Every shard computes the same boolean, so a NaN on
+        # ONE data shard skips the step on ALL shards — no replica can
+        # apply an update its peers skipped.
         ok_loss = jnp.isfinite(loss)
+        if ce_ex is not None:
+            ok_loss = jnp.logical_and(ok_loss,
+                                      jnp.all(jnp.isfinite(ce_ex)))
         updates, new_opt = tx.update(grads, state["opt"], params,
                                      fisher=fisher, step_ok=ok_loss,
                                      lr_scale=state.get("lr_scale"))
@@ -351,6 +384,25 @@ def make_eval_fn(cfg: LMConfig, qcfg: QuantConfig):
 TELEMETRY_WINDOW = 200
 
 
+def _eval_scalar(ev):
+    """Scalar CE out of an ``eval_hook`` result for the eval-side
+    :class:`SpikeMonitor`: a bare number (or 0-d array) passes through; a
+    dict prefers the conventional CE keys, then the first value that
+    coerces to float.  ``None`` when nothing numeric is found — the
+    monitor simply never observes that eval."""
+    if isinstance(ev, dict):
+        keys = [k for k in ("ce", "eval_ce", "ce_fp32", "loss") if k in ev]
+        candidates = [ev[k] for k in keys] or list(ev.values())
+    else:
+        candidates = [ev]
+    for v in candidates:
+        try:
+            return float(v)
+        except (TypeError, ValueError):
+            continue
+    return None
+
+
 def opt_state_is_fused(opt_state) -> bool:
     """True iff ``state["opt"]`` came from the fused single-pass core
     (flat dict carrying both moments AND the metric scalars) rather than
@@ -365,12 +417,17 @@ def run_loop(train_step, state, pipeline, n_steps: int,
              log_every: int = 50, log: Callable = print,
              straggler_pct: float = 95.0,
              ckpt_dir: Optional[str] = None, ckpt_keep: int = 3,
+             ckpt_shards: int = 1,
              auto_resume: bool = False,
              max_skips: int = 8,
              spike_zscore: float = 0.0, spike_ema: float = 0.98,
              spike_patience: int = 2, spike_warmup: int = 8,
+             eval_spike_zscore: float = 0.0, eval_spike_ema: float = 0.9,
+             eval_spike_patience: int = 1, eval_spike_warmup: int = 4,
              backoff_scale: float = 0.5, cooldown_steps: int = 16,
              max_rollbacks: int = 4,
+             rollback_reorder: bool = True,
+             coordinator=None,
              step_hook: Optional[Callable] = None) -> Dict[str, Any]:
     """Self-healing driver: telemetry, periodic eval + checkpoint, and the
     three recovery tiers of DESIGN.md §11.
@@ -393,37 +450,78 @@ def run_loop(train_step, state, pipeline, n_steps: int,
       the step-indexed rng (``fold_in(seed, step)``) the continued run is
       bit-identical to one that never crashed.
 
+    Distributed self-healing (DESIGN.md §12) extends each tier across
+    hosts:
+
+    * ``coordinator`` — a :class:`~repro.distributed.Coordinator`; every
+      host-level decision (which checkpoint to restore, the rollback
+      target, the data seek index) goes through an agreement round, so a
+      host can never roll back alone.  The default single-host
+      coordinator makes every round trivially unanimous — behavior and
+      bits identical to the pre-distributed loop.
+    * ``ckpt_shards`` — saves write that many payload shards per step; a
+      step is restorable only if EVERY shard verifies (one torn shard
+      quarantines the whole step on all hosts, via the election's min).
+    * ``rollback_reorder=True`` — a rollback replays with DIFFERENT data:
+      the pipeline seeks PAST the window that fed the spike (offset
+      accumulates across rollbacks), counted in
+      ``data_windows_skipped``.  ``False`` restores the exact-replay
+      behavior (same batches, reduced LR).
+    * ``eval_spike_zscore > 0`` — a second :class:`SpikeMonitor` watches
+      the scalar eval CE (own warmup/patience, tuned for the much rarer
+      eval cadence); a sustained eval-loss spike triggers the same
+      coordinated rollback, counted in ``eval_rollbacks``.
+
     ``ckpt_dir`` enables the loop's own atomic checkpointing every
     ``ckpt_every`` steps (``ckpt_hook`` remains for callers doing their
     own persistence; both may be used together).  ``step_hook(state,
     metrics)`` runs after every step — the chaos harness's crash seam.
 
     Returns ``{"state", "history", "step_times", "skipped", "rollbacks",
-    "resumed_from"}`` — the same counters the periodic log line prints,
-    so bench logs and the chaos auditor read one source of truth.
+    "eval_rollbacks", "data_windows_skipped", "resumed_from"}`` — the
+    same counters the periodic log line prints, so bench logs and the
+    chaos auditor read one source of truth.
     """
     from repro.checkpoint import io as ckpt_io
+    from repro.distributed.coordinator import Coordinator
 
+    coord = coordinator if coordinator is not None else Coordinator()
     spiking = spike_zscore > 0.0
-    if spiking and not ckpt_dir:
-        raise ValueError("spike rollback (spike_zscore > 0) needs ckpt_dir")
+    eval_spiking = eval_spike_zscore > 0.0
+    any_spiking = spiking or eval_spiking
+    if any_spiking and not ckpt_dir:
+        raise ValueError("spike rollback (spike/eval_spike_zscore > 0) "
+                         "needs ckpt_dir")
+    if eval_spiking and not (eval_every and eval_hook):
+        raise ValueError("eval spike monitor (eval_spike_zscore > 0) "
+                         "needs eval_every and eval_hook")
     if auto_resume and not ckpt_dir:
         raise ValueError("auto_resume needs ckpt_dir")
     monitor = (SpikeMonitor(zscore=spike_zscore, ema=spike_ema,
                             patience=spike_patience, warmup=spike_warmup)
                if spiking else None)
-    if spiking and "lr_scale" not in state:
+    eval_monitor = (SpikeMonitor(zscore=eval_spike_zscore,
+                                 ema=eval_spike_ema,
+                                 patience=eval_spike_patience,
+                                 warmup=eval_spike_warmup)
+                    if eval_spiking else None)
+    if any_spiking and "lr_scale" not in state:
         state = dict(state)
         state["lr_scale"] = jnp.ones((), jnp.float32)
     template = jax.eval_shape(lambda: state)
     counters: Dict[str, Any] = {"skipped": 0, "rollbacks": 0,
+                                "eval_rollbacks": 0,
+                                "data_windows_skipped": 0,
                                 "resumed_from": None}
 
     if auto_resume:
         best = ckpt_io.latest_valid(ckpt_dir, quarantine_corrupt=True)
+        # newest-COMMON-valid election: a host whose newest save is torn
+        # drags every host down to the newest step ALL hosts can restore
+        best = coord.elect_checkpoint(best)
         if best is not None:
             state, s = ckpt_io.load(ckpt_dir, template, step=best)
-            if spiking:
+            if any_spiking:
                 # a fresh segment starts calm: a crash mid-cooldown must
                 # not pin the reduced LR forever
                 state = dict(state)
@@ -431,11 +529,12 @@ def run_loop(train_step, state, pipeline, n_steps: int,
             counters["resumed_from"] = s
             pipeline.seek(s)
             log(f"run_loop: auto-resumed from {ckpt_dir} at step {s}")
-    if (ckpt_dir and (ckpt_every or spiking)
+    if (ckpt_dir and (ckpt_every or any_spiking)
             and ckpt_io.latest_valid(ckpt_dir) is None):
         # eager anchor save: rollback/resume always has a target, even
         # before the first ckpt_every boundary
-        ckpt_io.save(ckpt_dir, int(state["step"]), state, keep=ckpt_keep)
+        ckpt_io.save(ckpt_dir, int(state["step"]), state, keep=ckpt_keep,
+                     n_shards=ckpt_shards)
 
     history = []
     times = collections.deque(maxlen=TELEMETRY_WINDOW)
@@ -448,6 +547,56 @@ def run_loop(train_step, state, pipeline, n_steps: int,
     consec_skips = 0
     lr_scale_now = 1.0
     cooldown = 0
+    # cumulative data-reorder offset: each reordered rollback adds the
+    # width of the window it skipped, so later rollbacks keep skipping
+    # FORWARD in the stream instead of landing back on poisoned batches
+    data_lead = 0
+
+    def do_rollback(origin: str, trigger: float, counter: str) -> None:
+        """One coordinated rollback (DESIGN.md §12): elect the newest
+        checkpoint every host can restore, agree on the (restore, seek)
+        pair, then restore + seek + LR backoff.  Raises
+        RollbackBudgetError past the shared budget."""
+        nonlocal state, cur, lr_scale_now, cooldown, data_lead
+        counters[counter] += 1
+        total = counters["rollbacks"] + counters["eval_rollbacks"]
+        if total > max_rollbacks:
+            raise RollbackBudgetError(
+                f"spike rollback budget ({max_rollbacks}) exhausted at "
+                f"step {cur} ({origin} trigger={trigger:.4f})",
+                {"step": cur, "loss": trigger, **counters})
+        best = ckpt_io.latest_valid(ckpt_dir, quarantine_corrupt=True)
+        best = coord.elect_checkpoint(best)
+        if best is None:
+            raise RollbackBudgetError(
+                f"{origin} spike at step {cur} but no commonly-valid "
+                f"checkpoint in {ckpt_dir} to roll back to",
+                {"step": cur, "loss": trigger, **counters})
+        restored, s = ckpt_io.load(ckpt_dir, template, step=best)
+        if rollback_reorder and cur > s:
+            # replay with DIFFERENT data: skip past the window [s, cur)
+            # that fed the spike instead of re-feeding it at reduced LR
+            data_lead += cur - s
+            counters["data_windows_skipped"] += 1
+        seek_to = s + data_lead
+        # unanimity on the (restore, seek, origin) triple BEFORE mutating
+        # anything: a host that would restore a different step or seek a
+        # different index must abort loudly, not diverge silently
+        coord.agree("rollback", (s, seek_to, origin))
+        pipeline.seek(seek_to)
+        cur = s
+        lr_scale_now *= backoff_scale
+        cooldown = cooldown_steps
+        state = dict(restored)
+        state["lr_scale"] = jnp.asarray(lr_scale_now, jnp.float32)
+        if monitor is not None:
+            monitor.reset()
+        if eval_monitor is not None:
+            eval_monitor.reset()
+        log(f"run_loop: {origin} spike ({trigger:.4f}) — rolled back to "
+            f"step {s} (seek {seek_to}, lead {data_lead}), "
+            f"lr_scale={lr_scale_now:g} for {cooldown_steps} steps")
+
     while cur < n_steps:
         batch = next(pipeline)
         t0 = time.perf_counter()
@@ -475,30 +624,7 @@ def run_loop(train_step, state, pipeline, n_steps: int,
         else:
             consec_skips = 0
             if monitor is not None and monitor.observe(loss_v):
-                counters["rollbacks"] += 1
-                if counters["rollbacks"] > max_rollbacks:
-                    raise RollbackBudgetError(
-                        f"spike rollback budget ({max_rollbacks}) "
-                        f"exhausted at step {cur} (loss={loss_v})",
-                        {"step": cur, "loss": loss_v, **counters})
-                best = ckpt_io.latest_valid(ckpt_dir,
-                                            quarantine_corrupt=True)
-                if best is None:
-                    raise RollbackBudgetError(
-                        f"loss spike at step {cur} but no valid "
-                        f"checkpoint in {ckpt_dir} to roll back to",
-                        {"step": cur, "loss": loss_v, **counters})
-                state, s = ckpt_io.load(ckpt_dir, template, step=best)
-                pipeline.seek(s)
-                cur = s
-                lr_scale_now *= backoff_scale
-                cooldown = cooldown_steps
-                state = dict(state)
-                state["lr_scale"] = jnp.asarray(lr_scale_now, jnp.float32)
-                monitor.reset()
-                log(f"run_loop: loss spike ({loss_v:.4f}) — rolled back "
-                    f"to step {s}, lr_scale={lr_scale_now:g} for "
-                    f"{cooldown_steps} steps")
+                do_rollback("loss", loss_v, "rollbacks")
                 continue
 
         if cooldown > 0:
@@ -524,12 +650,21 @@ def run_loop(train_step, state, pipeline, n_steps: int,
                 f"rollbacks {counters['rollbacks']} "
                 f"resumed_from {counters['resumed_from']}")
         if eval_every and eval_hook and step % eval_every == 0:
-            history.append((step, eval_hook(state)))
+            ev = eval_hook(state)
+            history.append((step, ev))
+            if eval_monitor is not None:
+                ev_scalar = _eval_scalar(ev)
+                if ev_scalar is not None and eval_monitor.observe(ev_scalar):
+                    do_rollback("eval", ev_scalar, "eval_rollbacks")
+                    continue
         if ckpt_every and step % ckpt_every == 0:
             # never checkpoint while a spike is suspected: a hot monitor
             # means this state may be what we are about to roll away from
-            if ckpt_dir and (monitor is None or not monitor.hot):
-                ckpt_io.save(ckpt_dir, step, state, keep=ckpt_keep)
+            hot = ((monitor is not None and monitor.hot)
+                   or (eval_monitor is not None and eval_monitor.hot))
+            if ckpt_dir and not hot:
+                ckpt_io.save(ckpt_dir, step, state, keep=ckpt_keep,
+                             n_shards=ckpt_shards)
             if ckpt_hook:
                 ckpt_hook(state)
     return {"state": state, "history": history, "step_times": list(times),
