@@ -664,6 +664,152 @@ def scheduler_robustness(cfg: LMConfig, n_slots: int = 4, k: int = 4,
     return rec
 
 
+# --------------------------------------------------------------------------
+# paged KV: block-pool parity matrix + structural sharing columns
+# --------------------------------------------------------------------------
+
+def _pool_context_bytes(sch) -> int:
+    """Device bytes one slot's context occupies in the paged pool (its
+    ``bps`` blocks' share of every pool leaf)."""
+    total = sum(int(a.nbytes) for a in
+                jax.tree_util.tree_leaves(sch._pool_cache))
+    return total * sch._bps // sch.block_pool.n_blocks
+
+
+def scheduler_paged_replay(cfg: LMConfig, n_slots: int = 4, k: int = 4,
+                           chunk: int = 8, n_requests: int = 10,
+                           seed: int = 17) -> dict:
+    """Paged-KV acceptance (ISSUE 10).  All columns are structural
+    (token comparisons + host-side counters on a deterministic drain):
+
+    * **3x2 parity matrix** — the paged scheduler's greedy outputs are
+      token-identical to the dense-ring scheduler across
+      {dense, int8, int4} KV x {monolithic, chunked+prefix} admission,
+      with a clean block audit and zero leaked blocks at every drain;
+    * **zero-copy sharing** — the chunked+prefix paged leg completes
+      with ``splice_host_transfers == 0`` (the legacy path pays >= 1
+      host round-trip per splice/publish) and ``prefix_blocks_shared
+      >= 1`` (prefix hits append shared block ids instead of copying);
+    * **exact reattach** — a preempted int4-KV request resumes by block
+      reattach and finishes token-identical to its never-preempted run
+      with ZERO recomputed tokens (the quantized-KV resume gap);
+    * **chaos** — a seeded fault replay over the paged pool + trie
+      drains with zero block/lifecycle invariant violations.
+    """
+    import numpy as np
+
+    from repro.serve import chaos_plan, check_drained
+    from repro.serve.replay import replay_chaos, sla_workload
+
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    shared = [int(x) for x in rng.integers(1, cfg.vocab, 2 * chunk)]
+    prompts = [shared + [int(x) for x in
+                         rng.integers(1, cfg.vocab, int(n))]
+               for n in rng.integers(3, 3 * chunk, n_requests)]
+    mnt, cache_len = 12, 64
+    base = dict(n_slots=n_slots, steps_per_tick=k, cache_len=cache_len)
+
+    matrix = {}
+    identical = True
+    paged_transfers = shared_blocks = ring_transfers = 0
+    pool_ctx_bytes = ring_ctx_bytes = 0
+    for kvq in (False, "int8", "int4"):
+        scfg = ServeConfig(weights="fp32", kv_quant=kvq,
+                           max_new_tokens=mnt)
+        for mode in ("monolithic", "chunked"):
+            kw = dict(base)
+            if mode == "chunked":
+                kw.update(prefill_chunk=chunk, prefix_cache=True,
+                          prefix_cache_blocks=32)
+            ring = Scheduler(cfg, params, scfg, SchedulerConfig(**kw))
+            ring_out = ring.generate(prompts, mnt)
+            paged = Scheduler(cfg, params, scfg, SchedulerConfig(
+                paged=True, block_size=chunk, **kw))
+            paged_out = paged.generate(prompts, mnt)
+            same = ring_out == paged_out
+            identical &= same
+            drain = [p for p in check_drained(paged)
+                     if "has work" not in p]
+            matrix[f"{kvq or 'dense'}_{mode}"] = {
+                "outputs_identical": int(same),
+                "drain_violations": len(drain),
+                "splice_host_transfers": paged.splice_host_transfers,
+                "prefix_blocks_shared": paged.prefix_blocks_shared,
+            }
+            assert not drain, (kvq, mode, drain)
+            if mode == "chunked":
+                paged_transfers += paged.splice_host_transfers
+                shared_blocks += paged.prefix_blocks_shared
+                ring_transfers += ring.splice_host_transfers
+                pool_ctx_bytes = _pool_context_bytes(paged)
+                ring_ctx_bytes = sum(
+                    int(a.nbytes) for a in
+                    jax.tree_util.tree_leaves(ring._cache)) // n_slots
+
+    # ---- exact reattach leg (int4 KV: the quantized-resume gap) ----
+    scfg4 = ServeConfig(weights="fp32", kv_quant="int4",
+                        max_new_tokens=mnt)
+    bps = cache_len // chunk
+    pcfg = dict(n_slots=1, steps_per_tick=k, cache_len=cache_len,
+                paged=True, block_size=chunk, pool_blocks=2 * bps + 1)
+    lo = [int(x) for x in rng.integers(1, cfg.vocab, 10)]
+    hi = [int(x) for x in rng.integers(1, cfg.vocab, 6)]
+    alone = Scheduler(cfg, params, scfg4, SchedulerConfig(**pcfg))
+    r0 = alone.submit(lo, 20)
+    alone.run()
+    pre = Scheduler(cfg, params, scfg4, SchedulerConfig(**pcfg))
+    r1 = pre.submit(lo, 20, priority=0)
+    for _ in range(2):
+        pre.step()
+    pre.submit(hi, 6, priority=5)
+    pre.run()
+    reattach_exact = (pre.requests[r1].out == alone.requests[r0].out
+                      and pre.counters["preempted"] >= 1)
+    reattach_recompute = pre.resume_recompute_tokens
+
+    # ---- paged chaos leg ----
+    scfgc = ServeConfig(weights="fp32", max_new_tokens=8)
+    chs = Scheduler(cfg, params, scfgc, SchedulerConfig(
+        n_slots=n_slots, steps_per_tick=k, cache_len=cache_len,
+        prefill_chunk=chunk, prefix_cache=True, prefix_cache_blocks=32,
+        paged=True, block_size=chunk, max_queue=16, est_tok_per_s=200.0))
+    wl = sla_workload(seed, n_requests, cfg.vocab, rate=60.0,
+                      deadline_frac=0.5, slack=(2.0, 10.0),
+                      hi_priority_frac=0.2)
+    plan = chaos_plan(seed=seed, n_ticks=128, vocab=cfg.vocab,
+                      cache_len=cache_len, nan_rate=0.25)
+    chaos = replay_chaos(chs, wl, plan=plan, tick_s=0.05)
+
+    rec = {
+        "n_slots": n_slots, "steps_per_tick": k, "block_size": chunk,
+        "cache_len": cache_len, "n_requests": n_requests,
+        "matrix": matrix,
+        # zero-tolerance structural columns (check_regression gates)
+        "outputs_identical": bool(identical),
+        "splice_host_transfers": paged_transfers,
+        "prefix_blocks_shared": shared_blocks,
+        "legacy_splice_host_transfers": ring_transfers,
+        "pool_bytes_per_context": pool_ctx_bytes,
+        "ring_bytes_per_context": ring_ctx_bytes,
+        "reattach_exact": bool(reattach_exact),
+        "reattach_recompute_tokens": reattach_recompute,
+        "chaos_violations": len(chaos["violations"]),
+        "chaos_all_terminal": bool(sum(chaos["by_state"].values())
+                                   == n_requests),
+    }
+    # ISSUE 10 acceptance
+    assert rec["outputs_identical"], matrix
+    assert rec["splice_host_transfers"] == 0, rec
+    assert rec["prefix_blocks_shared"] >= 1, rec
+    assert rec["legacy_splice_host_transfers"] >= 1, rec
+    assert rec["reattach_exact"], rec
+    assert rec["reattach_recompute_tokens"] == 0, rec
+    assert rec["chaos_violations"] == 0, chaos["violations"][:10]
+    assert rec["chaos_all_terminal"] == 1, chaos["by_state"]
+    return rec
+
+
 def main(tiny: bool = False, json_dir: str = None):
     cfg = CFG_TINY if tiny else CFG
     batches = (1, 8) if tiny else (1, 8, 32)
@@ -684,6 +830,8 @@ def main(tiny: bool = False, json_dir: str = None):
             cfg, n_requests=12 if tiny else 18),
         "scheduler_robustness": scheduler_robustness(
             cfg, n_requests=16 if tiny else 24),
+        "scheduler_paged": scheduler_paged_replay(
+            cfg, n_requests=8 if tiny else 10),
         "note": ("weight bytes/step are stored-leaf bytes, verified "
                  "dense-materialization-free at jaxpr+HLO level "
                  "(hardware-independent); off-TPU wall clock uses the "
@@ -734,6 +882,23 @@ def main(tiny: bool = False, json_dir: str = None):
     emit("serve_overload_goodput", 0.0,
          f"shed_on={rb['overload_shed_on']['goodput_tok']} "
          f"shed_off={rb['overload_shed_off']['goodput_tok']}")
+    pg = rec["scheduler_paged"]
+    emit("serve_paged_parity", 0.0,
+         f"identical={pg['outputs_identical']} "
+         f"legs={len(pg['matrix'])}")
+    emit("serve_paged_sharing", 0.0,
+         f"splice_transfers={pg['splice_host_transfers']} "
+         f"blocks_shared={pg['prefix_blocks_shared']} "
+         f"(legacy_transfers={pg['legacy_splice_host_transfers']})")
+    emit("serve_paged_pool_bytes", 0.0,
+         f"per_context={pg['pool_bytes_per_context']} "
+         f"ring={pg['ring_bytes_per_context']}")
+    emit("serve_paged_reattach", 0.0,
+         f"exact={pg['reattach_exact']} "
+         f"recompute_tokens={pg['reattach_recompute_tokens']}")
+    emit("serve_paged_chaos", 0.0,
+         f"violations={pg['chaos_violations']} "
+         f"terminal={pg['chaos_all_terminal']}")
     if json_dir is not None:
         print(f"wrote {write_bench_json('serve', rec, json_dir)}")
     return rec

@@ -118,6 +118,21 @@ METRICS = {
                "higher"),
         Metric("scheduler_robustness.overload_shed_on.deadline_hit_rate",
                "higher"),
+        # paged KV block pool (ISSUE 10): every column comes from a
+        # deterministic arrival-0 drain or a seeded virtual-clock chaos
+        # replay — zero tolerance.  The sharing columns are the point of
+        # the pool: ANY host splice transfer or a run with no shared
+        # prefix blocks means the zero-copy path silently fell back to
+        # row copies; reattach_exact is the quantized-KV resume gap
+        # closure (preempted == unpreempted, zero recomputed tokens).
+        Metric("scheduler_paged.outputs_identical", "true"),
+        Metric("scheduler_paged.splice_host_transfers", "lower"),
+        Metric("scheduler_paged.prefix_blocks_shared", "higher"),
+        Metric("scheduler_paged.pool_bytes_per_context", "lower"),
+        Metric("scheduler_paged.reattach_exact", "true"),
+        Metric("scheduler_paged.reattach_recompute_tokens", "lower"),
+        Metric("scheduler_paged.chaos_violations", "lower"),
+        Metric("scheduler_paged.chaos_all_terminal", "true"),
     ],
     "train": [
         # training chaos replay (ISSUE 8): seeded fault plan + seeded
@@ -177,7 +192,9 @@ METRICS = {
 CONFIG_KEYS = {
     "serve": ["config", "scheduler_robustness.tick_s",
               "scheduler_robustness.est_tok_per_s",
-              "scheduler_robustness.n_requests"],
+              "scheduler_robustness.n_requests",
+              "scheduler_paged.block_size",
+              "scheduler_paged.n_requests"],
     "opt_step": ["structural.leaf_shape", "structural.n_leaves"],
     "train": ["config"],
 }

@@ -5,7 +5,8 @@ packed KV codes per decode step).
 pure-jnp dense-softmax oracle pinning the layer semantics.
 """
 
-from .ops import decode_attn
-from .ref import decode_attn_ref
+from .ops import decode_attn, decode_attn_paged
+from .ref import decode_attn_paged_ref, decode_attn_ref
 
-__all__ = ["decode_attn", "decode_attn_ref"]
+__all__ = ["decode_attn", "decode_attn_ref", "decode_attn_paged",
+           "decode_attn_paged_ref"]

@@ -172,3 +172,134 @@ def decode_attn_pallas(q: Array, k_codes: Array, k_scale: Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos2, q, k_codes, k_scale, v_codes, v_scale)
+
+
+# --------------------------------------------------------------------------
+# Paged variant (DESIGN.md §13): the KV lives in a SHARED block pool
+# ((n_blocks, bs, g, hd[/2]) codes + (n_blocks, bs, g, 1) scales) and each
+# batch row's cache is named by an int32 block table (b, bps).  The grid is
+# (batch, kv_heads, bps) with the BLOCK axis innermost/"arbitrary": the
+# table and positions ride scalar prefetch, so tile li of row bi streams
+# pool block ``bt[bi, li]`` from HBM — one tile per logical block, same
+# online-softmax dataflow and validity math as the ring kernel with
+# tile_l = block_size and slots j = li*bs + iota.
+# --------------------------------------------------------------------------
+
+def _decode_attn_paged_kernel(bt_ref, pos_ref, q_ref, kc_ref, ks_ref,
+                              vc_ref, vs_ref, o_ref, m_ref, s_ref, acc_ref,
+                              *, bps: int, block_size: int,
+                              window: Optional[int],
+                              softcap: Optional[float], int4: bool):
+    bi = pl.program_id(0)
+    li = pl.program_id(2)
+    cache_len = bps * block_size
+
+    @pl.when(li == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    hd = q_ref.shape[-1]
+    q = q_ref[0, 0].astype(jnp.float32)                    # (rep, hd)
+    kc = kc_ref[0, :, 0]                                   # (bs, hd[/2])
+    k = _unpack_int4(kc) if int4 else kc
+    ks = ks_ref[0, :, 0]                                   # (bs, 1) f32
+
+    s = jax.lax.dot_general(q, k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    logits = (s * ks[:, 0][None, :]) / np.sqrt(hd)         # (rep, bs)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    # ring validity over LOGICAL slots j = li*bs + iota — table entry li
+    # of a row holds exactly ring slots [li*bs, (li+1)*bs), so the dense
+    # formula carries over unchanged
+    pos = pos_ref[bi]
+    j = li * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    p_j = pos - ((pos - j) % cache_len)
+    valid = p_j >= 0
+    if window is not None:
+        valid &= (pos - p_j) < window
+    logits = logits + jnp.where(valid, 0.0, NEG_INF)
+
+    m_prev = m_ref[...]                                    # (rep, 1)
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                            # (rep, bs)
+    s_ref[...] = s_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+
+    vc = vc_ref[0, :, 0]
+    v = _unpack_int4(vc) if int4 else vc
+    vs = vs_ref[0, :, 0]                                   # (bs, 1) f32
+    pv = jax.lax.dot_general(p * vs[:, 0][None, :], v.astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(li == bps - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(s_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_attn_paged_pallas(q: Array, k_codes: Array, k_scale: Array,
+                             v_codes: Array, v_scale: Array,
+                             block_tables: Array, pos: Array, *,
+                             bits: int = 8, window: Optional[int] = None,
+                             softcap: Optional[float] = None,
+                             interpret: bool = True) -> Array:
+    """q (b, g, rep, hd) x paged quantized pool -> (b, g, rep, hd).
+
+    ``k_codes``/``v_codes``: int8 (n_blocks, bs, g, hd) or packed-int4
+    uint8 (n_blocks, bs, g, hd/2); scales (n_blocks, bs, g, 1) fp32;
+    ``block_tables`` (b, bps) int32 pool block ids; ``pos`` (b,) int32.
+    """
+    b, g, rep, hd = q.shape
+    int4 = bits == 4
+    hd_c = hd // 2 if int4 else hd
+    n_blocks, bs = k_codes.shape[0], k_codes.shape[1]
+    if k_codes.shape != (n_blocks, bs, g, hd_c):
+        raise ValueError(f"k_codes shape {k_codes.shape} != "
+                         f"{(n_blocks, bs, g, hd_c)} for bits={bits}")
+    if k_scale.shape != (n_blocks, bs, g, 1):
+        raise ValueError(
+            f"k_scale shape {k_scale.shape} != {(n_blocks, bs, g, 1)}")
+    bps = block_tables.shape[1]
+
+    kernel = functools.partial(
+        _decode_attn_paged_kernel, bps=bps, block_size=bs,
+        window=window, softcap=softcap, int4=int4)
+
+    # index maps see the scalar-prefetch refs as trailing args: tile li of
+    # row bi reads pool block bt[bi, li]
+    q_spec = pl.BlockSpec((1, 1, rep, hd),
+                          lambda bi, gi, li, bt, ps: (bi, gi, 0, 0))
+    code_spec = pl.BlockSpec((1, bs, 1, hd_c),
+                             lambda bi, gi, li, bt, ps: (bt[bi, li], 0, gi, 0))
+    scale_spec = pl.BlockSpec((1, bs, 1, 1),
+                              lambda bi, gi, li, bt, ps: (bt[bi, li], 0, gi, 0))
+    out_spec = pl.BlockSpec((1, 1, rep, hd),
+                            lambda bi, gi, li, bt, ps: (bi, gi, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, g, bps),
+        in_specs=[q_spec, code_spec, scale_spec, code_spec, scale_spec],
+        out_specs=out_spec,
+        scratch_shapes=[pltpu.VMEM((rep, 1), jnp.float32),
+                        pltpu.VMEM((rep, 1), jnp.float32),
+                        pltpu.VMEM((rep, hd), jnp.float32)])
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, g, rep, hd), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32),
+      q, k_codes, k_scale, v_codes, v_scale)

@@ -13,7 +13,7 @@ import functools
 
 import jax
 
-from .decode_attn import decode_attn_pallas
+from .decode_attn import decode_attn_paged_pallas, decode_attn_pallas
 
 
 def _interpret() -> bool:
@@ -31,3 +31,17 @@ def decode_attn(q, k_codes, k_scale, v_codes, v_scale, pos, *,
     return decode_attn_pallas(q, k_codes, k_scale, v_codes, v_scale, pos,
                               bits=bits, window=window, softcap=softcap,
                               block_l=block_l, interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "window", "softcap"))
+def decode_attn_paged(q, k_codes, k_scale, v_codes, v_scale,
+                      block_tables, pos, *,
+                      bits: int = 8, window=None, softcap=None):
+    """One fused decode step against the PAGED pool: q (b, g, rep, hd),
+    pool codes (n_blocks, bs, g, hd[/2]) + scales (n_blocks, bs, g, 1)
+    shared by all rows, int32 ``block_tables`` (b, bps), per-row
+    positions (b,) -> (b, g, rep, hd)."""
+    return decode_attn_paged_pallas(
+        q, k_codes, k_scale, v_codes, v_scale, block_tables, pos,
+        bits=bits, window=window, softcap=softcap, interpret=_interpret())

@@ -84,3 +84,31 @@ def decode_attn_ref(q: Array, k_codes: Array, k_scale: Array,
     p = probs * v_scale[..., 0].transpose(0, 2, 1)[:, :, None, :]
     return jnp.einsum("bgrl,blgd->bgrd", p.astype(q.dtype),
                       v.astype(q.dtype))
+
+
+def gather_pool_ref(pool: Array, block_tables: Array) -> Array:
+    """Pool leaf (n_blocks, bs, g, x) + tables (b, bps) -> the dense
+    per-row ring view (b, bps*bs, g, x) the paged kernel must reproduce
+    reads over."""
+    out = pool[block_tables]                     # (b, bps, bs, g, x)
+    return out.reshape((out.shape[0], out.shape[1] * out.shape[2])
+                       + out.shape[3:])
+
+
+def decode_attn_paged_ref(q: Array, k_codes: Array, k_scale: Array,
+                          v_codes: Array, v_scale: Array,
+                          block_tables: Array, pos: Array, *,
+                          bits: int = 8, window: Optional[int] = None,
+                          softcap: Optional[float] = None) -> Array:
+    """Oracle for the paged kernel: gather each row's blocks into the
+    dense ring layout, then run the EXACT dense-ring oracle on the view.
+    Codes/scales live in a shared (n_blocks, bs, g, hd[/2]) pool indexed
+    by int32 ``block_tables`` (b, bps); everything else is unchanged —
+    paged attention IS ring attention over a scattered address space.
+    """
+    return decode_attn_ref(
+        q, gather_pool_ref(k_codes, block_tables),
+        gather_pool_ref(k_scale, block_tables),
+        gather_pool_ref(v_codes, block_tables),
+        gather_pool_ref(v_scale, block_tables), pos,
+        bits=bits, window=window, softcap=softcap)

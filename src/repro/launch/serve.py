@@ -64,11 +64,15 @@ def _replay(cfg, params, args, use_kernel, kv_quant, stored_bytes,
                        kv_quant=kv_quant, act_fmt=args.act_fmt,
                        max_new_tokens=args.new_tokens)
     engine = Engine(cfg, params, scfg)
+    cache_len = args.prompt_len + args.new_tokens
+    if args.paged and cache_len % args.block_size:
+        cache_len += args.block_size - cache_len % args.block_size
     sch = Scheduler(cfg, params, scfg, SchedulerConfig(
         n_slots=args.n_slots, steps_per_tick=args.steps_per_tick,
-        cache_len=args.prompt_len + args.new_tokens,
+        cache_len=cache_len,
         prefill_chunk=args.prefill_chunk,
-        prefix_cache=args.prefix_cache))
+        prefix_cache=args.prefix_cache,
+        paged=args.paged, block_size=args.block_size))
     nt = args.new_tokens
     workload = poisson_workload(
         0, args.n_requests, cfg.vocab, rate=args.arrival_rate,
@@ -106,11 +110,15 @@ def _chaos(cfg, params, args, use_kernel, kv_quant):
                        kv_quant=kv_quant, act_fmt=args.act_fmt,
                        max_new_tokens=args.new_tokens)
     cache_len = args.prompt_len + args.new_tokens
+    if args.paged and cache_len % args.block_size:
+        # blocks tile the ring axis: round up to a whole block
+        cache_len += args.block_size - cache_len % args.block_size
     sch = Scheduler(cfg, params, scfg, SchedulerConfig(
         n_slots=args.n_slots, steps_per_tick=args.steps_per_tick,
         cache_len=cache_len, prefill_chunk=args.prefill_chunk,
         prefix_cache=args.prefix_cache, max_queue=4 * args.n_requests,
-        est_tok_per_s=200.0))
+        est_tok_per_s=200.0, paged=args.paged,
+        block_size=args.block_size))
     wl = sla_workload(args.chaos_seed, args.n_requests, cfg.vocab,
                       rate=args.arrival_rate,
                       prompt_lens=(2, args.prompt_len),
@@ -167,6 +175,13 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="shared-prefix KV reuse via the chunk-granular "
                          "radix trie (requires --prefill-chunk)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV: one device-resident block pool shared "
+                         "by decode slots and the prefix trie "
+                         "(DESIGN.md §13)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per paged-KV pool block (with "
+                         "--prefix-cache it must equal --prefill-chunk)")
     ap.add_argument("--n-requests", type=int, default=32)
     ap.add_argument("--arrival-rate", type=float, default=100.0,
                     help="Poisson arrivals per virtual-clock second")

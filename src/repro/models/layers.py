@@ -452,6 +452,133 @@ def attn_decode(
     return matmul(o, params["wo"]), cache_k, cache_v
 
 
+# ---- paged KV (DESIGN.md §13): the per-slot dense ring is replaced by a
+# shared pool of `block_size`-token blocks plus an int32 block table per
+# slot.  The logical ring layout is unchanged — table entry i of a slot
+# holds ring slots [i*bs, (i+1)*bs) — so ring validity, RoPE positions and
+# the quantizer are byte-compatible with the dense path; only the physical
+# address of a slot's KV moves (and can be shared across tables).
+
+def paged_gather(cache, bt):
+    """Gather pool blocks into a dense per-row view.
+
+    ``cache``: pool leaf ``(n_blocks, bs, kvh, ...)`` (dense or
+    codes/scale dict); ``bt``: int32 block table ``(b, bps)``.  Returns
+    the ``(b, bps*bs, kvh, ...)`` view whose entries are byte-identical
+    to what the dense-ring cache of the same requests would hold.
+    """
+    def g(a):
+        out = a[bt]                              # (b, bps, bs, ...)
+        return out.reshape((out.shape[0], out.shape[1] * out.shape[2])
+                           + out.shape[3:])
+    if _is_quantized_cache(cache):
+        return {"codes": g(cache["codes"]), "scale": g(cache["scale"])}
+    return g(cache)
+
+
+def _cache_write_paged(cache, new, bt, slot, block_size):
+    """Write the (b, kvh, hd) vector ``new`` at ring slot ``slot`` of each
+    row, routed through the block table into the pool.  Rows whose table
+    entry is 0 (cleared/idle) land in the reserved dump block."""
+    b = new.shape[0]
+    bi = slot // block_size
+    off = slot % block_size
+    bid = jnp.take_along_axis(bt, bi[:, None], axis=1)[:, 0]
+    if _is_quantized_cache(cache):
+        bits = 4 if cache["codes"].dtype == jnp.uint8 else 8
+        q = kv_quantize(new[:, None], bits)  # (b,1,kvh,*)
+        return {
+            "codes": cache["codes"].at[bid, off].set(q["codes"][:, 0]),
+            "scale": cache["scale"].at[bid, off].set(q["scale"][:, 0]),
+        }
+    return cache.at[bid, off].set(new.astype(cache.dtype))
+
+
+def attn_decode_paged(
+    params,
+    spec: AttnSpec,
+    x: Array,                      # (b, 1, d_model) — one new token
+    pos: Array,                    # (b,) int32 current position
+    cache_k,                       # pool leaf (n_blocks, bs, kvh, hd) / dict
+    cache_v,
+    block_tables: Array,           # (b, bps) int32 pool block ids
+    block_size: int,
+):
+    """Single-token decode against the PAGED KV pool.
+
+    The new K/V is quantized and written through the block table first
+    (same per-vector quantizer, same ring slot -> same bytes as the dense
+    path), then scored either by the block-table-indexed Pallas kernel or
+    by gathering the row's blocks into a dense view and running the exact
+    dense-ring fallback math on it — op-for-op identical to
+    :func:`attn_decode`'s fallback, so greedy outputs cannot drift.
+    Returns (out, new_cache_k, new_cache_v) with POOL-shaped caches.
+    """
+    b = x.shape[0]
+    g = spec.n_kv_heads
+    rep = spec.n_heads // g
+    hd = spec.head_dim
+    bps = block_tables.shape[1]
+    cache_len = bps * block_size
+
+    q, k, v = _qkv(params, spec, x)
+    q = apply_rope(q, pos[:, None], spec.rope_theta)
+    k = apply_rope(k, pos[:, None], spec.rope_theta)
+    slot = (pos % cache_len).astype(jnp.int32)
+    cache_k = _cache_write_paged(cache_k, k[:, 0], block_tables, slot,
+                                 block_size)
+    cache_v = _cache_write_paged(cache_v, v[:, 0], block_tables, slot,
+                                 block_size)
+
+    q4 = q.reshape(b, g, rep, hd)
+    if _is_quantized_cache(cache_k) and kernel_enabled():
+        # fused path: the kernel's grid walks the block table and streams
+        # each block's packed codes from HBM exactly once
+        from repro.kernels.decode_attn import decode_attn_paged
+        bits = 4 if cache_k["codes"].dtype == jnp.uint8 else 8
+        o = decode_attn_paged(q4, cache_k["codes"], cache_k["scale"],
+                              cache_v["codes"], cache_v["scale"],
+                              block_tables, pos, bits=bits,
+                              window=spec.window, softcap=spec.softcap)
+        o = o.reshape(b, 1, spec.q_dim)
+        return matmul(o, params["wo"]), cache_k, cache_v
+
+    # jnp fallback: gather the row's blocks into the dense-ring view and
+    # run the EXACT attn_decode fallback ops on it (same hoisted
+    # unpack-once discipline, same validity formula) — bit-identical to
+    # the dense scheduler by construction
+    ck = paged_gather(cache_k, block_tables)
+    cv = paged_gather(cache_v, block_tables)
+    k_dense = _cache_codes(ck) if _is_quantized_cache(ck) else ck
+    v_dense = _cache_codes(cv) if _is_quantized_cache(cv) else cv
+    if _is_quantized_cache(ck):
+        s = jnp.einsum("bgrd,blgd->bgrl", q4, k_dense.astype(q4.dtype))
+        logits = s.astype(jnp.float32) * ck["scale"][..., 0].transpose(
+            0, 2, 1)[:, :, None, :]
+    else:
+        logits = jnp.einsum("bgrd,blgd->bgrl", q4,
+                            k_dense.astype(q4.dtype)).astype(jnp.float32)
+    logits = logits / np.sqrt(hd)
+    if spec.softcap is not None:
+        logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+    j = jnp.arange(cache_len)
+    p_j = pos[:, None] - ((pos[:, None] - j[None, :]) % cache_len)
+    valid = p_j >= 0
+    if spec.window is not None:
+        valid &= (pos[:, None] - p_j) < spec.window
+    bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]  # (b,1,1,l)
+    probs = jax.nn.softmax(logits + bias, axis=-1)
+    if _is_quantized_cache(cv):
+        p = probs * cv["scale"][..., 0].transpose(0, 2, 1)[:, :, None, :]
+        o = jnp.einsum("bgrl,blgd->bgrd", p.astype(x.dtype),
+                       v_dense.astype(x.dtype))
+    else:
+        o = jnp.einsum("bgrl,blgd->bgrd", probs.astype(x.dtype),
+                       v_dense.astype(x.dtype))
+    o = o.reshape(b, 1, spec.q_dim)
+    return matmul(o, params["wo"]), cache_k, cache_v
+
+
 def attn_chunk_apply(
     params,
     spec: AttnSpec,

@@ -34,8 +34,8 @@ from repro.distributed.context import constrain, constrain_tree, scan_unroll
 
 from . import layers, ssm
 from .layers import (AttnSpec, MLPSpec, MoESpec, attn_apply, attn_decode,
-                     attn_init, dense_init, matmul, mlp_apply, mlp_init,
-                     moe_apply, moe_init, rms_norm)
+                     attn_decode_paged, attn_init, dense_init, matmul,
+                     mlp_apply, mlp_init, moe_apply, moe_init, rms_norm)
 from .ssm import (Mamba2Spec, RWKV6Spec, mamba2_apply, mamba2_decode,
                   mamba2_init, mamba2_init_state, rwkv6_channel_mix,
                   rwkv6_channel_mix_init, rwkv6_init_state, rwkv6_time_mix,
@@ -497,6 +497,31 @@ def cache_insert(pool_cache, row_cache, slot):
     return jax.tree.map(one, pool_cache, row_cache)
 
 
+def cache_insert_paged(pool_cache, row_cache, table, write_mask):
+    """Scatter a single-request cache row into PAGED pool blocks.
+
+    ``pool_cache`` leaves are ``(r, n_blocks, bs, ...)``; ``row_cache`` is
+    the batch=1 full-``cache_len`` row (``(r, 1, bps*bs, ...)``, same
+    kv_quant layout).  ``table`` (bps,) int32 gives the destination block
+    per chunk; chunks with ``write_mask`` False (prefix blocks SHARED from
+    the trie, whose bytes are already in the pool) are redirected into the
+    reserved dump block 0 so a consumer never rewrites a shared block.
+    Written chunks land byte-identical to what :func:`cache_insert` puts
+    in a dense ring row, because chunk i of the row IS ring slots
+    ``[i*bs, (i+1)*bs)``.
+    """
+    bids = jnp.where(write_mask, table, 0).astype(jnp.int32)
+    bps = table.shape[0]
+
+    def one(pool, row):
+        bs = pool.shape[2]
+        row = jax.lax.squeeze(row, (1,))             # (r, bps*bs, ...)
+        row = row.reshape((row.shape[0], bps, bs) + row.shape[2:])
+        return pool.at[:, bids].set(row.astype(pool.dtype))
+
+    return jax.tree.map(one, pool_cache, row_cache)
+
+
 # ==========================================================================
 # Prefill (fills cache) and decode (one token)
 # ==========================================================================
@@ -823,13 +848,23 @@ def lm_prefill_chunk(params, cfg: LMConfig, cache, tokens: Array,
 
 
 def lm_decode(params, cfg: LMConfig, cache, tokens: Array, pos: Array,
-              token_mask: Optional[Array] = None):
+              token_mask: Optional[Array] = None,
+              block_tables: Optional[Array] = None, block_size: int = 0):
     """One-token decode.  tokens: (b, 1[, codebooks]); pos: (b,) int32.
 
     ``token_mask`` (b,) bool — live rows under continuous batching (free /
     retired slots decode along but must not consume MoE expert capacity).
-    Returns (logits (b, 1, ...), new_cache).
+    With ``block_tables`` (b, bps) int32, ``cache`` is the PAGED pool
+    (attn leaves shaped ``(r, n_blocks, block_size, kvh, ...)``, shared by
+    every row) and attention reads/writes route through the tables
+    (DESIGN.md §13); paged mode requires an attention-only full-ring
+    pattern.  Returns (logits (b, 1, ...), new_cache).
     """
+    if block_tables is not None:
+        bad = [k for k in cfg.pattern if k not in ("attn", "local")]
+        if bad:
+            raise ValueError(f"paged decode requires attn/local-only "
+                             f"patterns, got {bad}")
     x = _embed(params, cfg, tokens)
 
     def unit_body(x, scanned):
@@ -845,9 +880,16 @@ def lm_decode(params, cfg: LMConfig, cache, tokens: Array, pos: Array,
                 if kind == "xattn":
                     cross_kv = (unit_c[name]["k"].astype(x.dtype),
                                 unit_c[name]["v"].astype(x.dtype))
-                o, ck, cv = attn_decode(p["attn"], spec, h, pos,
-                                        unit_c[name]["k"], unit_c[name]["v"],
-                                        cross_kv=cross_kv)
+                if block_tables is not None:
+                    o, ck, cv = attn_decode_paged(
+                        p["attn"], spec, h, pos,
+                        unit_c[name]["k"], unit_c[name]["v"],
+                        block_tables, block_size)
+                else:
+                    o, ck, cv = attn_decode(p["attn"], spec, h, pos,
+                                            unit_c[name]["k"],
+                                            unit_c[name]["v"],
+                                            cross_kv=cross_kv)
                 if kind == "xattn":
                     o = jnp.tanh(p["xattn_gate"]).astype(x.dtype) * o
                 new_c[name] = {"k": ck, "v": cv}
@@ -889,10 +931,16 @@ def lm_decode(params, cfg: LMConfig, cache, tokens: Array, pos: Array,
                 new_c[name] = st
         if cfg.shared_attn_every:
             hs = rms_norm(x, params["shared"]["pre_norm_scale"])
-            o, ck, cv = attn_decode(params["shared"]["attn"],
-                                    cfg.attn_spec("attn"), hs, pos,
-                                    unit_c["__shared__"]["k"],
-                                    unit_c["__shared__"]["v"])
+            if block_tables is not None:
+                o, ck, cv = attn_decode_paged(
+                    params["shared"]["attn"], cfg.attn_spec("attn"), hs,
+                    pos, unit_c["__shared__"]["k"],
+                    unit_c["__shared__"]["v"], block_tables, block_size)
+            else:
+                o, ck, cv = attn_decode(params["shared"]["attn"],
+                                        cfg.attn_spec("attn"), hs, pos,
+                                        unit_c["__shared__"]["k"],
+                                        unit_c["__shared__"]["v"])
             new_c["__shared__"] = {"k": ck, "v": cv}
             x = x + o
             h = rms_norm(x, params["shared"]["ffn_norm_scale"])

@@ -3,7 +3,8 @@
 decode slots + on-device multi-step decode), and the fault-injection
 chaos harness (:mod:`repro.serve.faults`, DESIGN.md §10)."""
 
-from .engine import Engine, ServeConfig, attn_only, prepare_params
+from .block_pool import BlockPool, PoolExhausted
+from .engine import Engine, ServeConfig, attn_only, full_ring, prepare_params
 from .faults import (FaultPlan, chaos_plan, check_drained,
                      check_invariants)
 from .prefix_cache import PrefixCache
@@ -13,7 +14,8 @@ from .slots import (COMPLETED, DECODING, FAILED, PREEMPTED, PREFILLING,
                     Request, SlotPool, request_problem)
 
 __all__ = ["Engine", "ServeConfig", "Scheduler", "SchedulerConfig",
-           "Request", "SlotPool", "PrefixCache", "attn_only",
+           "Request", "SlotPool", "PrefixCache", "BlockPool",
+           "PoolExhausted", "attn_only", "full_ring",
            "prepare_params", "RejectedError", "request_problem",
            "FaultPlan", "chaos_plan", "check_invariants", "check_drained",
            "QUEUED", "PREFILLING", "DECODING", "PREEMPTED", "COMPLETED",

@@ -112,6 +112,23 @@ def attn_only(cfg: LMConfig) -> bool:
             and cfg.ffn != "moe")
 
 
+def full_ring(cfg: LMConfig, cache_len: int) -> Optional[str]:
+    """None when every block's KV ring covers the full ``cache_len`` (so
+    ring slot == absolute position and cached bytes are position-keyed),
+    else a reason string.  This is the shared gate for the prefix cache
+    and for paged KV (DESIGN.md §8/§13): both key cache content by
+    absolute token position, which a wrapped or recurrent ring breaks."""
+    for kind in cfg.pattern:
+        ring = (min(cfg.window or cache_len, cache_len)
+                if kind == "local" else cache_len)
+        if kind not in ("attn", "local"):
+            return (f"block kind {kind!r} has no position-keyed KV ring")
+        if ring != cache_len:
+            return (f"block kind {kind!r} ring {ring} < cache_len "
+                    f"{cache_len} (window wraps)")
+    return None
+
+
 def prepare_params(params, scfg: ServeConfig):
     """Apply the ServeConfig weight representation to a dense fp32 tree:
     identity for fp32, QTensor quantized storage for int formats (unless

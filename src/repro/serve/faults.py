@@ -36,7 +36,7 @@ no private state and cannot itself desynchronize the thing it audits.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -196,6 +196,33 @@ def check_invariants(sch) -> List[str]:
     for k, n in sch.counters.items():
         if n < 0:
             v.append(f"counter {k} negative: {n}")
+
+    # 8. paged block pool (DESIGN.md §13): every live block's refcount
+    #    equals its external holders — block-table entries + preempted
+    #    victims' saved tables + trie-attached block ids — and the pool's
+    #    own free/live partition is consistent (no aliasing, no leaks)
+    bp = getattr(sch, "block_pool", None)
+    if bp is not None:
+        expected: Dict[int, int] = {}
+        for row in sch._tables_host:
+            for bid in row:
+                if bid:
+                    expected[int(bid)] = expected.get(int(bid), 0) + 1
+        for rid, req in sch.requests.items():
+            if not req.blocks:
+                continue
+            if req.state in TERMINAL:
+                v.append(f"terminal rid {rid} ({req.state}) still holds "
+                         f"pool blocks {req.blocks}")
+            for bid in req.blocks:
+                if bid:
+                    expected[int(bid)] = expected.get(int(bid), 0) + 1
+        if sch.prefix is not None:
+            for node in sch.prefix.nodes():
+                bid = getattr(node.payload, "block_id", None)
+                if bid is not None:
+                    expected[int(bid)] = expected.get(int(bid), 0) + 1
+        v += [f"block_pool: {p}" for p in bp.audit(expected)]
     return v
 
 
@@ -215,6 +242,21 @@ def check_drained(sch) -> List[str]:
     if sch.prefix is not None and sch.prefix.total_refcount():
         v.append(f"prefix pins leaked at drain: "
                  f"{sch.prefix.total_refcount()}")
+    bp = getattr(sch, "block_pool", None)
+    if bp is not None:
+        if sch._tables_host.any():
+            v.append("block tables still populated at drain")
+        if getattr(sch, "_paged_reserved", None):
+            v.append(f"paged block reservations leaked at drain: "
+                     f"{sorted(sch._paged_reserved)}")
+        trie_held = 0
+        if sch.prefix is not None:
+            trie_held = sum(
+                1 for node in sch.prefix.nodes()
+                if getattr(node.payload, "block_id", None) is not None)
+        if bp.n_live != trie_held:
+            v.append(f"pool blocks leaked at drain: {bp.n_live} live vs "
+                     f"{trie_held} held by the trie")
     c = sch.counters
     resolved = sum(c[k] for k in _TERMINAL_COUNTERS)
     if c["submitted"] != resolved:

@@ -54,7 +54,8 @@ class _Node:
 class PrefixCache:
     """Chunk-granular radix trie of prefill KV blocks (refcounted, LRU)."""
 
-    def __init__(self, block: int, capacity_blocks: int = 256):
+    def __init__(self, block: int, capacity_blocks: int = 256,
+                 on_evict=None):
         if block < 1:
             raise ValueError(f"block must be >= 1, got {block}")
         if capacity_blocks < 1:
@@ -62,6 +63,10 @@ class PrefixCache:
                 f"capacity_blocks must be >= 1, got {capacity_blocks}")
         self.block = block
         self.capacity_blocks = capacity_blocks
+        # Called with the evicted node's payload at EVERY eviction site
+        # (flush / over-capacity / explicit reclaim) — the paged scheduler
+        # uses it to unpin the trie's block-pool reference (DESIGN.md §13).
+        self.on_evict = on_evict
         self._root = _Node(key=(), payload=None, parent=None)
         self._clock = 0
         self.n_blocks = 0
@@ -143,11 +148,38 @@ class PrefixCache:
             changed = False
             for n in list(self.nodes()):
                 if not n.children and n.refcount == 0:
-                    del n.parent.children[n.key]
-                    self.n_blocks -= 1
-                    self.evictions += 1
+                    self._evict_node(n)
                     changed = True
         return before - self.n_blocks
+
+    def path(self, prompt: Sequence[int], k_chunks: int) -> List[_Node]:
+        """Walk the trie along ``prompt``'s first ``k_chunks`` chunk keys
+        and return the nodes found (a prefix of the requested path; stops
+        at the first absent chunk).  No pinning, no LRU touch — this is
+        the post-``insert`` handle the paged scheduler uses to attach
+        block ids to the nodes it just published."""
+        node, out = self._root, []
+        for i in range(k_chunks):
+            key = tuple(prompt[i * self.block:(i + 1) * self.block])
+            child = node.children.get(key)
+            if child is None:
+                break
+            out.append(child)
+            node = child
+        return out
+
+    def evict_unpinned(self, n: int) -> int:
+        """Evict up to ``n`` least-recently-used unpinned leaves (the
+        paged pool's reclaim path under block pressure).  Returns the
+        number actually evicted (0 = nothing evictable)."""
+        evicted = 0
+        while evicted < n:
+            victim = self._lru_unpinned_leaf()
+            if victim is None:
+                break
+            self._evict_node(victim)
+            evicted += 1
+        return evicted
 
     # ------------------------------------------------------------------
     # invariant audit (serve/faults.py leans on these)
@@ -192,21 +224,30 @@ class PrefixCache:
                 f"{walked} live nodes")
         return problems
 
+    def _lru_unpinned_leaf(self) -> Optional[_Node]:
+        victim = None
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            if not n.children and n.refcount == 0 and (
+                    victim is None or n.last_used < victim.last_used):
+                victim = n
+            stack.extend(n.children.values())
+        return victim
+
+    def _evict_node(self, victim: _Node) -> None:
+        del victim.parent.children[victim.key]
+        self.n_blocks -= 1
+        self.evictions += 1
+        if self.on_evict is not None:
+            self.on_evict(victim.payload)
+
     def _evict_over_capacity(self) -> None:
         while self.n_blocks > self.capacity_blocks:
-            victim = None
-            stack = list(self._root.children.values())
-            while stack:
-                n = stack.pop()
-                if not n.children and n.refcount == 0 and (
-                        victim is None or n.last_used < victim.last_used):
-                    victim = n
-                stack.extend(n.children.values())
+            victim = self._lru_unpinned_leaf()
             if victim is None:
                 return                 # everything live is pinned
-            del victim.parent.children[victim.key]
-            self.n_blocks -= 1
-            self.evictions += 1
+            self._evict_node(victim)
 
     def stats(self) -> dict:
         return {"blocks": self.n_blocks, "hits": self.hits,

@@ -94,11 +94,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.qtensor import qtensor_act_fmt, qtensor_use_kernel
-from repro.models.lm import (LMConfig, cache_insert, init_cache, lm_decode,
-                             lm_prefill, lm_prefill_chunk, quantize_cache)
+from repro.models.lm import (LMConfig, cache_insert, cache_insert_paged,
+                             init_cache, lm_decode, lm_prefill,
+                             lm_prefill_chunk, quantize_cache)
 
+from .block_pool import BlockPool
 from .engine import (Engine, ServeConfig, attn_only, bucket_cache_len,
-                     prepare_params, sample_token)
+                     full_ring, prepare_params, sample_token)
 from .prefix_cache import PrefixCache
 from .slots import (COMPLETED, DECODING, FAILED, PREEMPTED, PREFILLING,
                     QUEUED, REJECTED, TIMED_OUT, RejectedError, Request,
@@ -147,6 +149,31 @@ class SchedulerConfig:
     # shed decision; None = learn an EMA from observed step() progress
     # (no shedding until the first estimate exists)
     est_tok_per_s: Optional[float] = None
+    # ---- paged KV (DESIGN.md §13) ----
+    # device-resident block pool shared by decode slots and the prefix
+    # trie: each slot's KV lives in cache_len//block_size pool blocks
+    # addressed through a per-slot block table, so prefix reuse is a
+    # table append (zero-copy) and preempted DECODING victims keep their
+    # quantized blocks pinned for an exact zero-recompute reattach
+    paged: bool = False
+    block_size: int = 16        # tokens per pool block (ring-axis granule)
+    # pool capacity in blocks; None = n_slots contexts + the prefix-trie
+    # capacity (when enabled) + the reserved null block
+    pool_blocks: Optional[int] = None
+
+
+@dataclasses.dataclass
+class _PagedBlock:
+    """Prefix-trie payload in paged mode: the dense device-resident
+    chunk (``shadow`` — spliced into partial prefill caches with a
+    device DUS, no host round-trip) plus, once a producer attaches one,
+    the pinned pool block holding the chunk's serving-format bytes
+    (``block_id`` — a consumer shares it by appending the id to its
+    block table).  PREFILLING victims publish shadow-only payloads;
+    the first completed consumer upgrades ``block_id`` in place."""
+
+    shadow: Any
+    block_id: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -198,6 +225,13 @@ class Scheduler:
         # spliced from the trie vs recomputed (the preemption cost)
         self.resume_splice_tokens = 0
         self.resume_recompute_tokens = 0
+        # paged-KV structural counters (DESIGN.md §13), defined in every
+        # mode so benches can report them unconditionally: host<->device
+        # transfers spent assembling/publishing prefix splices (the
+        # legacy row-copy path; 0 in paged mode — a gated bench column)
+        # and pool blocks shared via table appends on prefix hits
+        self.splice_host_transfers = 0
+        self.prefix_blocks_shared = 0
         # chunked-prefill / prefix-cache accounting (ISSUE 5): prefill
         # tokens computed per step() (the decode-stall signal — bounded
         # by prefill_chunk when chunking is on, by the longest prompt
@@ -224,28 +258,72 @@ class Scheduler:
                     f"chunk-dependent; xattn has no encoder context on "
                     f"the serving path); {cfg.name} has "
                     f"pattern={cfg.pattern}, ffn={cfg.ffn}")
+        n, k, cl = sched.n_slots, sched.steps_per_tick, sched.cache_len
+        dt = cfg.dtype
+
+        self.paged = sched.paged
+        self.block_pool: Optional[BlockPool] = None
+        if self.paged:
+            bs = sched.block_size
+            if bs < 1:
+                raise ValueError(f"block_size must be >= 1, got {bs}")
+            if cl % bs:
+                raise ValueError(
+                    f"cache_len {cl} must be a multiple of "
+                    f"block_size {bs} (blocks tile the ring axis)")
+            reason = full_ring(cfg, cl)
+            if reason is not None:
+                raise ValueError(
+                    f"paged KV needs every layer's ring to cover "
+                    f"cache_len (slot == position, so one block table "
+                    f"addresses every layer's pool); {reason}")
+            if sched.prefix_cache and bs != sched.prefill_chunk:
+                raise ValueError(
+                    f"paged + prefix_cache requires block_size == "
+                    f"prefill_chunk (a trie node IS one pool block), "
+                    f"got {bs} vs {sched.prefill_chunk}")
+            self._bps = cl // bs          # blocks per slot table
+            nb = sched.pool_blocks if sched.pool_blocks is not None else (
+                n * self._bps
+                + (sched.prefix_cache_blocks if sched.prefix_cache else 0)
+                + 1)
+            if nb < self._bps + 1:
+                raise ValueError(
+                    f"pool_blocks={nb} cannot hold one context "
+                    f"({self._bps} blocks + the null block)")
+            self.block_pool = BlockPool(nb)
+            self._pool_cache = init_cache(cfg, nb, bs, dtype=dt,
+                                          kv_quant=scfg.kv_quant)
+            # host mirror is authoritative; the device copy refreshes
+            # lazily before a tick when any row changed
+            self._tables_host = np.zeros((n, self._bps), np.int32)
+            self._tables = jnp.asarray(self._tables_host)
+            self._tables_dirty = False
+            # rids of chunked paged jobs whose blocks are not allocated
+            # yet (alloc happens at the final-chunk insert) — admission
+            # holds back _bps free blocks for each
+            self._paged_reserved: Set[int] = set()
+
         self.prefix: Optional[PrefixCache] = None
         if sched.prefix_cache:
             if not self._chunked:
                 raise ValueError("prefix_cache requires prefill_chunk "
                                  "(blocks are chunk-granular)")
-            for kind in cfg.pattern:
-                ring = (min(cfg.window or sched.cache_len, sched.cache_len)
-                        if kind == "local" else sched.cache_len)
-                if kind not in ("attn", "local") or ring != sched.cache_len:
-                    raise ValueError(
-                        f"prefix_cache needs every layer's ring to cover "
-                        f"cache_len (slot == position, so prefix blocks "
-                        f"are extractable); {cfg.name} block {kind!r} has "
-                        f"ring {ring} < cache_len {sched.cache_len}")
-            self.prefix = PrefixCache(sched.prefill_chunk,
-                                      sched.prefix_cache_blocks)
+            reason = full_ring(cfg, cl)
+            if reason is not None:
+                raise ValueError(
+                    f"prefix_cache needs every layer's ring to cover "
+                    f"cache_len (slot == position, so prefix blocks "
+                    f"are extractable); {reason}")
+            self.prefix = PrefixCache(
+                sched.prefill_chunk, sched.prefix_cache_blocks,
+                on_evict=self._on_trie_evict if self.paged else None)
         self._prefills: Dict[int, _PrefillJob] = {}
         self._prefill_q: collections.deque = collections.deque()
 
-        n, k, cl = sched.n_slots, sched.steps_per_tick, sched.cache_len
-        dt = cfg.dtype
-        self._cache = init_cache(cfg, n, cl, dtype=dt, kv_quant=scfg.kv_quant)
+        self._cache = (None if self.paged else
+                       init_cache(cfg, n, cl, dtype=dt,
+                                  kv_quant=scfg.kv_quant))
         self._state = {
             "tok": jnp.zeros((n,), jnp.int32),
             "pos": jnp.zeros((n,), jnp.int32),
@@ -332,13 +410,87 @@ class Scheduler:
             return _insert_fn(cache, state, row_cache, slot, tok, plen,
                               mnt, eos, steps)
 
+        def _set_state(state, slot, tok, pos, mnt, eos, steps):
+            return {
+                "tok": state["tok"].at[slot].set(tok),
+                "pos": state["pos"].at[slot].set(pos),
+                "steps": state["steps"].at[slot].set(steps),
+                "mnt": state["mnt"].at[slot].set(mnt),
+                "eos": state["eos"].at[slot].set(eos),
+                "active": state["active"].at[slot].set(True),
+            }
+
+        def _insert_paged_fn(pool, state, row_cache, table, write, slot,
+                             tok, plen, mnt, eos, steps):
+            # scatter the (already serving-format) batch=1 row into this
+            # slot's pool blocks; chunks with write=False came from the
+            # trie and already hold the exact bytes (shared blocks are
+            # redirected to the never-read null block)
+            pool = cache_insert_paged(pool, row_cache, table, write)
+            return pool, _set_state(state, slot, tok, plen - 1, mnt, eos,
+                                    steps)
+
+        def _insert_dense_paged_fn(pool, state, row_cache, table, write,
+                                   slot, tok, plen, mnt, eos, steps):
+            row_cache = quantize_cache(cfg, row_cache, scfg.kv_quant)
+            return _insert_paged_fn(pool, state, row_cache, table, write,
+                                    slot, tok, plen, mnt, eos, steps)
+
+        def _reattach_fn(state, slot, tok, pos, mnt, eos, steps):
+            # preemption resume by table re-attach: the victim's pool
+            # blocks were never freed, so only the scalar decode state
+            # needs restoring — zero recompute, exact for any KV format
+            return _set_state(state, slot, tok, pos, mnt, eos, steps)
+
+        def _tick_paged_fn(p, pool, tables, state, key):
+            mnt, eos = state["mnt"], state["eos"]
+
+            def body(carry, kk):
+                pool, tok, pos, steps, active = carry
+                pos2 = jnp.where(active, pos + 1, pos)
+                with qtensor_use_kernel(scfg.use_kernel), \
+                        qtensor_act_fmt(scfg.act_fmt):
+                    logits, pool = lm_decode(
+                        p, cfg, pool, tok[:, None], pos2,
+                        token_mask=active, block_tables=tables,
+                        block_size=sched.block_size)
+                ok = jnp.isfinite(logits[:, 0]).all(axis=-1)
+                bad = active & ~ok
+                live = active & ok
+                new_tok = jnp.where(live, _sample(logits[:, 0], kk),
+                                    tok).astype(jnp.int32)
+                steps2 = jnp.where(live, steps + 1, steps)
+                emitted = jnp.where(live, new_tok, -1)
+                done = (steps2 >= mnt) | (new_tok == eos) | bad
+                return ((pool, new_tok, pos2, steps2, active & ~done),
+                        (emitted, bad))
+
+            keys = jax.random.split(key, k)
+            carry = (pool, state["tok"], state["pos"], state["steps"],
+                     state["active"])
+            (pool, tok, pos, steps, active), (em, bad) = jax.lax.scan(
+                body, carry, keys)
+            new_state = {"tok": tok, "pos": pos, "steps": steps,
+                         "mnt": mnt, "eos": eos, "active": active}
+            return pool, new_state, em, bad
+
         self._prefill = jax.jit(_prefill_fn)
-        self._insert = jax.jit(_insert_fn, donate_argnums=(0, 1))
-        self._tick = jax.jit(_tick_fn, donate_argnums=(1, 2))
+        if self.paged:
+            self._insert_paged = jax.jit(_insert_paged_fn,
+                                         donate_argnums=(0, 1))
+            self._reattach = jax.jit(_reattach_fn, donate_argnums=(0,))
+            self._tick = jax.jit(_tick_paged_fn, donate_argnums=(1, 3))
+        else:
+            self._insert = jax.jit(_insert_fn, donate_argnums=(0, 1))
+            self._tick = jax.jit(_tick_fn, donate_argnums=(1, 2))
         if self._chunked:
             self._chunk = jax.jit(_chunk_fn, donate_argnums=(1,))
-            self._insert_dense = jax.jit(_insert_dense_fn,
-                                         donate_argnums=(0, 1))
+            if self.paged:
+                self._insert_dense_paged = jax.jit(_insert_dense_paged_fn,
+                                                   donate_argnums=(0, 1))
+            else:
+                self._insert_dense = jax.jit(_insert_dense_fn,
+                                             donate_argnums=(0, 1))
             # fresh partial caches: device-side zeros (no host upload on
             # the common prefix-miss admission)
             self._fresh_row = jax.jit(
@@ -552,6 +704,8 @@ class Scheduler:
                     if self._past_deadline(r, now)]:
             req = self.requests[rid]
             self.queue.remove(rid)
+            if self.paged and req.blocks is not None:
+                self._free_req_blocks(req)   # preempted victim's table
             req.transition(TIMED_OUT, "deadline_queued")
             self.counters["timed_out"] += 1
             expired.append(req)
@@ -563,6 +717,7 @@ class Scheduler:
                 self._cancel_prefill_job(rid)     # releases trie pins
             elif req.state == DECODING:
                 self._deactivate_slot(slot)       # done-mask out of tick
+                self._release_slot_blocks(slot)
             self.pool.release(slot)
             req.slot = None
             req.transition(TIMED_OUT, "deadline_" + (
@@ -588,6 +743,8 @@ class Scheduler:
         job = self._prefills.pop(rid, None)
         if job is None:
             return
+        if self.paged:
+            self._paged_reserved.discard(rid)
         self._prefill_q.remove(rid)
         if self.prefix is not None and job.pinned:
             self.prefix.release(job.pinned)
@@ -641,11 +798,24 @@ class Scheduler:
             job = self._prefills.get(req.rid)
             if job is not None and self.prefix is not None \
                     and job.cache is not None:
-                self._publish_blocks(job.seq, job.cache,
-                                     job.next // self.sched.prefill_chunk)
+                k_full = job.next // self.sched.prefill_chunk
+                if self.paged:
+                    # shadow-only publish (no blocks allocated yet)
+                    self._publish_blocks_paged(job.seq, job.cache, k_full)
+                else:
+                    self._publish_blocks(job.seq, job.cache, k_full)
             self._cancel_prefill_job(req.rid)
         else:                           # DECODING
-            if self.prefix is not None and not self.scfg.kv_quant:
+            if self.paged:
+                # the victim KEEPS its blocks (table row moves to the
+                # request, refcounts unchanged): resume is an exact
+                # zero-recompute reattach even for quantized KV — the
+                # publish path below could not splice those (PR 7 gap)
+                row = self._tables_host[slot]
+                req.blocks = [int(b) for b in row]
+                row[:] = 0
+                self._tables_dirty = True
+            elif self.prefix is not None and not self.scfg.kv_quant:
                 self._publish_pool_row(req, slot)
             self._deactivate_slot(slot)
         self.pool.release(slot)
@@ -671,13 +841,155 @@ class Scheduler:
         self._publish_blocks(seq, row, k_full)
 
     # ------------------------------------------------------------------
+    # paged block pool (DESIGN.md §13)
+    # ------------------------------------------------------------------
+
+    def _on_trie_evict(self, payload) -> None:
+        """Trie eviction unpins: drop the trie's refcount on the shared
+        pool block (shadow-only payloads never took one)."""
+        if isinstance(payload, _PagedBlock) and payload.block_id is not None:
+            self.block_pool.unref(payload.block_id)
+
+    def _release_slot_blocks(self, slot: int) -> None:
+        """Drop this slot's table references (request retired); blocks
+        the trie still pins stay live for future prefix hits."""
+        if not self.paged:
+            return
+        row = self._tables_host[slot]
+        for bid in row:
+            if bid:
+                self.block_pool.unref(int(bid))
+        row[:] = 0
+        self._tables_dirty = True
+
+    def _free_req_blocks(self, req: Request) -> None:
+        """Drop a queued PREEMPTED victim's saved table row (deadline
+        expiry, or reclaimed under pool pressure — it falls back to the
+        recompute-resume path, which stays exact)."""
+        if req.blocks:
+            for bid in req.blocks:
+                if bid:
+                    self.block_pool.unref(int(bid))
+        req.blocks = None
+
+    def _reclaim_blocks(self, needed: int) -> None:
+        """Free pool blocks until ``needed`` are available: first evict
+        unpinned trie leaves (pure cache — cheapest to drop), then drop
+        queued preemption victims' saved tables (costs them a recompute
+        resume, never correctness)."""
+        while self.block_pool.n_free < needed and self.prefix is not None:
+            if not self.prefix.evict_unpinned(1):
+                break
+        if self.block_pool.n_free >= needed:
+            return
+        for rid in list(self.queue):
+            if self.block_pool.n_free >= needed:
+                break
+            req = self.requests[rid]
+            if req.blocks:
+                self._free_req_blocks(req)
+
+    def _paged_room_for(self, req: Request) -> bool:
+        """Admission gate: enough free blocks for this request's table
+        (reattaches bring their own) on top of every outstanding
+        PREFILLING reservation, reclaiming if short."""
+        if req.blocks is not None:
+            return True                # reattach brings its own blocks
+        needed = self._bps * (1 + len(self._paged_reserved))
+        if self.block_pool.n_free >= needed:
+            return True
+        self._reclaim_blocks(needed)
+        return self.block_pool.n_free >= needed
+
+    def _pool_starved(self) -> bool:
+        """True when no future step can free a block without outside
+        help: nothing running, nothing reserved, no victim tables, and
+        the trie already drained of unpinned leaves — admission must
+        terminally reject instead of backpressuring forever."""
+        if self._paged_reserved or self.pool.occupied():
+            return False
+        if any(self.requests[rid].blocks for rid in self.queue):
+            return False
+        return self.block_pool.n_free < self._bps
+
+    def _paged_insert_row(self, slot: int, row_cache, tok, plen, mnt,
+                          eos, steps, dense: bool = False) -> None:
+        """Allocate a full table for ``slot`` and scatter the batch=1
+        row into its blocks (monolithic admission: nothing shared)."""
+        bids = np.asarray(self.block_pool.alloc(self._bps), np.int32)
+        self._tables_host[slot] = bids
+        self._tables_dirty = True
+        write = jnp.ones((self._bps,), bool)
+        fn = self._insert_dense_paged if dense else self._insert_paged
+        self._pool_cache, self._state = fn(
+            self._pool_cache, self._state, row_cache, jnp.asarray(bids),
+            write, slot, tok, plen, mnt, eos, steps)
+
+    def _reattach_blocks(self, req: Request) -> None:
+        """Zero-recompute preemption resume: the victim kept its blocks
+        pinned across eviction, so resuming is a table re-attach plus a
+        scalar state restore — exact for ANY KV format, including the
+        quantized rows the legacy publish path could not splice (the
+        PR 7 gap)."""
+        seq = req.resume_tokens()
+        req.slot = self.pool.acquire(req.rid)
+        req.transition(DECODING)
+        self._tables_host[req.slot] = np.asarray(req.blocks, np.int32)
+        self._tables_dirty = True
+        req.blocks = None
+        eos = -1 if req.eos_id is None else req.eos_id
+        self._state = self._reattach(
+            self._state, req.slot, req.out[-1], len(seq) - 1,
+            req.max_new_tokens, eos, len(req.out))
+        # the whole resume context arrives without recompute
+        req.resume_splice_tokens += len(seq)
+        req.resume_total_tokens += len(seq)
+        self.resume_splice_tokens += len(seq)
+        self.prefill_tokens_skipped += len(seq)
+
+    def _spliced_row_cache_paged(self, pinned):
+        """Paged prefix splice: device-resident shadow chunks are DUSed
+        into a fresh device row — no host assembly, no upload
+        (``splice_host_transfers`` stays 0)."""
+        row = self._fresh_row()
+        c = self.sched.prefill_chunk
+        for i, node in enumerate(pinned):
+            row = jax.tree.map(
+                lambda dst, src, i=i: jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), i * c, axis=2),
+                row, node.payload.shadow)
+        return row
+
+    def _publish_blocks_paged(self, seq: Sequence[int], cache,
+                              k_full: int, bids=None) -> None:
+        """Paged trie publish: payloads are device chunk slices (shadow)
+        — no host transfer.  When the producer's own table ``bids`` are
+        known (final-chunk insert), upgrade shadow-only payloads along
+        the path with a pinned block id so later consumers share the
+        pool bytes zero-copy."""
+        if k_full <= 0 or self.prefix is None:
+            return
+        c = self.sched.prefill_chunk
+        payloads = [_PagedBlock(shadow=jax.tree.map(
+            lambda a, i=i: jax.lax.slice_in_dim(a, i * c, (i + 1) * c,
+                                                axis=2), cache))
+            for i in range(k_full)]
+        self.prefix.insert(list(seq), payloads)
+        if bids is None:
+            return
+        for i, node in enumerate(self.prefix.path(list(seq), k_full)):
+            pb = node.payload
+            if isinstance(pb, _PagedBlock) and pb.block_id is None:
+                pb.block_id = int(bids[i])
+                self.block_pool.ref(int(bids[i]))
+
+    # ------------------------------------------------------------------
     # admission (per-slot prefill-insert)
     # ------------------------------------------------------------------
 
     def _admit(self, now: Optional[float] = None) -> List[Request]:
         if self._chunked:
-            self._admit_chunked(now)
-            return []
+            return self._admit_chunked(now)
         completed = []
         while self.queue:
             rid = self._next_admittable(now)
@@ -686,6 +998,14 @@ class Scheduler:
             req = self.requests[rid]
             if not self.pool.n_free and not self._preempt_for(req):
                 break
+            if self.paged and not self._paged_room_for(req):
+                if self._pool_starved():
+                    self.queue.remove(rid)
+                    req.transition(REJECTED, "pool_exhausted")
+                    self.counters["rejected"] += 1
+                    completed.append(req)
+                    continue
+                break                  # backpressure: a slot will free
             self.queue.remove(rid)
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
@@ -694,6 +1014,9 @@ class Scheduler:
             resumed = bool(req.out)
             if resumed:
                 self.counters["resumed"] += 1
+            if self.paged and req.blocks is not None:
+                self._reattach_blocks(req)     # zero-recompute resume
+                continue
             seq = req.resume_tokens()
             self._stall_tokens += len(seq)
             self.prefill_tokens_computed += len(seq)
@@ -717,10 +1040,15 @@ class Scheduler:
                 # start at len(out) so the budget rule lines up
                 req.transition(DECODING)
                 req.slot = self.pool.acquire(rid)
-                self._cache, self._state = self._insert(
-                    self._cache, self._state, row_cache, req.slot,
-                    req.out[-1], len(seq), req.max_new_tokens, eos,
-                    len(req.out))
+                if self.paged:
+                    self._paged_insert_row(
+                        req.slot, row_cache, req.out[-1], len(seq),
+                        req.max_new_tokens, eos, len(req.out))
+                else:
+                    self._cache, self._state = self._insert(
+                        self._cache, self._state, row_cache, req.slot,
+                        req.out[-1], len(seq), req.max_new_tokens, eos,
+                        len(req.out))
                 continue
             first = int(tok[0])
             req.out.append(first)
@@ -732,16 +1060,20 @@ class Scheduler:
                 continue
             req.slot = self.pool.acquire(rid)
             req.transition(DECODING)
-            self._cache, self._state = self._insert(
-                self._cache, self._state, row_cache, req.slot, tok[0],
-                len(seq), req.max_new_tokens, eos, 1)
+            if self.paged:
+                self._paged_insert_row(req.slot, row_cache, tok[0],
+                                       len(seq), req.max_new_tokens, eos, 1)
+            else:
+                self._cache, self._state = self._insert(
+                    self._cache, self._state, row_cache, req.slot, tok[0],
+                    len(seq), req.max_new_tokens, eos, 1)
         return completed
 
     # ------------------------------------------------------------------
     # chunked admission (one prefill chunk per tick; DESIGN.md §8)
     # ------------------------------------------------------------------
 
-    def _admit_chunked(self, now: Optional[float] = None) -> None:
+    def _admit_chunked(self, now: Optional[float] = None) -> List[Request]:
         """Reserve a slot per queued request (state PREFILLING) and queue
         its prefill job; no compute happens here — chunks advance one per
         tick in :meth:`_prefill_tick`, so a long prompt can never stall a
@@ -751,6 +1083,7 @@ class Scheduler:
         prompt admitted together still hits the chunks the first sharer
         publishes (admission-time lookup would miss every in-flight
         sharer — the dominant pattern the trie exists for)."""
+        rejected = []
         while self.queue:
             rid = self._next_admittable(now)
             if rid is None:
@@ -758,6 +1091,14 @@ class Scheduler:
             req = self.requests[rid]
             if not self.pool.n_free and not self._preempt_for(req):
                 break
+            if self.paged and not self._paged_room_for(req):
+                if self._pool_starved():
+                    self.queue.remove(rid)
+                    req.transition(REJECTED, "pool_exhausted")
+                    self.counters["rejected"] += 1
+                    rejected.append(req)
+                    continue
+                break                  # backpressure: a slot will free
             self.queue.remove(rid)
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
@@ -765,12 +1106,20 @@ class Scheduler:
             self.counters["admitted"] += 1
             if req.preemptions:
                 self.counters["resumed"] += 1
+            if self.paged and req.blocks is not None:
+                self._reattach_blocks(req)     # zero-recompute resume
+                continue
             req.slot = self.pool.acquire(rid)
             req.transition(PREFILLING)
+            if self.paged:
+                # blocks allocate at the final-chunk insert; hold them
+                # back from later admissions until then
+                self._paged_reserved.add(rid)
             self._prefills[rid] = _PrefillJob(rid=rid,
                                               seq=req.resume_tokens(),
                                               cache=None, next=0, pinned=[])
             self._prefill_q.append(rid)
+        return rejected
 
     def _start_prefill(self, req: Request, job: _PrefillJob) -> None:
         """First chunk of a job: prefix lookup + partial-cache creation.
@@ -788,13 +1137,17 @@ class Scheduler:
             self.resume_recompute_tokens += len(job.seq) - matched
         job.pinned = pinned
         job.next = matched
-        job.cache = (self._spliced_row_cache(pinned) if pinned
-                     else self._fresh_row())
+        if pinned:
+            job.cache = (self._spliced_row_cache_paged(pinned) if self.paged
+                         else self._spliced_row_cache(pinned))
+        else:
+            job.cache = self._fresh_row()
 
     def _spliced_row_cache(self, pinned):
         """Fresh dense batch=1 partial cache with prefix-trie blocks
         copied in at their absolute positions (slot == position: the
         prefix gate requires every ring to cover cache_len)."""
+        self.splice_host_transfers += 1        # host assembly + upload
         host = jax.tree.map(np.copy, self._row_template)
         c = self.sched.prefill_chunk
         for i, node in enumerate(pinned):
@@ -838,6 +1191,8 @@ class Scheduler:
         # final chunk: the request leaves PREFILLING
         self._prefill_q.popleft()
         del self._prefills[rid]
+        if self.paged:
+            return self._finish_prefill_paged(req, job, n, tok)
         if self.prefix is not None:
             self._publish_blocks(job.seq, job.cache, n // cw)
             self.prefix.release(job.pinned)
@@ -865,6 +1220,64 @@ class Scheduler:
             req.max_new_tokens, eos, 1)
         return []
 
+    def _finish_prefill_paged(self, req: Request,
+                              job: _PrefillJob, n: int, tok
+                              ) -> List[Request]:
+        """Paged final chunk: build the slot's block table (matched trie
+        chunks with an attached block id are shared by table append —
+        zero copies; the rest allocate from the pool), scatter the
+        quantized row into the owned blocks, publish shadows + upgrade
+        the path with this producer's block ids."""
+        cw = self.sched.prefill_chunk
+        k_full = n // cw
+        eos = -1 if req.eos_id is None else req.eos_id
+        if not req.out:
+            first = int(tok[0])
+            req.out.append(first)
+            self._emitted_tokens += 1
+            if req.finished_by(first, 1):
+                # budget of 1 / instant EOS: no decode slot, no blocks —
+                # publish shadow-only chunks so later sharers still hit
+                if self.prefix is not None:
+                    self._publish_blocks_paged(job.seq, job.cache, k_full)
+                    self.prefix.release(job.pinned)
+                self._paged_reserved.discard(req.rid)
+                req.transition(COMPLETED)
+                self.counters["completed"] += 1
+                self.pool.release(req.slot)
+                req.slot = None
+                return [req]
+        bids = np.zeros((self._bps,), np.int32)
+        write = np.ones((self._bps,), bool)
+        shared = 0
+        for i, node in enumerate(job.pinned):
+            pb = node.payload
+            if isinstance(pb, _PagedBlock) and pb.block_id is not None:
+                # chunk i's bytes are a pure function of seq[:(i+1)*cw]
+                # (deterministic chunked prefill), so the producer's
+                # quantized block IS what this insert would write
+                bids[i] = pb.block_id
+                self.block_pool.ref(pb.block_id)
+                write[i] = False
+                shared += 1
+        own_idx = [i for i in range(self._bps) if write[i]]
+        own = self.block_pool.alloc(len(own_idx))
+        for i, b in zip(own_idx, own):
+            bids[i] = b
+        self._paged_reserved.discard(req.rid)
+        self.prefix_blocks_shared += shared
+        if self.prefix is not None:
+            self._publish_blocks_paged(job.seq, job.cache, k_full, bids)
+            self.prefix.release(job.pinned)
+        req.transition(DECODING)
+        self._tables_host[req.slot] = bids
+        self._tables_dirty = True
+        self._pool_cache, self._state = self._insert_dense_paged(
+            self._pool_cache, self._state, job.cache, jnp.asarray(bids),
+            jnp.asarray(write), req.slot, req.out[-1], n,
+            req.max_new_tokens, eos, len(req.out))
+        return []
+
     def _publish_blocks(self, seq: Sequence[int], cache,
                         k_full: int) -> None:
         """Insert ``seq``'s first ``k_full`` whole chunks into the trie
@@ -875,6 +1288,7 @@ class Scheduler:
         interchangeable — the trie keeps whichever arrived first."""
         if k_full <= 0 or self.prefix is None:
             return
+        self.splice_host_transfers += 1        # device -> host download
         c = self.sched.prefill_chunk
         # slice on device, transfer only the full chunks — not the whole
         # cache_len row (prefix gate: slot == position)
@@ -897,8 +1311,16 @@ class Scheduler:
             return []
         self.n_ticks += 1
         key = jax.random.fold_in(self._tick_key, self.n_ticks)
-        self._cache, self._state, em, bad = self._tick(
-            self.params, self._cache, self._state, key)
+        if self.paged:
+            if self._tables_dirty:
+                self._tables = jnp.asarray(self._tables_host)
+                self._tables_dirty = False
+            self._pool_cache, self._state, em, bad = self._tick(
+                self.params, self._pool_cache, self._tables, self._state,
+                key)
+        else:
+            self._cache, self._state, em, bad = self._tick(
+                self.params, self._cache, self._state, key)
         em, bad = jax.device_get((em, bad))  # ONE sync per tick: (k, n)
         em, bad = np.asarray(em), np.asarray(bad)
         injected = self._inject_bad_slots
@@ -922,6 +1344,7 @@ class Scheduler:
                 req.transition(COMPLETED)
                 self.counters["completed"] += 1
                 self.pool.release(slot)
+                self._release_slot_blocks(slot)
                 req.slot = None
                 terminal.append(req)
         return terminal
@@ -937,6 +1360,7 @@ class Scheduler:
         if the fallback faults too (or this is the second quarantine)."""
         self._deactivate_slot(slot)
         self.pool.release(slot)
+        self._release_slot_blocks(slot)
         req.slot = None
         self.counters["nan_events"] += 1
         if req.nan_retries >= 1:

@@ -130,6 +130,11 @@ class Request:
     # never prefilled at all
     prefill_chunks: int = 0         # chunk launches spent on this prompt
     prefix_hit_tokens: int = 0
+    # paged-KV bookkeeping (DESIGN.md §13): a preempted DECODING victim
+    # keeps its quantized KV blocks pinned — ``blocks`` is the saved
+    # block-table row (ownership moves here from the slot table) and
+    # resume is a table re-attach, exact for ANY KV format
+    blocks: Optional[List[int]] = None
     # fault-tolerance accounting (DESIGN.md §10)
     preemptions: int = 0            # times evicted back to the queue
     nan_retries: int = 0            # non-finite quarantines -> fallback

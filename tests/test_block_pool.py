@@ -1,0 +1,120 @@
+"""Block-allocator unit tests (ISSUE 10, satellite): typed exhaustion,
+free-list reuse that never aliases a live block, refcount balance under
+a seeded alloc/ref/unref storm, and audit negative cases."""
+
+import numpy as np
+import pytest
+
+from repro.serve import BlockPool, PoolExhausted
+from repro.serve.block_pool import NULL_BLOCK
+
+
+def test_null_block_reserved():
+    p = BlockPool(8)
+    assert p.capacity == 7
+    assert NULL_BLOCK not in p.free_blocks()
+    with pytest.raises(ValueError):
+        p.ref(NULL_BLOCK)
+    with pytest.raises(ValueError):
+        p.unref(NULL_BLOCK)
+    with pytest.raises(ValueError):
+        BlockPool(1)
+
+
+def test_alloc_is_deterministic_lowest_first():
+    p = BlockPool(8)
+    assert p.alloc(3) == [1, 2, 3]
+    p.unref(2)
+    p.unref(1)
+    # freed ids come back sorted, so replays allocate identically
+    assert p.alloc(2) == [1, 2]
+
+
+def test_exhaustion_typed_and_non_destructive():
+    p = BlockPool(5)
+    got = p.alloc(3)
+    with pytest.raises(PoolExhausted) as ei:
+        p.alloc(2)
+    assert ei.value.requested == 2 and ei.value.free == 1
+    # the failed alloc must not have consumed anything
+    assert p.n_free == 1 and p.live_blocks() == got
+    assert p.audit() == []
+
+
+def test_reuse_never_aliases_live_block():
+    p = BlockPool(6)
+    a = p.alloc(3)
+    p.unref(a[1])                       # free the middle block
+    b = p.alloc(3)                      # drains the pool
+    live = set(a) - {a[1]}
+    assert not (set(b) & live), "reallocated a block that is still live"
+    assert p.n_free == 0
+    with pytest.raises(PoolExhausted):
+        p.alloc(1)
+
+
+def test_refcount_sharing_and_release():
+    p = BlockPool(4)
+    (bid,) = p.alloc(1)
+    p.ref(bid)                          # second holder (trie pin)
+    p.unref(bid)
+    assert p.refcount(bid) == 1         # still held by the first owner
+    p.unref(bid)
+    assert p.refcount(bid) == 0 and bid in p.free_blocks()
+    with pytest.raises(ValueError):
+        p.unref(bid)                    # double-free is typed
+    with pytest.raises(ValueError):
+        p.ref(bid)                      # can't share a freed block
+
+
+def test_seeded_storm_refcount_balance():
+    """Random alloc/ref/unref storm (an eviction-storm stand-in): the
+    pool must match a shadow ledger exactly at every step and audit
+    clean against it."""
+    rng = np.random.default_rng(0)
+    p = BlockPool(16)
+    ledger = {}                         # bid -> refcount we believe
+    for _ in range(2000):
+        op = rng.integers(0, 3)
+        if op == 0:
+            n = int(rng.integers(1, 4))
+            try:
+                for bid in p.alloc(n):
+                    ledger[bid] = 1
+            except PoolExhausted:
+                assert p.n_free < n
+        elif op == 1 and ledger:
+            bid = int(rng.choice(sorted(ledger)))
+            p.ref(bid)
+            ledger[bid] += 1
+        elif op == 2 and ledger:
+            bid = int(rng.choice(sorted(ledger)))
+            p.unref(bid)
+            ledger[bid] -= 1
+            if ledger[bid] == 0:
+                del ledger[bid]
+        assert p.audit(ledger) == []
+        assert p.n_live == len(ledger)
+        assert p.n_free == p.capacity - len(ledger)
+    # drain everything: zero leaks
+    for bid, c in list(ledger.items()):
+        for _ in range(c):
+            p.unref(bid)
+    assert p.n_live == 0 and p.n_free == p.capacity
+    assert p.audit({}) == []
+
+
+def test_audit_detects_leak_and_mismatch():
+    p = BlockPool(6)
+    a, b = p.alloc(2)
+    p.ref(a)
+    # correct ledger: clean
+    assert p.audit({a: 2, b: 1}) == []
+    # missing holder for b -> leak
+    assert any("leaked" in v for v in p.audit({a: 2}))
+    # wrong count for a -> mismatch
+    assert any("refcount" in v for v in p.audit({a: 1, b: 1}))
+    # external reference to a non-live block
+    assert any("not live" in v for v in p.audit({a: 2, b: 1, 5: 1}))
+    # external reference to the null block is itself a violation
+    assert any("null block" in v for v in p.audit({a: 2, b: 1, 0: 1}))
